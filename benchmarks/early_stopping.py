@@ -1,0 +1,76 @@
+"""Paper Fig. 4: tuning with vs without median-rule early stopping.
+
+Claim: "AMT with early stopping not only explores the same number of HP
+configurations in less time, but yields hyperparameter configurations with
+similar performance" — measured over replicated tuning jobs on the
+linear-learner-style curve objective, in *virtual* wall-clock via the
+discrete-event backend (includes the paper's cluster-startup overhead).
+
+Also benchmarks the beyond-paper ASHA rule head-to-head.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.objectives import linear_learner_curves, linear_learner_space
+from repro.core import ASHARule, MedianRule, RandomSuggester, Tuner, TuningJobConfig
+from repro.core.scheduler import SimBackend
+
+
+def _job(rule_factory, seed: int, max_trials: int = 24, parallel: int = 4):
+    space = linear_learner_space()
+
+    def objective(cfg):
+        return linear_learner_curves(cfg, n_iters=30, seed=seed)
+
+    tuner = Tuner(
+        space,
+        objective,
+        RandomSuggester(space, seed=seed),
+        SimBackend(startup_cost=30.0),  # §3.3 cluster-provisioning overhead
+        TuningJobConfig(max_trials=max_trials, max_parallel=parallel),
+        stopping_rule=rule_factory() if rule_factory else None,
+    )
+    return tuner.run()
+
+
+def run(num_seeds: int = 6) -> List[Tuple[str, float, str]]:
+    t0 = time.perf_counter()
+    res = {"none": [], "median": [], "asha": []}
+    for s in range(num_seeds):
+        res["none"].append(_job(None, s))
+        res["median"].append(_job(MedianRule, s))
+        res["asha"].append(_job(ASHARule, s))
+    elapsed = time.perf_counter() - t0
+    us = elapsed / (num_seeds * 3) * 1e6
+
+    def agg(key):
+        rs = res[key]
+        return (
+            float(np.median([r.best_objective for r in rs])),
+            float(np.mean([r.total_time for r in rs])),
+            float(np.mean([r.total_iterations for r in rs])),
+            float(np.mean([r.num_early_stopped for r in rs])),
+        )
+
+    rows = []
+    base_obj, base_time, base_iters, _ = agg("none")
+    for key in ("none", "median", "asha"):
+        obj, vt, iters, stopped = agg(key)
+        rows.append((f"fig4_{key}_best_objective", us, f"{obj:.5f}"))
+        rows.append((f"fig4_{key}_virtual_time_s", us, f"{vt:.0f}"))
+        rows.append((f"fig4_{key}_iterations", us, f"{iters:.0f}"))
+        if key != "none":
+            rows.append((
+                f"fig4_{key}_time_saving_pct", us,
+                f"{100 * (1 - vt / base_time):.1f}",
+            ))
+            rows.append((
+                f"fig4_{key}_objective_regret", us,
+                f"{obj - base_obj:+.5f}",
+            ))
+    return rows

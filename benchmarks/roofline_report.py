@@ -1,0 +1,79 @@
+"""Aggregate the dry-run JSON records into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(results_dir: str = RESULTS_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | useful | roofline | mem/dev GB | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "SKIP":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"SKIP: {r['reason'][:60]} | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "OK":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['bottleneck']} "
+            f"| {t.get('useful_ratio', 0):.2f} "
+            f"| {t.get('roofline_fraction', 0):.4f} "
+            f"| {r.get('device_bytes_estimate', 0) / 1e9:.2f} "
+            f"| {r.get('fits_hbm_16g')} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    recs = load_records()
+    ok = [r for r in recs if r["status"] == "OK"]
+    skip = [r for r in recs if r["status"] == "SKIP"]
+    fail = [r for r in recs if r["status"] not in ("OK", "SKIP")]
+    rows = [
+        ("dryrun_cells_ok", 0.0, str(len(ok))),
+        ("dryrun_cells_skip_documented", 0.0, str(len(skip))),
+        ("dryrun_cells_fail", 0.0, str(len(fail))),
+    ]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"].get("roofline_fraction", 0))
+        best = max(ok, key=lambda r: r["roofline"].get("roofline_fraction", 0))
+        rows.append((
+            "roofline_best_cell", 0.0,
+            f"{best['arch']}×{best['shape']}({best['mesh']})="
+            f"{best['roofline']['roofline_fraction']:.4f}",
+        ))
+        rows.append((
+            "roofline_worst_cell", 0.0,
+            f"{worst['arch']}×{worst['shape']}({worst['mesh']})="
+            f"{worst['roofline']['roofline_fraction']:.4f}",
+        ))
+        fits = sum(1 for r in ok if r.get("fits_hbm_16g"))
+        rows.append(("cells_fitting_16g_hbm", 0.0, f"{fits}/{len(ok)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_records()))

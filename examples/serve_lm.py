@@ -1,0 +1,63 @@
+"""Serve a small LM with batched requests: prefill + KV-cache decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-27b] [--tokens 24]
+
+Uses the reduced same-family config on CPU (the full config is exercised via
+the dry-run). Demonstrates the serving substrate the decode_32k / long_500k
+dry-run cells lower: prefill builds the per-block caches (full attention,
+ring-buffer SWA, Mamba/RG-LRU state) and greedy decode streams tokens.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, tiny
+from repro.models import build_model
+from repro.training.serve_step import greedy_generate
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = tiny(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    if cfg.embed_inputs:
+        prompt = jnp.asarray(
+            rng.standard_normal((args.batch, args.prompt_len, cfg.d_model)),
+            jnp.float32,
+        )
+    else:
+        prompt = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+            jnp.int32,
+        )
+
+    cache_len = args.prompt_len + args.tokens + 8
+    t0 = time.perf_counter()
+    out = greedy_generate(model, params, prompt, args.tokens, cache_len)
+    dt = time.perf_counter() - t0
+
+    print(f"arch            : {args.arch} (reduced config)")
+    print(f"layer pattern   : {cfg.block_pattern} × {cfg.num_periods} "
+          f"+ {cfg.num_leftover} leftover")
+    print(f"generated       : {out.shape} tokens in {dt:.2f}s "
+          f"({args.batch * args.tokens / dt:.1f} tok/s incl. compile)")
+    print(f"sample tokens   : {np.asarray(out[0, :12]).tolist()}")
+    assert out.shape == (args.batch, args.tokens)
+    assert bool(jnp.all(out >= 0)) and bool(jnp.all(out < cfg.vocab_size))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""End-to-end driver: AMT tunes REAL JAX LM training jobs (paper §6 use case).
+
+    PYTHONPATH=src python examples/tune_lm.py [--arch qwen2.5-3b] [--trials 8]
+        [--steps 60] [--parallel 2] [--baseline-random]
+
+Every trial is an actual training run of the selected architecture (reduced
+same-family config on CPU; pass ``--full-config`` on a real fleet) on the
+synthetic LM dataset, driven through the live ThreadBackend: per-eval-window
+validation losses stream back to the tuner, the median rule stops unpromising
+trials cooperatively, and the BO engine proposes the next configuration.
+
+The search space is the optimizer/regularization space of repro.training:
+learning rate, warmup fraction, weight decay, β₂, clip norm (+ router aux-loss
+weight for MoE archs).
+"""
+
+import argparse
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, tiny
+from repro.core import (
+    BOConfig,
+    BOSuggester,
+    Continuous,
+    MedianRule,
+    RandomSuggester,
+    SearchSpace,
+    Tuner,
+    TuningJobConfig,
+)
+from repro.core.scheduler import ThreadBackend
+from repro.data import SyntheticLMDataset
+from repro.models import build_model
+from repro.training import AdamWConfig, make_train_step
+from repro.training.train_step import init_train_state
+
+
+def make_search_space(cfg) -> SearchSpace:
+    hps = [
+        Continuous("learning_rate", 1e-4, 3e-2, scaling="log"),
+        Continuous("weight_decay", 1e-4, 0.3, scaling="log"),
+        Continuous("warmup_frac", 0.02, 0.4),
+        Continuous("beta2", 0.9, 0.999, scaling="reverse_log"),
+        Continuous("clip_norm", 0.1, 10.0, scaling="log"),
+    ]
+    return SearchSpace(hps)
+
+
+def make_objective(arch: str, steps: int, eval_every: int, use_full: bool):
+    base_cfg = get_config(arch)
+    cfg = base_cfg if use_full else tiny(base_cfg)
+    model = build_model(cfg)
+    ds = SyntheticLMDataset(
+        cfg.vocab_size, seq_len=64, global_batch=8, seed=0,
+        embed_dim=cfg.d_model if cfg.embed_inputs else None,
+    )
+    eval_batch = jax.tree.map(jnp.asarray, ds.batch(10_000))
+
+    def objective(hp, report):
+        opt_cfg = AdamWConfig(
+            learning_rate=hp["learning_rate"],
+            weight_decay=hp["weight_decay"],
+            warmup_steps=max(1, int(hp["warmup_frac"] * steps)),
+            total_steps=steps,
+            beta2=hp["beta2"],
+            clip_norm=hp["clip_norm"],
+        )
+        state = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+        step = jax.jit(make_train_step(model, opt_cfg), donate_argnums=0)
+        eval_loss = math.inf
+        for i in range(steps):
+            state, metrics = step(state, jax.tree.map(jnp.asarray, ds.batch(i)))
+            if not math.isfinite(float(metrics["loss"])):
+                raise FloatingPointError(f"diverged at step {i}")
+            if (i + 1) % eval_every == 0:
+                eval_loss = float(model.loss_fn(state.params, eval_batch)[0])
+                if not report(eval_loss):
+                    return eval_loss  # cooperative early stop (median rule)
+        return eval_loss
+
+    return objective
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--parallel", type=int, default=2)
+    ap.add_argument("--baseline-random", action="store_true")
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full published config (needs a TPU fleet)")
+    ap.add_argument("--checkpoint", default="/tmp/tune_lm_tuner.json")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    space = make_search_space(cfg)
+    objective = make_objective(args.arch, args.steps, args.eval_every,
+                               args.full_config)
+
+    if args.baseline_random:
+        suggester = RandomSuggester(space, seed=0)
+    else:
+        suggester = BOSuggester(space, BOConfig(num_init=3).fast(), seed=0)
+
+    backend = ThreadBackend(max_workers=args.parallel)
+    tuner = Tuner(
+        space,
+        objective,
+        suggester,
+        backend,
+        TuningJobConfig(
+            max_trials=args.trials,
+            max_parallel=args.parallel,
+            max_retries=1,
+            checkpoint_path=args.checkpoint,
+        ),
+        stopping_rule=MedianRule(),
+    )
+    result = tuner.run()
+    backend.shutdown()
+
+    print("\n=== tuning job complete ===")
+    print(f"arch            : {args.arch} ({'full' if args.full_config else 'reduced'})")
+    print(f"suggester       : {'random' if args.baseline_random else 'BO (GP+EI+slice)'}")
+    print(f"trials          : {len(result.trials)} "
+          f"(early-stopped {result.num_early_stopped}, "
+          f"failed attempts {result.num_failed_attempts})")
+    print(f"best eval loss  : {result.best_objective:.4f}")
+    print(f"best config     : { {k: round(v, 6) for k, v in (result.best_config or {}).items()} }")
+    for t in result.trials:
+        print(f"  trial {t.trial_id:2d} [{t.state:9s}] obj={t.objective:8.4f} "
+              f"iters={t.resource_used:2d} cfg_lr={t.config['learning_rate']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+from repro.configs.base import (
+    MambaSettings,
+    ModelConfig,
+    MoESettings,
+    RGLRUSettings,
+    ShapeConfig,
+    SHAPES,
+)
+from repro.configs.registry import (
+    ARCHITECTURES,
+    get_config,
+    input_specs,
+    list_archs,
+    tiny,
+)
+
+__all__ = [
+    "MambaSettings",
+    "ModelConfig",
+    "MoESettings",
+    "RGLRUSettings",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCHITECTURES",
+    "get_config",
+    "input_specs",
+    "list_archs",
+    "tiny",
+]

@@ -1,0 +1,62 @@
+"""repro.core — the paper's contribution: scalable gradient-free optimization.
+
+Public API:
+    SearchSpace / Continuous / Integer / Categorical   (§4.1, §5.1)
+    BOSuggester / RandomSuggester / SobolSuggester     (§4, §2.1)
+    MedianRule                                         (§5.2)
+    WarmStartPool                                      (§5.3)
+    ASHARule                                           (beyond-paper, §2.3)
+    Tuner / TuningJobConfig                            (§3 workflow engine)
+
+Note: GP/BO numerics run in float64 — Cholesky factorizations of Matérn gram
+matrices with small noise floors are not reliably PSD in float32. Model
+training code (repro.models / repro.training) is dtype-explicit (bf16/f32
+params and activations), so enabling x64 here does not change its precision.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.search_space import (  # noqa: E402
+    Categorical,
+    Continuous,
+    Integer,
+    ScalingType,
+    SearchSpace,
+)
+from repro.core.suggest import (  # noqa: E402
+    BOConfig,
+    BOSuggester,
+    RandomSuggester,
+    SobolSuggester,
+)
+from repro.core.median_rule import MedianRule, MedianRuleConfig  # noqa: E402
+from repro.core.warm_start import WarmStartPool, transferable  # noqa: E402
+from repro.core.asha import ASHAConfig, ASHARule  # noqa: E402
+from repro.core.tuner import (  # noqa: E402
+    Tuner,
+    TuningJobConfig,
+    TuningResult,
+)
+
+__all__ = [
+    "Categorical",
+    "Continuous",
+    "Integer",
+    "ScalingType",
+    "SearchSpace",
+    "BOConfig",
+    "BOSuggester",
+    "RandomSuggester",
+    "SobolSuggester",
+    "MedianRule",
+    "MedianRuleConfig",
+    "WarmStartPool",
+    "transferable",
+    "ASHAConfig",
+    "ASHARule",
+    "Tuner",
+    "TuningJobConfig",
+    "TuningResult",
+]

@@ -1,0 +1,60 @@
+"""Acquisition functions (paper §4.3). Minimization convention throughout.
+
+* **Expected improvement (EI)** — AMT's default. Closed form under the
+  Gaussian marginal: with γ = (y* − μ)/σ,  EI = σ·(γΦ(γ) + φ(γ)).
+* **LCB** — lower confidence bound μ − κσ (paper cites UCB-family as related).
+* **Thompson-style sampling** — the paper's approximation: draw marginal
+  samples N(μ(x), σ²(x)) at a dense Sobol anchor set (exact joint-posterior
+  Thompson sampling is intractable).
+
+All functions accept per-MCMC-sample moments of shape (S, m) and integrate the
+acquisition over the GPHP posterior by averaging over S (Snoek et al. 2012).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["expected_improvement", "lcb", "thompson_draws", "integrate_over_samples"]
+
+_SQRT2 = 1.4142135623730951
+_INV_SQRT2PI = 0.3989422804014327
+
+
+def _norm_pdf(z: jax.Array) -> jax.Array:
+    return _INV_SQRT2PI * jnp.exp(-0.5 * z * z)
+
+
+def _norm_cdf(z: jax.Array) -> jax.Array:
+    return 0.5 * (1.0 + jax.lax.erf(z / _SQRT2))
+
+
+def expected_improvement(
+    mu: jax.Array, var: jax.Array, y_best: jax.Array
+) -> jax.Array:
+    """EI(x) = E[max(0, y* − y(x))] for minimization. Shapes broadcast."""
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-16))
+    gamma = (y_best - mu) / sigma
+    return sigma * (gamma * _norm_cdf(gamma) + _norm_pdf(gamma))
+
+
+def lcb(mu: jax.Array, var: jax.Array, kappa: float = 2.0) -> jax.Array:
+    """Negated lower confidence bound, so that *larger is better* like EI."""
+    return -(mu - kappa * jnp.sqrt(jnp.maximum(var, 1e-16)))
+
+
+def thompson_draws(
+    mu: jax.Array, var: jax.Array, key: jax.Array
+) -> jax.Array:
+    """Marginal Thompson draws at anchor locations; (S, m) -> (S, m).
+    The *minimum* draw per sample is the Thompson choice."""
+    eps = jax.random.normal(key, mu.shape)
+    return mu + jnp.sqrt(jnp.maximum(var, 1e-16)) * eps
+
+
+def integrate_over_samples(acq_values: jax.Array) -> jax.Array:
+    """Average an (S, m) acquisition over the GPHP MCMC samples -> (m,)."""
+    if acq_values.ndim == 1:
+        return acq_values
+    return jnp.mean(acq_values, axis=0)

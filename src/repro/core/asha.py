@@ -1,0 +1,116 @@
+"""Asynchronous successive halving (ASHA) and synchronous SH/Hyperband.
+
+Beyond-paper extension: the paper (§2.3) surveys successive halving, Hyperband
+and ASHA as the multi-fidelity alternatives to its median rule; we implement
+them as first-class *stopping/promotion policies* sharing the tuner's
+early-stopping interface so they can be compared head-to-head in the
+benchmarks (EXPERIMENTS.md §Perf, beyond-paper section).
+
+ASHA (Li et al., 2019): rungs at r = r_min·η^k. A trial reaching rung k is
+stopped unless its metric is in the top 1/η of *all* metrics recorded at rung
+k so far (asynchronous promotion — no waiting for a full bracket).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+__all__ = ["ASHARule", "ASHAConfig", "HyperbandConfig", "SynchronousHyperband"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ASHAConfig:
+    r_min: int = 1
+    eta: int = 3
+    max_rungs: int = 8
+
+
+class ASHARule:
+    """Drop-in replacement for MedianRule with ASHA semantics (minimize)."""
+
+    def __init__(self, config: ASHAConfig = ASHAConfig()):
+        self.config = config
+        self._rungs: Dict[int, List[float]] = {}  # rung index -> recorded metrics
+
+    def _rung_iters(self) -> List[int]:
+        return [
+            self.config.r_min * self.config.eta**k
+            for k in range(self.config.max_rungs)
+        ]
+
+    def record_completed(self, curve: Sequence[float]) -> None:
+        """Completed curves also populate rungs (same interface as MedianRule)."""
+        c = np.minimum.accumulate(np.asarray(list(curve), dtype=np.float64))
+        for k, r in enumerate(self._rung_iters()):
+            if r <= len(c):
+                self._rungs.setdefault(k, []).append(float(c[r - 1]))
+
+    def should_stop(self, curve: Sequence[float]) -> bool:
+        c = np.minimum.accumulate(np.asarray(list(curve), dtype=np.float64))
+        r_now = len(c)
+        rungs = self._rung_iters()
+        # only decide exactly at rung boundaries
+        if r_now not in rungs:
+            return False
+        k = rungs.index(r_now)
+        peers = self._rungs.setdefault(k, [])
+        value = float(c[-1])
+        peers.append(value)
+        if len(peers) < self.config.eta:
+            return False  # not enough evidence at this rung yet
+        cutoff = float(np.quantile(peers, 1.0 / self.config.eta))
+        return value > cutoff
+
+    def state_dict(self) -> Dict:
+        return {"rungs": {str(k): v for k, v in self._rungs.items()}}
+
+    def load_state_dict(self, state: Dict) -> None:
+        self._rungs = {int(k): list(v) for k, v in state["rungs"].items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class HyperbandConfig:
+    r_max: int = 27  # max iterations a trial can use
+    eta: int = 3
+
+
+class SynchronousHyperband:
+    """Synchronous Hyperband bracket scheduler (Li et al., 2016; paper §2.3).
+
+    Unlike the median rule / ASHA (which are *stopping rules* attached to a
+    free-running tuner), Hyperband prescribes the (n_i, r_i) ladder per
+    bracket. This helper enumerates the ladder; the caller runs each rung,
+    ranks, and keeps the top 1/η. Used by the early-stopping benchmark as the
+    synchronous baseline the paper contrasts with asynchronous methods
+    ("One drawback of SH and Hyperband is their synchronous nature").
+    """
+
+    def __init__(self, config: HyperbandConfig = HyperbandConfig()):
+        self.config = config
+
+    def brackets(self) -> List[List[Dict[str, int]]]:
+        """Return every bracket as its list of rungs {n, r}."""
+        eta, r_max = self.config.eta, self.config.r_max
+        s_max = int(np.floor(np.log(r_max) / np.log(eta)))
+        out = []
+        for s in range(s_max, -1, -1):
+            n = int(np.ceil((s_max + 1) / (s + 1) * eta**s))
+            r = r_max * eta ** (-s)
+            rungs = []
+            for i in range(s + 1):
+                rungs.append({
+                    "n": max(1, int(np.floor(n * eta ** (-i)))),
+                    "r": int(r * eta**i),
+                })
+            out.append(rungs)
+        return out
+
+    @staticmethod
+    def promote(results: Sequence[float], eta: int) -> List[int]:
+        """Indices of the top 1/eta configs (minimization)."""
+        keep = max(1, len(results) // eta)
+        order = np.argsort(np.asarray(results))
+        return [int(i) for i in order[:keep]]

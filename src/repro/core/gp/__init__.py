@@ -1,0 +1,17 @@
+from repro.core.gp.params import GPHyperParams, GPHyperBounds, default_bounds
+from repro.core.gp.gp import GPPosterior, fit_gp, log_marginal_likelihood, predict
+from repro.core.gp.kernels import matern52_ard
+from repro.core.gp.warping import kumaraswamy_cdf, warp_inputs
+
+__all__ = [
+    "GPHyperParams",
+    "GPHyperBounds",
+    "default_bounds",
+    "GPPosterior",
+    "fit_gp",
+    "log_marginal_likelihood",
+    "predict",
+    "matern52_ard",
+    "kumaraswamy_cdf",
+    "warp_inputs",
+]

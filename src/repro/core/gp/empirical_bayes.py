@@ -1,0 +1,88 @@
+"""Empirical-Bayes GPHP estimation (paper §4.2): maximize the log marginal
+likelihood (plus the weak prior, i.e. MAP-II) under the stability box bounds.
+
+The paper implements *both* empirical Bayes and slice sampling and observes
+slice sampling overfits less early on; we expose both. Empirical Bayes here is
+multi-restart Adam in a sigmoid-reparameterized unconstrained space:
+
+    packed(z) = lower + (upper − lower) · sigmoid(z)
+
+which keeps iterates strictly inside the box. All restarts run in parallel via
+``vmap``; the best final point wins.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp.params import GPHyperBounds
+
+__all__ = ["EmpiricalBayesConfig", "maximize_mll"]
+
+
+class EmpiricalBayesConfig(NamedTuple):
+    num_restarts: int = 4
+    num_steps: int = 150
+    learning_rate: float = 0.08
+    init_spread: float = 1.0  # stddev of restart inits in z-space
+
+
+def _to_box(z: jax.Array, bounds: GPHyperBounds) -> jax.Array:
+    return bounds.lower + bounds.width * jax.nn.sigmoid(z)
+
+
+def _from_box(p: jax.Array, bounds: GPHyperBounds) -> jax.Array:
+    u = jnp.clip((p - bounds.lower) / bounds.width, 1e-4, 1.0 - 1e-4)
+    return jnp.log(u) - jnp.log1p(-u)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def maximize_mll(
+    objective: Callable[[jax.Array], jax.Array],
+    init_packed: jax.Array,
+    bounds: GPHyperBounds,
+    key: jax.Array,
+    cfg: EmpiricalBayesConfig = EmpiricalBayesConfig(),
+) -> jax.Array:
+    """Return the packed GPHP vector maximizing ``objective`` (e.g. the log
+    posterior density). ``objective`` must be jax-traceable and finite inside
+    the box."""
+
+    z_center = _from_box(init_packed, bounds)
+    inits = z_center[None, :] + cfg.init_spread * jax.random.normal(
+        key, (cfg.num_restarts, z_center.shape[0])
+    )
+    inits = inits.at[0].set(z_center)  # first restart = warm init
+
+    def loss(z):
+        return -objective(_to_box(z, bounds))
+
+    grad_fn = jax.value_and_grad(loss)
+
+    def adam_run(z0):
+        m0 = jnp.zeros_like(z0)
+        v0 = jnp.zeros_like(z0)
+
+        def step(carry, i):
+            z, m, v = carry
+            val, g = grad_fn(z)
+            g = jnp.where(jnp.isfinite(g), g, 0.0)
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * (g * g)
+            mhat = m / (1.0 - 0.9 ** (i + 1.0))
+            vhat = v / (1.0 - 0.999 ** (i + 1.0))
+            z = z - cfg.learning_rate * mhat / (jnp.sqrt(vhat) + 1e-8)
+            return (z, m, v), val
+
+        (z, _, _), _ = jax.lax.scan(
+            step, (z0, m0, v0), jnp.arange(cfg.num_steps, dtype=jnp.float32)
+        )
+        return z, loss(z)
+
+    finals, losses = jax.vmap(adam_run)(inits)
+    best = jnp.argmin(losses)
+    return _to_box(finals[best], bounds)

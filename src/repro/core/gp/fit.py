@@ -1,0 +1,60 @@
+"""Jit-stable GPHP fitting entry points.
+
+``slice_sample_chain`` / ``maximize_mll`` take the target as a *static*
+callable; passing a fresh closure per decision would recompile every call.
+These wrappers close over nothing: data (x, y, mask, bounds, init) are traced
+arguments, so XLA compiles once per (n_bucket, d, config) and the BO loop
+reuses the executable across steps, seeds and suggester instances.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp.empirical_bayes import EmpiricalBayesConfig, maximize_mll
+from repro.core.gp.gp import log_posterior_density
+from repro.core.gp.params import GPHyperBounds
+from repro.core.gp.slice_sampler import SliceSamplerConfig, slice_sample_chain
+
+__all__ = ["mcmc_gphps", "map_gphps"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def mcmc_gphps(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    bounds: GPHyperBounds,
+    z0: jax.Array,
+    key: jax.Array,
+    cfg: SliceSamplerConfig,
+    backend: str = "xla",
+) -> jax.Array:
+    """Slice-sample the packed GPHP posterior. Returns (num_kept, 3d+2)."""
+
+    def log_prob(packed):
+        return log_posterior_density(x, y, packed, bounds, mask, backend=backend)
+
+    return slice_sample_chain(log_prob, z0, key, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def map_gphps(
+    x: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    bounds: GPHyperBounds,
+    z0: jax.Array,
+    key: jax.Array,
+    cfg: EmpiricalBayesConfig = EmpiricalBayesConfig(),
+    backend: str = "xla",
+) -> jax.Array:
+    """MAP-II (empirical Bayes) packed GPHP estimate. Returns (3d+2,)."""
+
+    def log_prob(packed):
+        return log_posterior_density(x, y, packed, bounds, mask, backend=backend)
+
+    return maximize_mll(log_prob, z0, bounds, key, cfg)

@@ -1,0 +1,302 @@
+"""Candidate suggestion: the BO engine of AMT (paper §4) plus random search.
+
+``BOSuggester.suggest(history, pending)`` implements one decision step:
+
+  1. Encode history into the unit cube; standardize observations to zero
+     mean / unit std (paper §4.2).
+  2. Optionally *fantasize* pending candidates (constant-liar or
+     kriging-believer) — the paper's §4.4 notes plain async BO ignores the
+     information in pending picks and suggests fantasizing as the remedy; we
+     implement it behind ``pending_strategy`` (default: the paper-faithful
+     "exclude" — never re-propose a pending point).
+  3. Fit GPHPs by slice sampling (paper default; 10 effective samples) or
+     MAP-II empirical Bayes.
+  4. Optimize the integrated EI over Sobol anchors + gradient refinement.
+  5. Round-trip the winner through the search space (ints rounded, one-hots
+     snapped) and de-duplicate against history/pending; fall back to the next
+     candidate, then to a fresh Sobol point.
+
+Shape bucketing keeps jit recompiles logarithmic in the number of
+observations. The first ``num_init`` suggestions come from a Sobol design
+(§2.1: quasi-random initialization).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp import gp as gplib
+from repro.core.gp import params as gpparams
+from repro.core.gp.empirical_bayes import EmpiricalBayesConfig
+from repro.core.gp.fit import map_gphps, mcmc_gphps
+from repro.core.gp.slice_sampler import (
+    FAST_CONFIG,
+    PAPER_CONFIG,
+    SliceSamplerConfig,
+)
+from repro.core.optimize_acq import AcqOptConfig, optimize_acquisition
+from repro.core.search_space import SearchSpace
+from repro.core.sobol import SobolSequence
+
+__all__ = ["BOConfig", "BOSuggester", "RandomSuggester", "SobolSuggester"]
+
+Observation = Tuple[Mapping[str, Any], float]
+
+
+def _bucket(n: int, floor: int = 8) -> int:
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class BOConfig:
+    """Configuration of the BO engine. Defaults are the paper's choices."""
+
+    num_init: int = 3  # Sobol initial design before the GP takes over
+    gphp_method: str = "mcmc"  # "mcmc" (slice sampling) | "map" (empirical Bayes)
+    slice_config: SliceSamplerConfig = PAPER_CONFIG
+    eb_config: EmpiricalBayesConfig = EmpiricalBayesConfig()
+    acq: AcqOptConfig = AcqOptConfig()
+    pending_strategy: str = "exclude"  # "exclude" | "liar" | "kb" (beyond-paper)
+    liar_value: float = 0.0  # standardized-space constant liar (0 = mean liar)
+    dedupe_tol: float = 1e-6  # L∞ tolerance for duplicate candidates
+    max_pending: int = 64  # static pad size for the pending buffer
+
+    def fast(self) -> "BOConfig":
+        """Cheaper MCMC settings for many-seed benchmark sweeps."""
+        return dataclasses.replace(self, slice_config=FAST_CONFIG)
+
+
+class BOSuggester:
+    """Sequential/asynchronous Bayesian-optimization suggester (minimize)."""
+
+    def __init__(self, space: SearchSpace, config: BOConfig = BOConfig(), seed: int = 0):
+        self.space = space
+        self.config = config
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self._sobol_init = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))
+        self._anchor_gen = SobolSequence(space.encoded_dim)
+        self._anchors = jnp.asarray(self._anchor_gen.next(config.acq.num_anchors))
+        self._bounds = gpparams.default_bounds(
+            space.encoded_dim, space.warpable_dims()
+        )
+        # persisted slice-chain state: warm-starts the next chain (paper runs
+        # one chain per decision; warm chains amortize burn-in).
+        self._chain_state: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------ rng
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # ------------------------------------------------------------- main api
+    def suggest(
+        self,
+        history: Sequence[Observation],
+        pending: Sequence[Mapping[str, Any]] = (),
+    ) -> Dict[str, Any]:
+        cfg = self.config
+        if len(history) < cfg.num_init:
+            return self._quasi_random(history, pending)
+
+        x_np = self.space.encode_batch([h[0] for h in history])
+        y_np = np.asarray([h[1] for h in history], dtype=np.float64)
+        finite = np.isfinite(y_np)
+        if finite.sum() < max(2, cfg.num_init):
+            return self._quasi_random(history, pending)
+        x_np, y_np = x_np[finite], y_np[finite]
+
+        # --- standardize (paper: zero-mean normalization) ------------------
+        y_mean, y_std = float(y_np.mean()), float(y_np.std())
+        y_std = y_std if y_std > 1e-12 else 1.0
+        y_n = (y_np - y_mean) / y_std
+
+        pend_np = self.space.encode_batch(list(pending)) if pending else np.zeros(
+            (0, self.space.encoded_dim)
+        )
+
+        # --- fantasize pending (beyond-paper strategies) -------------------
+        n_real = x_np.shape[0]
+        if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
+            fantasy = self._fantasy_values(x_np, y_n, pend_np)
+            x_np = np.concatenate([x_np, pend_np], axis=0)
+            y_n = np.concatenate([y_n, fantasy], axis=0)
+
+        # --- pad to bucket --------------------------------------------------
+        n = x_np.shape[0]
+        nb = _bucket(n)
+        d = self.space.encoded_dim
+        x_pad = np.zeros((nb, d))
+        y_pad = np.zeros((nb,))
+        x_pad[:n], y_pad[:n] = x_np, y_n
+        mask = np.zeros(nb, dtype=bool)
+        mask[:n] = True
+        xj, yj, mj = jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
+
+        # --- GPHP inference --------------------------------------------------
+        params_batch = self._fit_gphps(xj, yj, mj)
+        post = gplib.fit_posterior_batch(
+            xj, yj, params_batch, mj, backend=cfg.acq.backend
+        )
+
+        # --- acquisition optimization ---------------------------------------
+        y_best = jnp.asarray(float(y_n[:n_real].min()))  # best *real* observation
+        pend_buf = np.zeros((cfg.max_pending, d))
+        pend_mask = np.zeros(cfg.max_pending, dtype=bool)
+        p = min(len(pend_np), cfg.max_pending)
+        if cfg.pending_strategy == "exclude" and p > 0:
+            pend_buf[:p] = pend_np[:p]
+            pend_mask[:p] = True
+        cands, _ = optimize_acquisition(
+            post,
+            self._anchors,
+            y_best,
+            jnp.asarray(pend_buf),
+            jnp.asarray(pend_mask),
+            self._next_key(),
+            cfg.acq,
+        )
+
+        # --- dedupe & decode -------------------------------------------------
+        seen = np.concatenate([x_np, pend_np], axis=0) if len(pend_np) else x_np
+        for cand in np.asarray(cands):
+            snapped = self.space.round_trip(cand)
+            if len(seen) == 0 or np.min(
+                np.max(np.abs(seen - snapped[None, :]), axis=1)
+            ) > cfg.dedupe_tol:
+                return self.space.decode(snapped)
+        return self._quasi_random(history, pending)
+
+    # ---------------------------------------------------------------- gphps
+    def _fit_gphps(self, xj, yj, mj) -> gpparams.GPHyperParams:
+        cfg = self.config
+        d = self.space.encoded_dim
+        bounds = self._bounds
+        init = gpparams.default_params(d).pack()
+        init = jnp.clip(init, bounds.lower + 1e-4, bounds.upper - 1e-4)
+        if self._chain_state is not None:
+            prev = jnp.asarray(self._chain_state)
+            init = jnp.clip(prev, bounds.lower + 1e-4, bounds.upper - 1e-4)
+
+        if cfg.gphp_method == "map":
+            best = map_gphps(
+                xj, yj, mj, bounds, init, self._next_key(), cfg.eb_config,
+                cfg.acq.backend,
+            )
+            self._chain_state = np.asarray(best)
+            return gpparams.GPHyperParams.unpack(best[None, :], d)
+        samples = mcmc_gphps(
+            xj, yj, mj, bounds, init, self._next_key(), cfg.slice_config,
+            cfg.acq.backend,
+        )
+        self._chain_state = np.asarray(samples[-1])
+        return gpparams.GPHyperParams.unpack(samples, d)
+
+    # ------------------------------------------------------------- fantasies
+    def _fantasy_values(self, x_np, y_n, pend_np) -> np.ndarray:
+        cfg = self.config
+        if cfg.pending_strategy == "liar":
+            return np.full(len(pend_np), cfg.liar_value)
+        # kriging believer: posterior mean under a quick MAP fit
+        n = x_np.shape[0]
+        nb = _bucket(n)
+        d = self.space.encoded_dim
+        x_pad, y_pad = np.zeros((nb, d)), np.zeros((nb,))
+        x_pad[:n], y_pad[:n] = x_np, y_n
+        mask = np.zeros(nb, dtype=bool)
+        mask[:n] = True
+        post = gplib.fit_gp(
+            jnp.asarray(x_pad),
+            jnp.asarray(y_pad),
+            gpparams.default_params(d),
+            jnp.asarray(mask),
+            backend=cfg.acq.backend,
+        )
+        mu, _ = gplib.predict(post, jnp.asarray(pend_np), backend=cfg.acq.backend)
+        return np.asarray(mu)
+
+    # ---------------------------------------------------------- cold starts
+    def _quasi_random(
+        self,
+        history: Sequence[Observation],
+        pending: Sequence[Mapping[str, Any]],
+    ) -> Dict[str, Any]:
+        seen = self.space.encode_batch(
+            [h[0] for h in history] + list(pending)
+        ) if (history or pending) else np.zeros((0, self.space.encoded_dim))
+        for _ in range(32):
+            vec = self.space.round_trip(self._sobol_init.next(1)[0])
+            if len(seen) == 0 or np.min(
+                np.max(np.abs(seen - vec[None, :]), axis=1)
+            ) > self.config.dedupe_tol:
+                return self.space.decode(vec)
+        return self.space.decode(self._rng.random(self.space.encoded_dim))
+
+    # ------------------------------------------------------------ state i/o
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "chain_state": None
+            if self._chain_state is None
+            else self._chain_state.tolist(),
+            "sobol_count": self._sobol_init._count,
+            "key": np.asarray(self._key).tolist(),
+        }
+
+    def load_state_dict(self, state: Mapping[str, Any]) -> None:
+        cs = state.get("chain_state")
+        self._chain_state = None if cs is None else np.asarray(cs)
+        self._sobol_init.reset()
+        if state.get("sobol_count", 0):
+            self._sobol_init.next(int(state["sobol_count"]))
+        self._key = jnp.asarray(np.asarray(state["key"], dtype=np.uint32))
+
+
+class RandomSuggester:
+    """Uniform random search (paper §2.1) — respects log scaling (§5.1)."""
+
+    def __init__(self, space: SearchSpace, seed: int = 0):
+        self.space = space
+        self._rng = np.random.default_rng(seed)
+
+    def suggest(
+        self,
+        history: Sequence[Observation] = (),
+        pending: Sequence[Mapping[str, Any]] = (),
+    ) -> Dict[str, Any]:
+        return self.space.sample(self._rng, 1)[0]
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"bitgen": self._rng.bit_generator.state}
+
+    def load_state_dict(self, state: Mapping[str, Any]) -> None:
+        self._rng.bit_generator.state = state["bitgen"]
+
+
+class SobolSuggester:
+    """Quasi-random Sobol search (paper §2.1: better space coverage)."""
+
+    def __init__(self, space: SearchSpace, seed: int = 0):
+        self.space = space
+        self._seq = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))
+        self._count = 0
+
+    def suggest(self, history=(), pending=()) -> Dict[str, Any]:
+        self._count += 1
+        return self.space.decode(self.space.round_trip(self._seq.next(1)[0]))
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"count": self._count}
+
+    def load_state_dict(self, state) -> None:
+        self._seq.reset()
+        self._count = int(state.get("count", 0))
+        if self._count:
+            self._seq.next(self._count)

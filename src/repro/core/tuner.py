@@ -1,0 +1,392 @@
+"""The tuning-job workflow engine (paper §3).
+
+Maps the AMT service architecture (Fig. 1) onto a single, checkpointable
+control loop:
+
+  * Hyperparameter Selection Service  → ``suggester`` (BO / random / Sobol)
+  * SageMaker Training platform        → ``backend`` (threads or sim)
+  * Workflow engine (StepFunctions)    → ``Tuner.run`` event loop
+  * DynamoDB metadata store            → ``Tuner.save`` / ``Tuner.restore``
+    (JSON; *metadata only* — trial payloads/models live with the training
+    side, mirroring the paper's "no customer data in DynamoDB" principle)
+
+Features implemented per the paper:
+  * asynchronous slot refill (§4.4): as soon as an evaluation finishes, the
+    GP is updated and the freed slot is filled, never re-proposing pending
+    candidates;
+  * automated early stopping (§5.2): a pluggable stopping rule (median rule
+    by default; ASHA as a beyond-paper alternative) watched on every report;
+  * warm start (§5.3): parent-job observations are folded into the
+    suggester's history, z-scored per task;
+  * fault tolerance (§3.3): failed trials retry with exponential backoff up
+    to ``max_retries``; tuner state is checkpointed after every transition,
+    and ``Tuner.restore`` resumes a killed job;
+  * straggler mitigation: per-trial wall/virtual-time budget — over-budget
+    trials are stopped (yielding their best-so-far) instead of blocking slots;
+  * elasticity: ``max_parallel`` may be changed while running (the slot pool
+    grows/shrinks without invalidating tuner or GP state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import tempfile
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.trial import Trial, TrialState
+from repro.core.warm_start import WarmStartPool
+
+__all__ = ["TuningJobConfig", "TuningResult", "Tuner"]
+
+
+@dataclasses.dataclass
+class TuningJobConfig:
+    max_trials: int = 20
+    max_parallel: int = 1
+    max_retries: int = 2
+    retry_backoff: float = 1.0  # seconds (virtual for SimBackend) per attempt
+    trial_timeout: Optional[float] = None  # straggler budget per trial
+    checkpoint_path: Optional[str] = None
+    seed: int = 0
+    job_name: str = "tuning-job"
+
+
+@dataclasses.dataclass
+class TuningResult:
+    trials: List[Trial]
+    best_trial: Optional[Trial]
+    timeline: List[Tuple[float, float]]  # (time, best objective so far)
+    total_time: float
+    total_iterations: int  # resource actually consumed
+    num_early_stopped: int
+    num_failed_attempts: int
+
+    @property
+    def best_config(self) -> Optional[Dict[str, Any]]:
+        return None if self.best_trial is None else dict(self.best_trial.config)
+
+    @property
+    def best_objective(self) -> float:
+        return float("inf") if self.best_trial is None else self.best_trial.objective
+
+    def history(self) -> List[Tuple[Dict[str, Any], float]]:
+        return [
+            (dict(t.config), t.objective)
+            for t in self.trials
+            if t.state in (TrialState.COMPLETED, TrialState.STOPPED)
+            and math.isfinite(t.objective)
+        ]
+
+
+class Tuner:
+    """Orchestrates one hyperparameter tuning job (minimization)."""
+
+    def __init__(
+        self,
+        space,
+        objective: Callable,
+        suggester,
+        backend,
+        job_config: TuningJobConfig = TuningJobConfig(),
+        stopping_rule=None,
+        warm_start: Optional[WarmStartPool] = None,
+        callbacks: Sequence[Callable[["Tuner", Trial], None]] = (),
+    ):
+        self.space = space
+        self.objective = objective
+        self.suggester = suggester
+        self.backend = backend
+        self.config = job_config
+        self.stopping_rule = stopping_rule
+        self.warm_start = warm_start
+        self.callbacks = list(callbacks)
+
+        self.trials: Dict[int, Trial] = {}
+        self._next_id = 0
+        self._submitted = 0  # counts unique configs tried (retries excluded)
+        self._stop_requested: set[int] = set()
+        self._retry_queue: List[Tuple[float, Trial]] = []  # (not-before time, trial)
+        self._timeline: List[Tuple[float, float]] = []
+        self._num_failed_attempts = 0
+        self.max_parallel = job_config.max_parallel
+
+    # ------------------------------------------------------------- history
+    def _own_history(self) -> List[Tuple[Dict[str, Any], float]]:
+        # FAILED trials are excluded: their curve minima are measurements at
+        # the moment of death, not final objectives, and no model artifact
+        # exists — they must neither seed the GP nor win the job.
+        return [
+            (dict(t.config), t.objective)
+            for t in self.trials.values()
+            if t.state in (TrialState.COMPLETED, TrialState.STOPPED)
+            and math.isfinite(t.objective)
+        ]
+
+    def _suggester_history(self) -> List[Tuple[Dict[str, Any], float]]:
+        own = self._own_history()
+        if self.warm_start is None or self.warm_start.num_parents == 0:
+            return own
+        parent_obs = self.warm_start.as_observations(self.space)
+        if len(own) >= 2:
+            ys = np.asarray([y for _, y in own])
+            std = ys.std() if ys.std() > 1e-12 else 1.0
+            own = [(c, float((y - ys.mean()) / std)) for c, y in own]
+        return parent_obs + own
+
+    def _pending_configs(self) -> List[Dict[str, Any]]:
+        return [
+            dict(t.config)
+            for t in self.trials.values()
+            if t.state in (TrialState.PENDING, TrialState.RUNNING)
+        ]
+
+    # ---------------------------------------------------------------- main
+    def run(self) -> TuningResult:
+        idle = 0
+        while True:
+            self._requeue_retries()
+            self._refill_slots()
+            if self._all_done():
+                break
+            ev = self.backend.next_event(timeout=5.0)
+            if ev is None:
+                # No event: either workers are still busy (keep waiting) or
+                # everything finished and the queue momentarily looks empty —
+                # drain defensively before concluding (ThreadBackend workers
+                # enqueue their final event *before* releasing the slot, but
+                # the tuner may observe the two out of order under load).
+                self._drain_events()
+                if self._all_done():
+                    break
+                if self.backend.active_count() == 0 and self._retry_queue:
+                    # liveness: the only remaining work sits behind retry
+                    # backoffs — on a virtual-clock backend time only moves
+                    # with events, so fast-forward to the earliest deadline.
+                    earliest = min(t for t, _ in self._retry_queue)
+                    if hasattr(self.backend, "advance_clock"):
+                        self.backend.advance_clock(earliest)
+                    continue
+                idle += 1
+                if (
+                    idle > 24
+                    and self.backend.active_count() == 0
+                    and not self._retry_queue
+                ):
+                    break  # stuck trials: give up; result() reports them
+                continue
+            idle = 0
+            self._handle_event(ev)
+            self._check_stragglers()
+            self._checkpoint()
+        self._drain_events()
+        self._checkpoint()
+        return self.result()
+
+    def _drain_events(self) -> None:
+        while True:
+            ev = self.backend.next_event(timeout=0.05)
+            if ev is None:
+                return
+            self._handle_event(ev)
+
+    # ---------------------------------------------------------- event flow
+    def _refill_slots(self) -> None:
+        while (
+            self.backend.active_count() < self.max_parallel
+            and self._submitted < self.config.max_trials
+        ):
+            config = self.suggester.suggest(
+                self._suggester_history(), self._pending_configs()
+            )
+            trial = Trial(
+                trial_id=self._next_id,
+                config=dict(config),
+                submit_time=self.backend.now(),
+            )
+            self._next_id += 1
+            self._submitted += 1
+            self.trials[trial.trial_id] = trial
+            trial.state = TrialState.RUNNING
+            trial.attempts = 1
+            self.backend.submit(trial, self.objective)
+
+    def _requeue_retries(self) -> None:
+        now = self.backend.now()
+        still_waiting = []
+        for not_before, trial in self._retry_queue:
+            if now >= not_before and self.backend.active_count() < self.max_parallel:
+                trial.state = TrialState.RUNNING
+                trial.attempts += 1
+                trial.error = None
+                trial.curve = []
+                self.backend.submit(trial, self.objective)
+            else:
+                still_waiting.append((not_before, trial))
+        self._retry_queue = still_waiting
+
+    def _handle_event(self, ev) -> None:
+        trial = self.trials.get(ev.trial_id)
+        if trial is None:
+            return
+        if ev.kind == "started":
+            trial.start_time = ev.time
+        elif ev.kind == "report":
+            trial.curve.append(ev.value)
+            trial.resource_used = max(trial.resource_used, ev.iteration)
+            if (
+                self.stopping_rule is not None
+                and ev.trial_id not in self._stop_requested
+                and self.stopping_rule.should_stop(trial.curve)
+            ):
+                self._stop_requested.add(ev.trial_id)
+                self.backend.request_stop(ev.trial_id)
+        elif ev.kind == "completed":
+            trial.end_time = ev.time
+            if math.isfinite(ev.value):
+                trial.final_objective = ev.value
+            if ev.trial_id in self._stop_requested:
+                trial.state = TrialState.STOPPED
+                trial.stopped_early = True
+                self._stop_requested.discard(ev.trial_id)
+            else:
+                trial.state = TrialState.COMPLETED
+                if self.stopping_rule is not None and trial.curve:
+                    self.stopping_rule.record_completed(trial.curve)
+            self._record_timeline(ev.time)
+            for cb in self.callbacks:
+                cb(self, trial)
+        elif ev.kind == "failed":
+            self._num_failed_attempts += 1
+            if trial.attempts <= self.config.max_retries:
+                backoff = self.config.retry_backoff * (2 ** (trial.attempts - 1))
+                trial.state = TrialState.PENDING
+                trial.error = ev.error
+                self._retry_queue.append((ev.time + backoff, trial))
+            else:
+                trial.state = TrialState.FAILED
+                trial.end_time = ev.time
+                trial.error = ev.error
+                self._record_timeline(ev.time)
+                for cb in self.callbacks:
+                    cb(self, trial)
+
+    def _check_stragglers(self) -> None:
+        budget = self.config.trial_timeout
+        if budget is None:
+            return
+        now = self.backend.now()
+        for t in self.trials.values():
+            if (
+                t.state == TrialState.RUNNING
+                and t.start_time is not None
+                and now - t.start_time > budget
+                and t.trial_id not in self._stop_requested
+            ):
+                self._stop_requested.add(t.trial_id)
+                self.backend.request_stop(t.trial_id)
+
+    def _record_timeline(self, t: float) -> None:
+        best = min(
+            (
+                tr.objective
+                for tr in self.trials.values()
+                if tr.state in (TrialState.COMPLETED, TrialState.STOPPED)
+            ),
+            default=float("inf"),
+        )
+        self._timeline.append((t, best))
+
+    def _all_done(self) -> bool:
+        if self._submitted < self.config.max_trials:
+            return False
+        if self._retry_queue:
+            return False
+        return all(t.is_terminal for t in self.trials.values())
+
+    # ------------------------------------------------------------- results
+    def result(self) -> TuningResult:
+        terminal = [t for t in self.trials.values() if t.is_terminal]
+        eligible = [
+            t for t in terminal
+            if t.state in (TrialState.COMPLETED, TrialState.STOPPED)
+            and math.isfinite(t.objective)
+        ]
+        best = min(eligible, key=lambda t: t.objective) if eligible else None
+        return TuningResult(
+            trials=sorted(self.trials.values(), key=lambda t: t.trial_id),
+            best_trial=best,
+            timeline=list(self._timeline),
+            total_time=self.backend.now(),
+            total_iterations=sum(t.resource_used for t in self.trials.values()),
+            num_early_stopped=sum(1 for t in terminal if t.stopped_early),
+            num_failed_attempts=self._num_failed_attempts,
+        )
+
+    # -------------------------------------------------------- persistence
+    def save(self, path: Optional[str] = None) -> None:
+        path = path or self.config.checkpoint_path
+        if path is None:
+            return
+        state = {
+            "job_name": self.config.job_name,
+            "next_id": self._next_id,
+            "submitted": self._submitted,
+            "timeline": self._timeline,
+            "num_failed_attempts": self._num_failed_attempts,
+            "trials": [t.to_json() for t in self.trials.values()],
+            "suggester": type(self.suggester).__name__,
+            "suggester_state": self.suggester.state_dict()
+            if hasattr(self.suggester, "state_dict")
+            else None,
+            "stopping_rule_state": self.stopping_rule.state_dict()
+            if self.stopping_rule is not None and hasattr(self.stopping_rule, "state_dict")
+            else None,
+            "warm_start_state": self.warm_start.state_dict()
+            if self.warm_start is not None
+            else None,
+        }
+        # atomic write: never leave a torn checkpoint behind (paper §3:
+        # resiliency as a guiding principle)
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(state, f)
+        os.replace(tmp, path)
+
+    def _checkpoint(self) -> None:
+        if self.config.checkpoint_path:
+            self.save(self.config.checkpoint_path)
+
+    def restore(self, path: Optional[str] = None) -> None:
+        """Load tuner state; unfinished trials are re-queued for execution
+        (at-least-once semantics, like the paper's retry workflow)."""
+        path = path or self.config.checkpoint_path
+        with open(path) as f:
+            state = json.load(f)
+        self._next_id = state["next_id"]
+        self._submitted = state["submitted"]
+        self._timeline = [tuple(x) for x in state["timeline"]]
+        self._num_failed_attempts = state["num_failed_attempts"]
+        self.trials = {}
+        for tj in state["trials"]:
+            t = Trial.from_json(tj)
+            if not t.is_terminal:
+                # job died while this trial ran: re-run it (same config)
+                t.state = TrialState.PENDING
+                t.curve = []
+                self._retry_queue.append((0.0, t))
+                self._submitted = self._submitted  # config already counted
+            self.trials[t.trial_id] = t
+        if state.get("suggester_state") and hasattr(self.suggester, "load_state_dict"):
+            self.suggester.load_state_dict(state["suggester_state"])
+        if state.get("stopping_rule_state") and self.stopping_rule is not None:
+            self.stopping_rule.load_state_dict(state["stopping_rule_state"])
+        if state.get("warm_start_state"):
+            self.warm_start = self.warm_start or WarmStartPool()
+            self.warm_start.load_state_dict(state["warm_start_state"])

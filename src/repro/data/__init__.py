@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLMDataset
+
+__all__ = ["SyntheticLMDataset"]

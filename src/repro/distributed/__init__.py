@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    tree_specs_to_shardings,
+)
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "tree_specs_to_shardings",
+]

@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) for pjit.
+
+Model code annotates every parameter and activation with *logical* axis names
+("vocab", "embed", "ffn", "heads", "experts", "batch", "seq", ...). This
+module maps logical names onto mesh axes:
+
+    batch   → ("pod", "data")   data parallelism (pod = extra DP axis; across
+                                 tuning trials the pod axis is the AMT slot
+                                 pool — see DESIGN.md §3)
+    vocab/heads/ffn/experts → "model"   tensor / expert parallelism
+    embed   → "data" when fsdp=True     ZeRO-3-style parameter sharding; XLA
+                                        all-gathers per layer inside the scan
+    seq     → "model" when sequence_parallel=True (hillclimb lever)
+
+Mapping is *capacity-aware*: a logical dim is only sharded if its size is
+divisible by the product of the mapped mesh axes (e.g. kv_heads=2 on a
+16-way model axis stays replicated rather than failing to lower).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "tree_specs_to_shardings",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis name → mesh axis (or tuple of axes)."""
+
+    batch: MeshAxes = ("pod", "data")
+    seq: MeshAxes = None  # residual-stream seq axis; "model" = sequence parallel
+    attn_seq: MeshAxes = None  # attention/MLP-interior seq axis (stays TP)
+    embed: MeshAxes = None  # activations' d_model axis stays unsharded
+    fsdp: MeshAxes = "data"  # weight sharding axis (ZeRO-3); None disables
+    vocab: MeshAxes = "model"
+    heads: MeshAxes = "model"
+    kv_heads: MeshAxes = "model"
+    ffn: MeshAxes = "model"
+    experts: MeshAxes = "model"
+    expert_ffn: MeshAxes = None  # per-expert hidden dim (usually small)
+    head_dim: MeshAxes = None
+    conv: MeshAxes = None
+    state: MeshAxes = None
+    inner: MeshAxes = "model"  # mamba/rglru expanded inner dim
+    stack: MeshAxes = None  # scanned layer-stack leading axis
+    cache_seq: MeshAxes = None  # KV-cache sequence axis
+
+    def resolve(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        if not hasattr(self, logical):
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return getattr(self, logical)
+
+
+DEFAULT_RULES = ShardingRules()
+
+
+def _axes_size(mesh_axes: MeshAxes, mesh: Mesh) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    size = 1
+    for a in mesh_axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    rules: ShardingRules,
+    mesh: Mesh,
+) -> PartitionSpec:
+    """Translate per-dim logical names into a PartitionSpec, dropping any
+    mapping whose mesh-axis product does not divide the dim size and any
+    mesh axis not present in ``mesh``."""
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    entries = []
+    used: set = set()
+    for name, dim in zip(logical_axes, shape):
+        mapped = rules.resolve(name)
+        if isinstance(mapped, str):
+            mapped = (mapped,)
+        if mapped is not None:
+            mapped = tuple(a for a in mapped if a in mesh.shape and a not in used)
+            if not mapped:
+                mapped = None
+        if mapped is None or dim % _axes_size(mapped, mesh) != 0:
+            entries.append(None)
+        else:
+            entries.append(mapped if len(mapped) > 1 else mapped[0])
+            used.update(mapped)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return PartitionSpec(*entries)
+
+
+def tree_specs_to_shardings(
+    spec_tree: Any, mesh: Mesh
+) -> Any:
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for single-token decode attention against a KV cache.
+
+q (B, Hq, Dh); k/v cache (B, C, Hkv, Dh); valid (B, C) bool per slot.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    *,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bchd->bhgc", qg, kf) * (dh**-0.5)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    scores = jnp.where(valid[:, None, None, :], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgc,bchd->bhgd", probs, vf)
+    return out.reshape(b, hq, dh).astype(q.dtype)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: flash attention (online softmax) with GQA/SWA/softcap.
+
+TPU adaptation: the classic GPU flash-attention blocking maps naturally onto
+TPU as (q-block × kv-block) grid tiles held in VMEM with the two matmuls on
+the MXU. The kv-block axis is the innermost (sequential) grid dimension, so
+the running max/denominator/accumulator live in VMEM scratch that persists
+across kv steps (the TPU revisiting pattern — the GPU warp-level reduction
+has no analogue here and is replaced by vector-unit reductions over lanes).
+
+Per (batch·head, q_block) the kernel visits only kv blocks that intersect the
+causal/window band — skipped blocks cost one predicated branch, not an MXU
+pass. Blocks straddling the band boundary apply the elementwise mask.
+
+Grid: (B·Hq, S/BQ, S/BK); block shapes (BQ, Dh) / (BK, Dh), 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas", "BQ", "BK"]
+
+BQ = 128
+BK = 128
+_NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: int, softcap: float, causal: bool,
+            num_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * BQ
+    k_start = ki * BK
+
+    # band intersection test (static per grid step at trace time is not
+    # possible — qi/ki are dynamic — so predicate with pl.when)
+    causal_live = (not causal) or (k_start <= q_start + BQ - 1)
+    if window > 0:
+        window_live = k_start + BK - 1 >= q_start - (window - 1)
+    else:
+        window_live = True
+
+    @pl.when(jnp.asarray(causal_live) & jnp.asarray(window_live))
+    def _visit():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, Dh)
+        k = k_ref[0].astype(jnp.float32)  # (BK, Dh)
+        v = v_ref[0].astype(jnp.float32)  # (BK, Dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (BQ, BK)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        mask = jnp.ones((BQ, BK), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]  # (BQ, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (m == -inf): exp(-inf - -inf) → nan
+        safe_m = jnp.where(m_new <= _NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - safe_m)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(
+            m_prev <= _NEG_INF / 2, jnp.zeros_like(m_prev), jnp.exp(m_prev - safe_m)
+        )
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = alpha * acc_scr[...] + pv
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        out_ref[0] = (acc_scr[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "softcap", "causal", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, S, Dh) — batch·q-heads flattened, S % BQ == 0
+    k: jax.Array,  # (BH, S, Dh) — already expanded to q-head count (GQA in ops)
+    v: jax.Array,
+    *,
+    scale: float,  # true (unpadded) head-dim scale
+    window: int = 0,
+    softcap: float = 0.0,
+    causal: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, dh = q.shape
+    nq, nk = s // BQ, s // BK
+    kern = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap, causal=causal,
+        num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, BQ, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, 1), jnp.float32),  # running max m
+            pltpu.VMEM((BQ, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((BQ, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

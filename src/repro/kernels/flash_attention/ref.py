@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention: exact causal/windowed GQA attention.
+
+Layout: q (B, Hq, S, Dh), k/v (B, Hkv, S, Dh) → out (B, Hq, S, Dh).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * (dh**-0.5)
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)
+    mask = pos[:, None] >= pos[None, :]
+    if window > 0:
+        mask &= pos[:, None] - pos[None, :] < window
+    scores = jnp.where(mask[None, None, None], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, s, dh).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: chunked Mamba-1 selective scan.
+
+TPU adaptation (DESIGN.md §3): the CUDA selective-scan kernel relies on
+warp-parallel prefix products in shared memory. On TPU we restructure as a
+*chunked* recurrence: the sequence is cut into VMEM-resident chunks along the
+innermost (sequential) grid axis; the (BD, ds) state carries across chunks in
+VMEM scratch and never round-trips HBM. Within a chunk the recurrence is a
+``fori_loop`` of (BD, ds) vector ops on the VPU — u/dt/B/C chunk tiles are
+read from HBM exactly once, which is the memory-bound optimum for this op.
+
+Layouts (ops.py transposes): u, dt (B, di, S); b, c (B, ds, S); y (B, di, S).
+Grid: (B, di/BD, S/CS); state scratch (BD, ds).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mamba_scan_pallas", "BD", "CS"]
+
+BD = 256  # channel block
+CS = 128  # sequence chunk
+
+
+def _kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, num_chunks: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    u = u_ref[0]  # (BD, CS) f32
+    dt = dt_ref[0]
+    a = a_ref[...]  # (BD, ds)
+    b = b_ref[0]  # (ds, CS)
+    c = c_ref[0]  # (ds, CS)
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = jax.lax.dynamic_slice(dt, (0, t), (dt.shape[0], 1))  # (BD,1)
+        u_t = jax.lax.dynamic_slice(u, (0, t), (u.shape[0], 1))
+        b_t = jax.lax.dynamic_slice(b, (0, t), (b.shape[0], 1))  # (ds,1)
+        c_t = jax.lax.dynamic_slice(c, (0, t), (c.shape[0], 1))
+        a_bar = jnp.exp(dt_t * a)  # (BD, ds)
+        h = a_bar * h + (dt_t * u_t) * b_t.T  # (BD, ds)
+        y_t = jnp.sum(h * c_t.T, axis=1, keepdims=True)  # (BD, 1)
+        y = jax.lax.dynamic_update_slice(y, y_t, (0, t))
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros_like(u)
+    h_fin, y = jax.lax.fori_loop(0, u.shape[1], step, (h0, y0))
+    h_scr[...] = h_fin
+    y_ref[0] = y
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan_pallas(
+    u: jax.Array,  # (B, DI, S) f32, DI % BD == 0, S % CS == 0
+    dt: jax.Array,  # (B, DI, S)
+    a: jax.Array,  # (DI, ds)
+    b: jax.Array,  # (B, ds, S)
+    c: jax.Array,  # (B, ds, S)
+    interpret: bool = True,
+) -> jax.Array:
+    bsz, di, s = u.shape
+    ds = a.shape[1]
+    grid = (bsz, di // BD, s // CS)
+    kern = functools.partial(_kernel, num_chunks=s // CS)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BD, CS), lambda bi, d, si: (bi, d, si)),
+            pl.BlockSpec((1, BD, CS), lambda bi, d, si: (bi, d, si)),
+            pl.BlockSpec((BD, ds), lambda bi, d, si: (d, 0)),
+            pl.BlockSpec((1, ds, CS), lambda bi, d, si: (bi, 0, si)),
+            pl.BlockSpec((1, ds, CS), lambda bi, d, si: (bi, 0, si)),
+        ],
+        out_specs=pl.BlockSpec((1, BD, CS), lambda bi, d, si: (bi, d, si)),
+        out_shape=jax.ShapeDtypeStruct((bsz, di, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BD, ds), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, a, b, c)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+u, dt: (B, S, di); a: (di, ds); b_t, c_t: (B, S, ds) → y (B, S, di), all f32.
+Matches the lax.scan path in repro.models.mamba exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["selective_scan_ref"]
+
+
+def selective_scan_ref(u, dt, a, b_t, c_t):
+    def step(h, inp):
+        u_t, dt_t, b_tt, c_tt = inp
+        a_bar = jnp.exp(dt_t[:, :, None] * a[None, :, :])
+        h = a_bar * h + (dt_t * u_t)[:, :, None] * b_tt[:, None, :]
+        y_t = jnp.einsum("bis,bs->bi", h, c_tt)
+        return h, y_t
+
+    bsz, _, di = u.shape
+    ds = a.shape[1]
+    h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (u.swapaxes(0, 1), dt.swapaxes(0, 1), b_t.swapaxes(0, 1),
+         c_t.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused Kumaraswamy-warp + Matérn-5/2 ARD gram matrix.
+
+TPU adaptation (DESIGN.md §3): the GP rebuilds K (n×m, O(n²d)) once per MCMC
+sample. The reference implementation makes three HBM passes (warp, pairwise
+distance, Matérn response) and materializes an (n, m, d) difference tensor.
+This kernel streams (TILE_N, d) / (TILE_M, d) input tiles into VMEM once,
+applies the warp in-register, computes the scaled squared distance with an
+MXU matmul via the ‖a‖²+‖b‖²−2a·bᵀ expansion, and writes only the (128, 128)
+output tile — a single HBM pass, MXU-aligned.
+
+Padding contract (enforced by ops.py): rows padded to TILE multiples, feature
+dim padded to a lane multiple with inv_ell = 0 (padded features contribute
+nothing to distances); padded rows are trimmed by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["matern52_gram_pallas", "TILE_N", "TILE_M"]
+
+TILE_N = 128
+TILE_M = 128
+_SQRT5 = 2.2360679774997896
+_EPS = 1e-6
+
+
+def _kernel(
+    x1_ref,  # (TILE_N, dpad) f32
+    x2_ref,  # (TILE_M, dpad) f32
+    inv_ell_ref,  # (1, dpad) f32 — 0 on padded features
+    warp_a_ref,  # (1, dpad) f32
+    warp_b_ref,  # (1, dpad) f32
+    warp_on_ref,  # (1, dpad) f32 — 1.0 where warping applies
+    amp2_ref,  # (1, 1) f32
+    out_ref,  # (TILE_N, TILE_M) f32
+):
+    x1 = x1_ref[...]
+    x2 = x2_ref[...]
+    a = warp_a_ref[...]
+    b = warp_b_ref[...]
+    on = warp_on_ref[...]
+    inv_ell = inv_ell_ref[...]
+
+    def warp(x):
+        xc = jnp.clip(x, _EPS, 1.0 - _EPS)
+        xa = jnp.clip(jnp.exp(a * jnp.log(xc)), _EPS, 1.0 - _EPS)
+        w = 1.0 - jnp.exp(b * jnp.log1p(-xa))
+        return on * w + (1.0 - on) * x
+
+    s1 = warp(x1) * inv_ell  # (TILE_N, dpad)
+    s2 = warp(x2) * inv_ell  # (TILE_M, dpad)
+
+    # ‖a−b‖² = ‖a‖² + ‖b‖² − 2 a·bᵀ  — the cross term runs on the MXU.
+    n1 = jnp.sum(s1 * s1, axis=1, keepdims=True)  # (TILE_N, 1)
+    n2 = jnp.sum(s2 * s2, axis=1, keepdims=True)  # (TILE_M, 1)
+    cross = jax.lax.dot_general(
+        s1, s2,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TILE_N, TILE_M)
+    r2 = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    r = jnp.sqrt(r2)
+    amp2 = amp2_ref[0, 0]
+    out_ref[...] = amp2 * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matern52_gram_pallas(
+    x1: jax.Array,  # (n_pad, dpad) f32, n_pad % TILE_N == 0
+    x2: jax.Array,  # (m_pad, dpad) f32, m_pad % TILE_M == 0
+    inv_ell: jax.Array,  # (1, dpad)
+    warp_a: jax.Array,  # (1, dpad)
+    warp_b: jax.Array,  # (1, dpad)
+    warp_on: jax.Array,  # (1, dpad)
+    amp2: jax.Array,  # (1, 1)
+    interpret: bool = True,
+) -> jax.Array:
+    n, d = x1.shape
+    m, _ = x2.shape
+    grid = (n // TILE_N, m // TILE_M)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_N, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(x1, x2, inv_ell, warp_a, warp_b, warp_on, amp2)

@@ -1,0 +1,75 @@
+"""Jitted public wrapper for the Matérn-5/2 Pallas gram kernel.
+
+Handles padding (rows → TILE multiples; features → lane multiple with
+inv_ell = 0 so padded features are inert), parameter packing, and trimming.
+``interpret=True`` on CPU (this container); on a real TPU fleet pass
+``interpret=False`` (the default flips on TPU platforms).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp.params import GPHyperParams
+from repro.kernels.matern52.kernel import TILE_M, TILE_N, matern52_gram_pallas
+
+__all__ = ["matern52_gram"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def matern52_gram(
+    x1: jax.Array,
+    x2: jax.Array,
+    params: GPHyperParams,
+    *,
+    warp: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Drop-in replacement for ``matern52_ard`` (same semantics/shapes)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n, d = x1.shape
+    m = x2.shape[0]
+    npad = -(-n // TILE_N) * TILE_N
+    mpad = -(-m // TILE_M) * TILE_M
+    dpad = max(8, -(-d // 8) * 8)
+
+    x1p = _pad_to(_pad_to(x1.astype(jnp.float32), npad, 0), dpad, 1)
+    x2p = _pad_to(_pad_to(x2.astype(jnp.float32), mpad, 0), dpad, 1)
+
+    inv_ell = _pad_to(
+        jnp.exp(-params.log_lengthscale.astype(jnp.float32))[None, :], dpad, 1
+    )  # padded features: inv_ell = 0 ⇒ inert
+    a = jnp.exp(params.log_warp_a.astype(jnp.float32))[None, :]
+    b = jnp.exp(params.log_warp_b.astype(jnp.float32))[None, :]
+    identity = (
+        (jnp.abs(params.log_warp_a) < 1e-7) & (jnp.abs(params.log_warp_b) < 1e-7)
+    )[None, :]
+    on = jnp.where(identity, 0.0, 1.0).astype(jnp.float32)
+    if not warp:
+        on = jnp.zeros_like(on)
+    a = _pad_to(a, dpad, 1)
+    b = _pad_to(b, dpad, 1)
+    on = _pad_to(on, dpad, 1)
+    amp2 = jnp.exp(2.0 * params.log_amplitude.astype(jnp.float32)).reshape(1, 1)
+
+    out = matern52_gram_pallas(
+        x1p, x2p, inv_ell, a, b, on, amp2, interpret=interpret
+    )
+    return out[:n, :m].astype(x1.dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused Matérn-5/2 ARD gram kernel.
+
+This is the BO engine's hot spot (DESIGN.md §5): the gram matrix is O(n²d)
+and rebuilt once per MCMC sample per decision. The oracle delegates to
+``repro.core.gp.kernels.matern52_ard`` so the Pallas kernel is validated
+against exactly what the GP uses.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.gp.kernels import matern52_ard
+from repro.core.gp.params import GPHyperParams
+
+__all__ = ["matern52_gram_ref"]
+
+
+def matern52_gram_ref(
+    x1: jax.Array,
+    x2: jax.Array,
+    params: GPHyperParams,
+    *,
+    warp: bool = True,
+) -> jax.Array:
+    return matern52_ard(x1, x2, params, warp=warp)

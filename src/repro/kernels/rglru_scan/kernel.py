@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: chunked RG-LRU linear recurrence (Griffin).
+
+Same chunked-recurrence structure as the Mamba kernel: the (BD,) per-channel
+state persists across sequence chunks in VMEM scratch; each a/g chunk tile
+streams from HBM exactly once. Within a chunk the recurrence runs as a
+per-step loop of (BD, 1) vector ops — deliberately NOT the log-space
+prefix-product form (h_t = A_t·h₀ + A_t·Σ g_τ/A_τ), whose cumulative decay
+products A_t = Π a_τ underflow f32 over long chunks for small decays. The
+serial form is exact up to f32 rounding and still memory-bound-optimal.
+
+Layout: a, g (B, di, S); grid (B, di/BD, S/CS); carry scratch (BD, 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rglru_scan_pallas", "BD", "CS"]
+
+BD = 256
+CS = 128  # per-step loop below — no underflow constraint
+
+
+def _kernel(a_ref, g_ref, h_ref, h_scr):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0]  # (BD, CS)
+    g = g_ref[0]
+
+    def step(t, carry):
+        h, out = carry
+        a_t = jax.lax.dynamic_slice(a, (0, t), (a.shape[0], 1))
+        g_t = jax.lax.dynamic_slice(g, (0, t), (g.shape[0], 1))
+        h = a_t * h + g_t
+        out = jax.lax.dynamic_update_slice(out, h, (0, t))
+        return h, out
+
+    h0 = h_scr[...]  # (BD, 1)
+    out0 = jnp.zeros_like(a)
+    h_fin, out = jax.lax.fori_loop(0, a.shape[1], step, (h0, out0))
+    h_scr[...] = h_fin
+    h_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan_pallas(
+    a: jax.Array,  # (B, DI, S) f32
+    g: jax.Array,  # (B, DI, S) f32
+    interpret: bool = True,
+) -> jax.Array:
+    bsz, di, s = a.shape
+    grid = (bsz, di // BD, s // CS)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BD, CS), lambda b, d, si: (b, d, si)),
+            pl.BlockSpec((1, BD, CS), lambda b, d, si: (b, d, si)),
+        ],
+        out_specs=pl.BlockSpec((1, BD, CS), lambda b, d, si: (b, d, si)),
+        out_shape=jax.ShapeDtypeStruct((bsz, di, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BD, 1), jnp.float32)],
+        interpret=interpret,
+    )(a, g)

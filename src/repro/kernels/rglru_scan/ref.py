@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence.
+
+a, gated: (B, S, di) f32 → h (B, S, di): h_t = a_t ⊙ h_{t−1} + gated_t.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan_ref"]
+
+
+def rglru_scan_ref(a: jax.Array, gated: jax.Array) -> jax.Array:
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    h0 = jnp.zeros(a.shape[::2], jnp.float32)  # (B, di)
+    _, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), gated.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run: lower + compile every (arch × shape × mesh) cell ----
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+#       --shape train_4k [--multi-pod] [--out results/dryrun]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all
+#
+# Each cell lowers the right step function (train_step / prefill / decode)
+# with full production shardings on ShapeDtypeStruct stand-ins (no real
+# allocation), compiles it, prints memory_analysis()/cost_analysis(), and
+# writes one JSON record for the roofline report.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
+
+from repro.configs import SHAPES, get_config, input_specs, list_archs  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeConfig  # noqa: E402
+from repro.distributed.sharding import ShardingRules, logical_to_spec  # noqa: E402
+from repro.launch.hlo_analysis import collective_bytes, op_census  # noqa: E402
+from repro.launch.hlo_static import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import V5E, model_flops, roofline_terms, count_params  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.training.optimizer import AdamWConfig, adamw_init  # noqa: E402
+from repro.training.train_step import TrainState, init_train_state, make_train_step  # noqa: E402
+
+SKIP_LONG500K = {
+    # pure full-attention archs: O(seq·layers) decode caches, no windowing —
+    # see DESIGN.md §4 for the rationale per arch.
+    "musicgen-large": "pure full attention (48L MHA): no sub-quadratic decode path",
+    "internvl2-1b": "pure full attention: no sub-quadratic decode path",
+    "granite-moe-1b-a400m": "pure full attention: no sub-quadratic decode path",
+    "qwen3-moe-235b-a22b": "pure full attention: no sub-quadratic decode path",
+    "qwen2.5-3b": "pure full attention: no sub-quadratic decode path",
+    "minitron-4b": "pure full attention: no sub-quadratic decode path",
+    "gemma3-27b": "5:1 local:global — 10 global layers still need a full "
+                  "500k cache; arch specified for 128k (DESIGN.md §4)",
+}
+
+
+def eligible(arch: str, shape_name: str) -> Optional[str]:
+    """Returns a skip reason or None."""
+    if shape_name == "long_500k" and arch in SKIP_LONG500K:
+        return SKIP_LONG500K[arch]
+    return None
+
+
+def _batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], rules, mesh):
+    out = {}
+    for k, v in specs.items():
+        nd = len(v.shape)
+        if nd == 0:
+            out[k] = NamedSharding(mesh, PartitionSpec())
+            continue
+        axes = ("batch",) + (None,) * (nd - 1)
+        out[k] = NamedSharding(mesh, logical_to_spec(axes, v.shape, rules, mesh))
+    return out
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    rules: Optional[ShardingRules] = None,
+    cfg_override=None,
+    opt_override: Optional[AdamWConfig] = None,
+    compile_only: bool = False,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; return the result record."""
+    t_start = time.time()
+    shape = SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch)
+    rules = rules or ShardingRules()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.shape.values()),
+        "chips": chips,
+        "multi_pod": multi_pod,
+        "status": "UNKNOWN",
+    }
+    reason = eligible(arch, shape_name)
+    if reason is not None:
+        record["status"] = "SKIP"
+        record["reason"] = reason
+        return record
+
+    # --- decode cache sharding policy: shard kv heads over the model axis
+    # when divisible, else shard the cache sequence axis (context parallelism)
+    # — replicating a 32k×128-seq cache over 16 model shards does not fit HBM.
+    if shape.kind == "decode" and cfg.num_kv_heads and cfg.num_kv_heads % 16 != 0:
+        rules = dataclasses.replace(rules, cache_seq="model")
+    # --- attention interior policy: when q-heads don't divide the TP width
+    # (internvl2: 14, minitron: 24), head sharding degrades to replication;
+    # shard the attention interior by sequence instead (8–10× memory-term win,
+    # EXPERIMENTS.md §Perf side fixes).
+    model_ways = mesh.shape.get("model", 1)
+    if (
+        shape.kind in ("train", "prefill")
+        and cfg.num_heads
+        and cfg.num_heads % model_ways != 0
+        and rules.attn_seq is None
+    ):
+        rules = dataclasses.replace(rules, attn_seq="model")
+
+    model = build_model(cfg, rules, mesh)
+    specs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(specs, rules, mesh)
+    param_specs = model.param_specs()
+    param_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+    abstract_params = model.abstract_params()
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = opt_override or AdamWConfig()
+            # clamp microbatches: per-microbatch global batch must remain
+            # divisible by the batch-sharding ways (pod × data)
+            batch_ways = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+            n_micro = max(1, min(cfg.microbatches, shape.global_batch // batch_ways))
+            while shape.global_batch % n_micro or (shape.global_batch // n_micro) % batch_ways:
+                n_micro -= 1
+            step_fn = make_train_step(model, opt_cfg, microbatches=n_micro)
+            abstract_state = jax.eval_shape(
+                lambda: TrainState(
+                    params=model.init(jax.random.PRNGKey(0)),
+                    opt=adamw_init(model.init(jax.random.PRNGKey(0)), opt_cfg),
+                )
+            )
+            state_sh = TrainState(
+                params=param_sh,
+                opt={
+                    "m": param_sh,
+                    "v": param_sh,
+                    "step": NamedSharding(mesh, PartitionSpec()),
+                },
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(abstract_state, specs)
+        elif shape.kind == "prefill":
+            cache_len = shape.seq_len
+            fn = lambda p, inputs: model.prefill(p, inputs, cache_len)  # noqa: E731
+            jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh["inputs"]))
+            lowered = jitted.lower(abstract_params, specs["inputs"])
+        else:  # decode
+            cache_len = shape.seq_len
+            bsz = shape.global_batch
+            abstract_cache = jax.eval_shape(
+                lambda: model.init_cache(bsz, cache_len)
+            )
+            cache_specs = model.cache_specs(bsz, cache_len)
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), cache_specs,
+                is_leaf=lambda x: isinstance(x, PartitionSpec),
+            )
+            fn = lambda p, cache, inputs, t: model.decode_step(p, cache, inputs, t)  # noqa: E731
+            jitted = jax.jit(
+                fn,
+                in_shardings=(
+                    param_sh, cache_sh, batch_sh["inputs"],
+                    NamedSharding(mesh, PartitionSpec()),
+                ),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                abstract_params, abstract_cache, specs["inputs"], specs["t"]
+            )
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    # ----------------------------------------------------------- analysis
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    census = op_census(hlo)
+    # trip-count-aware static analysis (cost_analysis counts while bodies
+    # once — see hlo_static.py)
+    stats = analyze_hlo(hlo).to_json()
+    hlo_flops = float(stats["flops"])
+    hlo_bytes = float(stats["bytes"])
+    coll = stats["collective_bytes"]
+
+    terms = roofline_terms(
+        hlo_flops, hlo_bytes, float(coll.get("total", 0)), chips, cfg, shape
+    )
+    record.update(
+        status="OK",
+        lower_s=round(t_lower - t_start, 2),
+        compile_s=round(t_compile - t_lower, 2),
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=coll,
+        raw_cost_analysis={
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")
+        },
+        op_census=census,
+        op_flops=stats["op_flops"],
+        op_bytes=stats["op_bytes"],
+        roofline=terms,
+        params=count_params(cfg),
+    )
+    if mem is not None:
+        for attr in (
+            "temp_size_in_bytes",
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                record[attr] = int(v)
+        live = (
+            record.get("temp_size_in_bytes", 0)
+            + record.get("argument_size_in_bytes", 0)
+            - record.get("alias_size_in_bytes", 0)
+        )
+        record["device_bytes_estimate"] = int(live)
+        record["fits_hbm_16g"] = bool(live < 16e9)
+    return record
+
+
+def print_record(r: Dict[str, Any]) -> None:
+    if r["status"] == "SKIP":
+        print(f"[SKIP] {r['arch']} × {r['shape']} ({r['mesh']}): {r['reason']}")
+        return
+    t = r["roofline"]
+    print(
+        f"[OK] {r['arch']} × {r['shape']} ({r['mesh']}): "
+        f"lower {r['lower_s']}s compile {r['compile_s']}s | "
+        f"compute {t['compute_s']:.4f}s memory {t['memory_s']:.4f}s "
+        f"collective {t['collective_s']:.4f}s → {t['bottleneck']}-bound | "
+        f"useful {t.get('useful_ratio', 0):.2f} roofline {t.get('roofline_fraction', 0):.3f} | "
+        f"mem/dev {r.get('device_bytes_estimate', 0)/1e9:.2f} GB "
+        f"fits16G={r.get('fits_hbm_16g')}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    with open(path) as f:
+                        rec = json.load(f)
+                    print_record(rec)
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, multi_pod=mp)
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "FAIL", "error": traceback.format_exc(limit=6),
+                    }
+                    failures += 1
+                    print(f"[FAIL] {arch} × {shape}: {e}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] != "FAIL":
+                    print_record(rec)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

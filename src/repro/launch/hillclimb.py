@@ -1,0 +1,159 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# --- §Perf hillclimb driver --------------------------------------------------
+#
+#   PYTHONPATH=src python -m repro.launch.hillclimb --cell falcon-mamba
+#
+# Each target cell has an ordered list of VARIANTS (hypothesis → change).
+# The driver lowers+compiles each variant, extracts the roofline terms via
+# the trip-count-aware HLO analyzer, and writes results/perf/<cell>__<v>.json.
+# The hypothesis→before→after→verdict narrative lives in EXPERIMENTS.md §Perf.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+from typing import Callable, Dict, List, Optional, Tuple  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import MambaSettings, ModelConfig, MoESettings  # noqa: E402
+from repro.distributed.sharding import ShardingRules  # noqa: E402
+from repro.launch.dryrun import lower_cell, print_record  # noqa: E402
+
+Variant = Tuple[str, Callable[[ModelConfig], ModelConfig], Optional[ShardingRules]]
+
+
+def _mamba_unroll(k: int):
+    def f(cfg: ModelConfig) -> ModelConfig:
+        return dataclasses.replace(
+            cfg, mamba=dataclasses.replace(cfg.mamba, time_unroll=k)
+        )
+    return f
+
+
+def _rglru_unroll(k: int):
+    def f(cfg):
+        return dataclasses.replace(
+            cfg, rglru=dataclasses.replace(cfg.rglru, time_unroll=k)
+        )
+    return f
+
+
+def _mb(n: int):
+    return lambda cfg: dataclasses.replace(cfg, microbatches=n)
+
+
+def _bf16_params(cfg):
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def _capacity(cf: float):
+    return lambda cfg: dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf)
+    )
+
+
+def _chain(*fns):
+    def f(cfg):
+        for g in fns:
+            cfg = g(cfg)
+        return cfg
+    return f
+
+
+SP_RULES = ShardingRules(seq="model")
+
+CELLS: Dict[str, Tuple[str, str, List[Variant]]] = {
+    # worst roofline fraction: memory term 4012s from the 4096-step scan carry
+    "falcon-mamba": ("falcon-mamba-7b", "train_4k", [
+        ("unroll8", _mamba_unroll(8), None),
+        ("unroll32", _mamba_unroll(32), None),
+        ("unroll128", _mamba_unroll(128), None),
+        ("unroll32_sp", _mamba_unroll(32), SP_RULES),
+    ]),
+    # most collective-bound: X=425s (FSDP regathers of fp32 expert weights
+    # inside the microbatch loop + MoE dispatch)
+    "qwen3-moe": ("qwen3-moe-235b-a22b", "train_4k", [
+        ("bf16_params", _bf16_params, None),
+        ("mb8", _mb(8), None),
+        ("bf16_mb8", _chain(_bf16_params, _mb(8)), None),
+        ("bf16_mb8_cap1", _chain(_bf16_params, _mb(8), _capacity(1.0)), None),
+        ("bf16_mb8_sp", _chain(_bf16_params, _mb(8)), SP_RULES),
+    ]),
+    # most representative of the paper's end-to-end use (dense LM training)
+    "qwen2.5": ("qwen2.5-3b", "train_4k", [
+        ("sp", None, SP_RULES),
+        ("mb2", _mb(2), None),
+        ("sp_mb2", _mb(2), SP_RULES),
+        ("sp_mb1", _mb(1), SP_RULES),
+    ]),
+    # side target: recurrentgemma prefill (M=283s scan carry)
+    "recurrentgemma": ("recurrentgemma-9b", "train_4k", [
+        ("unroll32", _rglru_unroll(32), None),
+    ]),
+}
+
+
+# --- iteration-2 variants (added after the HLO attribution pass;
+#     "bf16b" = the cast-before-gather / bf16-SP-boundary code change) -------
+CELLS["qwen2.5"][2].extend([
+    ("sp_mb1_bf16b", _mb(1), SP_RULES),
+    ("base_bf16b", None, None),
+    # iteration 3 (pre-norm boundary) refuted — reverted; iteration 4:
+    # bf16 embed-table storage only, on top of the iteration-2 state
+    ("sp_mb1_v4_bf16embed", _chain(_mb(1), lambda c: dataclasses.replace(c, embed_dtype="bfloat16")), SP_RULES),
+    # iteration 5: optimization_barrier pins boundary reshards to bf16
+    ("sp_mb1_v5_barrier", _mb(1), SP_RULES),
+])
+CELLS["qwen3-moe"][2].extend([
+    ("bf16p_mb8_bf16b", _chain(_bf16_params, _mb(8)), None),
+    # iteration 3: locally-slotted dispatch — scatter stays shard-local, the
+    # (E,C,D) all-reduce becomes an all-to-all of routed tokens
+    ("localdispatch", lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, dispatch="local")), None),
+    ("localdispatch_bf16p", _chain(
+        lambda c: dataclasses.replace(c, moe=dataclasses.replace(c.moe, dispatch="local")),
+        _bf16_params), None),
+    # iteration 4: 4-D reshard (no reshape) so GSPMD emits all-to-all
+    ("localdispatch_v4", lambda c: dataclasses.replace(
+        c, moe=dataclasses.replace(c.moe, dispatch="local")), None),
+])
+
+
+def run_cell(key: str, out_dir: str = "results/perf") -> None:
+    arch, shape, variants = CELLS[key]
+    os.makedirs(out_dir, exist_ok=True)
+    records = []
+    for name, cfg_fn, rules in variants:
+        path = os.path.join(out_dir, f"{arch}__{shape}__{name}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                rec = json.load(f)
+            print_record(rec)
+            records.append((name, rec))
+            continue
+        cfg = get_config(arch)
+        if cfg_fn is not None:
+            cfg = cfg_fn(cfg)
+        rec = lower_cell(arch, shape, multi_pod=False, rules=rules,
+                         cfg_override=cfg)
+        rec["variant"] = name
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print_record(rec)
+        records.append((name, rec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS) + ["all"], default="all")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    keys = list(CELLS) if args.cell == "all" else [args.cell]
+    for k in keys:
+        print(f"=== hillclimb: {k} ===")
+        run_cell(k, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Post-SPMD HLO analysis: collective bytes, op census, roofline inputs.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled HLO text and sum the *operand* bytes of every communication op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+
+Bytes are per-participant (the partitioned module is per-device), which is
+the right numerator for the link-bandwidth roofline term.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+__all__ = ["collective_bytes", "op_census", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g. "bf16[16,4096,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def _result_shapes(line: str) -> list:
+    """Shapes on the LHS of an HLO instruction (handles tuples)."""
+    # LHS looks like: "  %name = bf16[1,2]{1,0} all-gather(...)" or
+    # "  %name = (bf16[..], bf16[..]) all-to-all(...)"
+    try:
+        lhs, _ = line.split("=", 1)[0], line.split("=", 1)[1]
+    except IndexError:
+        return []
+    rhs = line.split("=", 1)[1].strip()
+    if rhs.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        inner = rhs[1:end]
+        return [s for s in re.split(r",\s*(?![0-9])", inner)]
+    # single shape: up to first space
+    return [rhs.split(" ", 1)[0]]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind. The result of an all-gather /
+    all-to-all etc. is what actually crosses links (modulo algorithm
+    constants); using result shapes is uniform across kinds."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1].lstrip()
+        # find the op name: first token after the shape(s)
+        for kind in _COLLECTIVE_KINDS:
+            # op names appear as e.g. "all-gather(", "all-reduce-start("
+            if f" {kind}(" in rhs or f" {kind}-start(" in rhs or rhs.startswith(f"{kind}("):
+                for s in _result_shapes(stripped):
+                    out[kind] += _shape_bytes(s)
+                break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def op_census(hlo_text: str) -> Dict[str, int]:
+    """Count occurrences of interesting ops (fusion/while/dot/...)."""
+    kinds = [
+        "fusion", "while", "dot", "convolution", "scatter", "gather",
+        "dynamic-update-slice", "transpose", "reshape", "copy",
+    ] + list(_COLLECTIVE_KINDS)
+    census: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        for k in kinds:
+            if f" {k}(" in rhs or rhs.lstrip().startswith(f"{k}("):
+                census[k] += 1
+                break
+    return dict(census)

@@ -1,0 +1,347 @@
+"""Trip-count-aware static analysis of post-SPMD HLO.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scanned-layer models by ~num_layers × microbatches. The compiled
+HLO text, however, carries ``backend_config={"known_trip_count":{"n":...}}``
+on every while op — so we reconstruct exact per-device totals by walking the
+computation graph from ENTRY and multiplying per-computation costs by the
+product of enclosing trip counts:
+
+  * FLOPs: ``dot`` ops contribute 2·|result|·K (K = product of contracting
+    dims), elementwise/reduce ops contribute |result|;
+  * HBM bytes: every materializing instruction contributes result+operand
+    bytes at its call site (fusion internals are free — the fusion boundary
+    is the HBM traffic, which is exactly XLA's model);
+  * collective bytes, per kind, with multiplicity (feeding the ICI roofline
+    term).
+
+This is *the* profiler for the dry-run — no real TPU wall clock exists here,
+so §Perf hillclimbing reads these numbers plus the lowered IR.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.hlo_analysis import DTYPE_BYTES
+
+__all__ = ["analyze_hlo", "HLOStats"]
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*(.+?)\s*\{\s*$")
+_INSTR_LHS = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OP_NAME = re.compile(r"\s*([a-z][\w\-]*)\(")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "log-plus-one", "exponential-minus-one",
+    "rsqrt", "sqrt", "negate", "abs", "sign", "floor", "ceil", "compare",
+    "select", "and", "or", "not", "xor", "convert", "clamp", "sine", "cosine",
+    "erf", "atan2", "reduce", "reduce-window", "cumsum",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """(elements, bytes) summed over a (possibly tuple) shape string."""
+    total_e = total_b = 0
+    for m in _SHAPE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * DTYPE_BYTES[dtype]
+    return total_e, total_b
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # operands + attrs (raw tail of the line)
+
+    def operands(self) -> List[str]:
+        # take the parenthesized operand list right after the op name
+        depth, out, cur = 0, [], []
+        for ch in self.rest:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    out.append("".join(cur))
+                    break
+            if depth >= 1:
+                cur.append(ch)
+        if not out:
+            return []
+        parts = []
+        d = 0
+        token = []
+        for ch in out[0]:
+            if ch == "(" or ch == "{" or ch == "[":
+                d += 1
+            elif ch == ")" or ch == "}" or ch == "]":
+                d -= 1
+            if ch == "," and d == 0:
+                parts.append("".join(token).strip())
+                token = []
+            else:
+                token.append(ch)
+        if token:
+            parts.append("".join(token).strip())
+        return [p.lstrip("%") for p in parts if p.strip().startswith("%")]
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    op_flops: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    op_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    def to_json(self) -> Dict:
+        coll = dict(self.collective)
+        coll["total"] = sum(coll.values())
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": coll,
+            "op_flops": dict(
+                sorted(self.op_flops.items(), key=lambda kv: -kv[1])[:20]
+            ),
+            "op_bytes": dict(
+                sorted(self.op_bytes.items(), key=lambda kv: -kv[1])[:20]
+            ),
+        }
+
+
+def _parse_computations(text: str):
+    comps: Dict[str, List[_Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    symbols: Dict[str, Dict[str, str]] = {}
+    for line in text.splitlines():
+        head = _COMP_HEAD.match(line)
+        if head:
+            cur = head.group(2)
+            comps[cur] = []
+            symbols[cur] = {}
+            if head.group(1):
+                entry = cur
+            # parameters declared in the header get shapes in symbol table
+            for pm in re.finditer(r"%?([\w.\-]+):\s*((?:\([^)]*\))|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", head.group(3)):
+                symbols[cur][pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[cur].append(ins)
+            symbols[cur][ins.name] = ins.shape
+    return comps, symbols, entry
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    m = _INSTR_LHS.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    # result type: either a balanced-paren tuple or a single shape
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape = rest[: end + 1]
+        tail = rest[end + 1:]
+    else:
+        sm = re.match(r"([a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)", rest)
+        if not sm:
+            return None
+        shape = sm.group(1)
+        tail = rest[sm.end():]
+    om = _OP_NAME.match(tail)
+    if not om:
+        return None
+    op = om.group(1)
+    return _Instr(name, shape, op, tail[om.end() - 1:])
+
+
+def analyze_hlo(text: str) -> HLOStats:
+    comps, symbols, entry = _parse_computations(text)
+    stats = HLOStats()
+    fusion_names = set()
+    # mark computations reachable only via fusion `calls=` (internal)
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "fusion":
+                m = _CALL_ATTR.search(ins.rest)
+                if m:
+                    fusion_names.add(m.group(1))
+
+    def dot_flops(ins: _Instr, table: Dict[str, str]) -> float:
+        elems, _ = _shape_elems_bytes(ins.shape)
+        k = 1
+        cm = _CONTRACT.search(ins.rest)
+        ops = ins.operands()
+        if cm and ops:
+            lhs_shape = table.get(ops[0], "")
+            sm = _SHAPE.search(lhs_shape)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                for ci in cm.group(1).split(","):
+                    if ci != "" and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * elems * k
+
+    def instr_traffic(ins: _Instr, table: Dict[str, str]) -> float:
+        _, rb = _shape_elems_bytes(ins.shape)
+        ops = ins.operands()
+        # In-place update ops: traffic is the updated slice (read+write), not
+        # the whole aliased buffer — XLA aliases scan/map accumulators.
+        if ins.op == "dynamic-update-slice" and len(ops) >= 2:
+            _, ub = _shape_elems_bytes(table.get(ops[1], ""))
+            return 2.0 * ub
+        if ins.op == "dynamic-slice":
+            return 2.0 * rb  # read slice + write result
+        if ins.op == "fusion":
+            # loop fusions rooted in dynamic-update-slice write only the
+            # update; the aliased buffer operand is neither fully read nor
+            # fully written.
+            m = _CALL_ATTR.search(ins.rest)
+            root = _fusion_root(m.group(1)) if m else None
+            if root is not None and root.op == "dynamic-update-slice":
+                rops = root.operands()
+                _, ub = _shape_elems_bytes(
+                    symbols.get(m.group(1), {}).get(rops[1], "") if len(rops) > 1 else ""
+                )
+                total = 2.0 * ub
+                for op_name in ops:
+                    oshape = table.get(op_name, "")
+                    if oshape == ins.shape:
+                        continue  # aliased accumulator
+                    _, ob = _shape_elems_bytes(oshape)
+                    total += ob
+                return total
+        total = float(rb)
+        for op_name in ops:
+            _, ob = _shape_elems_bytes(table.get(op_name, ""))
+            total += ob
+        return total
+
+    def _fusion_root(comp_name: str) -> Optional[_Instr]:
+        instrs = comps.get(comp_name, [])
+        return instrs[-1] if instrs else None
+
+    def fusion_internal_flops(comp_name: str, mult: float) -> None:
+        for ins in comps.get(comp_name, []):
+            if ins.op == "dot":
+                f = dot_flops(ins, symbols[comp_name]) * mult
+                stats.flops += f
+                stats.op_flops["dot"] += f
+            elif ins.op in _ELEMENTWISE:
+                e, _ = _shape_elems_bytes(ins.shape)
+                stats.flops += e * mult
+                stats.op_flops[ins.op] += e * mult
+
+    visited_guard: List[Tuple[str, float]] = []
+
+    def walk(comp_name: str, mult: float) -> None:
+        table = symbols.get(comp_name, {})
+        for ins in comps.get(comp_name, []):
+            op = ins.op
+            if op in _NO_TRAFFIC:
+                continue
+            if op == "while":
+                tm = _TRIP.search(ins.rest)
+                trip = float(tm.group(1)) if tm else 1.0
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                if bm:
+                    walk(bm.group(1), mult * trip)
+                if cm:
+                    walk(cm.group(1), mult * trip)
+                continue
+            if op in ("call", "async-start"):
+                m = _CALL_ATTR.search(ins.rest)
+                if m:
+                    walk(m.group(1), mult)
+                continue
+            if op == "conditional":
+                bm = _BRANCHES.search(ins.rest)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult)
+                continue
+            # ---- leaf costs ------------------------------------------------
+            traffic = instr_traffic(ins, table) * mult
+            stats.bytes += traffic
+            stats.op_bytes[op] += traffic
+            if op == "fusion":
+                m = _CALL_ATTR.search(ins.rest)
+                if m:
+                    fusion_internal_flops(m.group(1), mult)
+                continue
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    _, rb = _shape_elems_bytes(ins.shape)
+                    # ring-algorithm traffic per participant: all-reduce moves
+                    # ~2× its payload (reduce-scatter + all-gather phases);
+                    # the others move ~1× their result.
+                    factor = 2.0 if kind == "all-reduce" else 1.0
+                    stats.collective[kind] += factor * rb * mult
+                    break
+            if op == "dot":
+                f = dot_flops(ins, table) * mult
+                stats.flops += f
+                stats.op_flops["dot"] += f
+            elif op in _ELEMENTWISE:
+                e, _ = _shape_elems_bytes(ins.shape)
+                stats.flops += e * mult
+                stats.op_flops[op] += e * mult
+
+    if entry:
+        walk(entry, 1.0)
+    return stats

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init —
+``dryrun.py`` must set XLA_FLAGS before any jax import).
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model") — a v5e pod.
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is an extra data-parallel dimension inside one trial; across
+trials it is the AMT slot pool (each pod evaluates a different HP config).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1×1 mesh over the real local device (CPU smoke tests with sharding
+    constraints enabled)."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))

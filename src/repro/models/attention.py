@@ -1,0 +1,182 @@
+"""Grouped-query attention: training/prefill forward and KV-cache decode.
+
+Variants covered (per the assigned architectures):
+  * GQA with arbitrary (num_heads, num_kv_heads), incl. MHA and MQA(kv=1)
+  * RoPE with configurable theta, partial-rotary fraction (Minitron), and a
+    separate local theta for sliding-window layers (Gemma-3)
+  * sliding-window attention ("swa" blocks) with ring-buffer decode caches
+  * attention logit soft-capping and QK RMS-norm
+  * optional QKV biases (Qwen)
+
+Implementations:
+  * ``impl="xla"`` — exact streaming attention: a ``lax.map`` over query
+    chunks bounds the score buffer to (B, H, chunk, S) so 32k-token prefill
+    never materializes the full S×S matrix (flash-style memory behaviour,
+    XLA-lowerable on any backend — used by the 512-device dry-run);
+  * ``impl="pallas"`` — the fused TPU kernel in repro/kernels/flash_attention
+    (online softmax, VMEM tiles; CPU validation via interpret mode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder, ShardCtx, apply_rope, rms_norm, rope_freqs, softcap
+
+__all__ = ["attention_params", "attention_fwd", "attention_decode", "init_kv_cache"]
+
+_NEG_INF = -2.0e38
+
+
+def attention_params(b: Builder, cfg) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": b.param("wq", (d, hq, dh), ("fsdp", "heads", "head_dim"),
+                      scale=d**-0.5),
+        "wk": b.param("wk", (d, hkv, dh), ("fsdp", "kv_heads", "head_dim"),
+                      scale=d**-0.5),
+        "wv": b.param("wv", (d, hkv, dh), ("fsdp", "kv_heads", "head_dim"),
+                      scale=d**-0.5),
+        "wo": b.param("wo", (hq, dh, d), ("heads", "head_dim", "fsdp"),
+                      scale=(hq * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = b.param("bq", (hq, dh), ("heads", "head_dim"), init="zeros")
+        p["bk"] = b.param("bk", (hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = b.param("bv", (hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = b.param("q_norm", (dh,), (None,), init="zeros")
+        p["k_norm"] = b.param("k_norm", (dh,), (None,), init="zeros")
+    return p
+
+
+def _project_qkv(x, p, cfg, positions, theta):
+    """x: (B,S,D) -> q (B,S,Hq,Dh), k/v (B,S,Hkv,Dh), roped + normed."""
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    inv_freq = rope_freqs(cfg.head_dim, theta, cfg.rope_fraction)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def _gqa_scores_to_out(q_chunk, k, v, mask, cfg):
+    """q_chunk: (B,C,Hq,Dh); k/v: (B,S,Hkv,Dh); mask: (B,C,S) bool."""
+    hkv, g = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    b, c, _, dh = q_chunk.shape
+    qg = q_chunk.reshape(b, c, hkv, g, dh)
+    scores = jnp.einsum("bchgd,bshd->bhgcs", qg, k).astype(jnp.float32)
+    scores = scores * (dh**-0.5)
+    if cfg.attn_softcap > 0:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_chunk.dtype)
+    out = jnp.einsum("bhgcs,bshd->bchgd", probs, v)
+    return out.reshape(b, c, cfg.num_heads, dh)
+
+
+def attention_fwd(
+    x: jax.Array,  # (B, S, D)
+    p: dict,
+    cfg,
+    ctx: ShardCtx,
+    positions: jax.Array,  # (B, S)
+    window: int = 0,  # 0 = global causal
+    theta: Optional[float] = None,
+    impl: str = "xla",
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training/prefill attention. Returns (out (B,S,D), (k, v) for caching)."""
+    theta = theta or cfg.rope_theta
+    q, k, v = _project_qkv(x, p, cfg, positions, theta)
+    q = ctx.constrain(q, ("batch", "attn_seq", "heads", None))
+    k = ctx.constrain(k, ("batch", "attn_seq", "kv_heads", None))
+    v = ctx.constrain(v, ("batch", "attn_seq", "kv_heads", None))
+    b, s, hq, dh = q.shape
+
+    if impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(q, k, v, window=window, softcap=cfg.attn_softcap)
+    else:
+        nchunks = max(1, s // q_chunk)
+        csz = s // nchunks
+        qc = q.reshape(b, nchunks, csz, hq, dh).swapaxes(0, 1)  # (N,B,C,H,Dh)
+        pc = positions.reshape(b, nchunks, csz).swapaxes(0, 1)  # (N,B,C)
+
+        def one_chunk(args):
+            q_i, pos_i = args
+            mask = pos_i[:, :, None] >= positions[:, None, :]  # causal
+            if window > 0:
+                mask &= pos_i[:, :, None] - positions[:, None, :] < window
+            return _gqa_scores_to_out(q_i, k, v, mask, cfg)
+
+        out = jax.lax.map(one_chunk, (qc, pc))  # (N,B,C,H,Dh)
+        out = out.swapaxes(0, 1).reshape(b, s, hq, dh)
+
+    out = ctx.constrain(out, ("batch", "attn_seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return ctx.constrain(y, ("batch", "seq", "embed")), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg, batch: int, cache_len: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    shape = (batch, cache_len, cfg.num_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def attention_decode(
+    x: jax.Array,  # (B, 1, D) current-token activations
+    p: dict,
+    cfg,
+    ctx: ShardCtx,
+    cache: Tuple[jax.Array, jax.Array],  # (B, C, Hkv, Dh) ×2
+    t: jax.Array,  # scalar int32 — current absolute position
+    window: int = 0,  # 0 = full cache; >0 = ring buffer of size C
+    theta: Optional[float] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One decode step. The cache stores *post-RoPE* keys. For window>0 the
+    cache is a ring buffer of size C=window (slot = position mod window)."""
+    theta = theta or cfg.rope_theta
+    k_cache, v_cache = cache
+    b, c, hkv, dh = k_cache.shape
+    positions = jnp.broadcast_to(t, (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(x, p, cfg, positions, theta)
+
+    slot = jnp.where(window > 0, t % jnp.maximum(c, 1), t).astype(jnp.int32)
+    zero = jnp.zeros((), slot.dtype)  # x64 mode: index dtypes must all match
+    idx = (zero, slot, zero, zero)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), idx)
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), idx)
+    k_cache = ctx.constrain(k_cache, ("batch", "cache_seq", "kv_heads", None))
+    v_cache = ctx.constrain(v_cache, ("batch", "cache_seq", "kv_heads", None))
+
+    # validity of each cache slot at time t
+    idx = jnp.arange(c, dtype=jnp.int32)
+    if window > 0:
+        # slot s holds absolute position p = t − ((t − s) mod C); valid if p ≥ 0
+        pos_of_slot = t - jnp.mod(t - idx, c)
+        valid = pos_of_slot >= jnp.maximum(0, t - window + 1)
+        valid &= pos_of_slot >= 0
+    else:
+        valid = idx <= t
+    mask = jnp.broadcast_to(valid[None, None, :], (b, 1, c))
+
+    out = _gqa_scores_to_out(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype), mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return ctx.constrain(y, ("batch", None, "embed")), (k_cache, v_cache)

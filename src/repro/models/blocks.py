@@ -1,0 +1,161 @@
+"""Decoder block: token mixer (attn/swa/mamba/rglru) + MLP (dense or MoE).
+
+One *block* = pre-norm mixer + residual, then (if the arch has an FFN)
+pre-norm MLP + residual. Gemma-3 style ``sandwich_norm`` adds post-norms on
+both sub-block outputs. Blocks are assembled by kind according to
+``cfg.block_pattern`` (see model.py for the period-scan layout).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attention_decode,
+    attention_fwd,
+    attention_params,
+    init_kv_cache,
+)
+from repro.models.common import Builder, ShardCtx, rms_norm
+from repro.models.mamba import init_mamba_cache, mamba_decode, mamba_fwd, mamba_params
+from repro.models.mlp import mlp_fwd, mlp_params, moe_fwd, moe_params
+from repro.models.rglru import (
+    init_rglru_cache,
+    rglru_decode,
+    rglru_fwd,
+    rglru_params,
+)
+
+__all__ = ["block_params", "block_fwd", "block_decode", "init_block_cache"]
+
+
+def _has_mlp(cfg) -> bool:
+    return cfg.moe is not None or cfg.d_ff > 0
+
+
+def block_params(b: Builder, cfg, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": b.param("ln1", (d,), ("embed",), init="zeros")}
+    if kind in ("attn", "swa"):
+        p["attn"] = attention_params(b.scope("attn"), cfg)
+    elif kind == "mamba":
+        p["mixer"] = mamba_params(b.scope("mamba"), cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_params(b.scope("rglru"), cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    if cfg.sandwich_norm:
+        p["ln1_post"] = b.param("ln1_post", (d,), ("embed",), init="zeros")
+    if _has_mlp(cfg):
+        p["ln2"] = b.param("ln2", (d,), ("embed",), init="zeros")
+        if cfg.moe is not None:
+            p["mlp"] = moe_params(b.scope("moe"), cfg)
+        else:
+            p["mlp"] = mlp_params(b.scope("mlp"), cfg)
+        if cfg.sandwich_norm:
+            p["ln2_post"] = b.param("ln2_post", (d,), ("embed",), init="zeros")
+    return p
+
+
+def _mixer_theta(cfg, kind: str) -> float:
+    if kind == "swa" and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def block_fwd(
+    x: jax.Array,
+    p: Dict[str, Any],
+    cfg,
+    kind: str,
+    ctx: ShardCtx,
+    positions: jax.Array,
+    impl: str = "xla",
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss). aux_loss is 0 for non-MoE blocks."""
+    aux = jnp.zeros((), jnp.float32)
+    # SP boundary on the bf16 *normed* tensor. (Constraining the residual
+    # input x instead was tried and refuted: the gathered full-seq residual
+    # then gets saved for backward under remat — 16× activation memory.
+    # See EXPERIMENTS.md §Perf iteration 3.)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = ctx.constrain(h, ("batch", "attn_seq", "embed"))
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        h, _ = attention_fwd(
+            h, p["attn"], cfg, ctx, positions, window=window,
+            theta=_mixer_theta(cfg, kind), impl=impl,
+        )
+    elif kind == "mamba":
+        h = mamba_fwd(h, p["mixer"], cfg, ctx, impl=impl)
+    elif kind == "rglru":
+        h = rglru_fwd(h, p["mixer"], cfg, ctx, impl=impl)
+    if cfg.sandwich_norm:
+        h = rms_norm(h, p["ln1_post"], cfg.norm_eps)
+    x = x + h
+
+    if _has_mlp(cfg):
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        h = ctx.constrain(h, ("batch", "attn_seq", "embed"))
+        if cfg.moe is not None:
+            h, aux = moe_fwd(h, p["mlp"], cfg, ctx)
+        else:
+            h = mlp_fwd(h, p["mlp"], cfg, ctx)
+        if cfg.sandwich_norm:
+            h = rms_norm(h, p["ln2_post"], cfg.norm_eps)
+        x = x + h
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int, dtype):
+    if kind == "attn":
+        return init_kv_cache(cfg, batch, cache_len, dtype)
+    if kind == "swa":
+        return init_kv_cache(cfg, batch, min(cache_len, cfg.window), dtype)
+    if kind == "mamba":
+        return init_mamba_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode(
+    x: jax.Array,
+    p: Dict[str, Any],
+    cfg,
+    kind: str,
+    ctx: ShardCtx,
+    cache,
+    t: jax.Array,
+) -> Tuple[jax.Array, Any]:
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "swa"):
+        window = cfg.window if kind == "swa" else 0
+        h, cache = attention_decode(
+            h, p["attn"], cfg, ctx, cache, t, window=window,
+            theta=_mixer_theta(cfg, kind),
+        )
+    elif kind == "mamba":
+        h, cache = mamba_decode(h, p["mixer"], cfg, ctx, cache)
+    elif kind == "rglru":
+        h, cache = rglru_decode(h, p["mixer"], cfg, ctx, cache)
+    if cfg.sandwich_norm:
+        h = rms_norm(h, p["ln1_post"], cfg.norm_eps)
+    x = x + h
+
+    if _has_mlp(cfg):
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            h, _ = moe_fwd(h, p["mlp"], cfg, ctx)
+        else:
+            h = mlp_fwd(h, p["mlp"], cfg, ctx)
+        if cfg.sandwich_norm:
+            h = rms_norm(h, p["ln2_post"], cfg.norm_eps)
+        x = x + h
+    return x, cache

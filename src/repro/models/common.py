@@ -1,0 +1,179 @@
+"""Shared model machinery: parameter builder, norms, RoPE, embeddings.
+
+No flax — parameters are plain nested dicts. The ``Builder`` runs the same
+model-construction code in two modes:
+
+  * ``init``  — materializes arrays (seeded deterministically per param path);
+  * ``spec``  — produces the *matching pytree of PartitionSpecs* from the
+    logical axis annotations, so pjit in_shardings can never drift from the
+    parameter structure.
+
+Dtype policy: parameters are stored in ``param_dtype`` (fp32 default) and cast
+to ``compute_dtype`` (bf16 default) at use — the standard TPU mixed-precision
+recipe (fp32 master weights live in the optimizer, see repro.training).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+
+__all__ = [
+    "Builder",
+    "ShardCtx",
+    "rms_norm",
+    "layer_norm",
+    "apply_rope",
+    "rope_freqs",
+    "softcap",
+]
+
+
+def _path_seed(path: str) -> int:
+    return int.from_bytes(hashlib.blake2b(path.encode(), digest_size=4).digest(), "big")
+
+
+class ShardCtx:
+    """Carries (mesh, rules) so model code can constrain activations.
+
+    With ``mesh=None`` (single-host smoke tests) constraints are no-ops.
+    """
+
+    def __init__(self, rules: ShardingRules, mesh: Optional[Mesh] = None):
+        self.rules = rules
+        self.mesh = mesh
+
+    def constrain(self, x: jax.Array, logical_axes: Sequence[Optional[str]]):
+        if self.mesh is None:
+            return x
+        spec = logical_to_spec(logical_axes, x.shape, self.rules, self.mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+class Builder:
+    """Two-mode parameter factory (see module docstring).
+
+    Usage inside model code::
+
+        w = b.param("attn/wq", (d, h, k), ("embed", "heads", "head_dim"),
+                    init="normal", scale=d**-0.5)
+    """
+
+    def __init__(
+        self,
+        mode: str,
+        key: Optional[jax.Array],
+        rules: ShardingRules,
+        mesh: Optional[Mesh],
+        param_dtype: Any,
+    ):
+        assert mode in ("init", "spec")
+        self.mode = mode
+        self.key = key
+        self.rules = rules
+        self.mesh = mesh
+        self.param_dtype = param_dtype
+        self._prefix: list[str] = []
+
+    # -------------------------------------------------------------- scoping
+    def scope(self, name: str) -> "Builder":
+        child = Builder(self.mode, self.key, self.rules, self.mesh, self.param_dtype)
+        child._prefix = self._prefix + [name]
+        return child
+
+    def _full(self, name: str) -> str:
+        return "/".join(self._prefix + [name])
+
+    # -------------------------------------------------------------- params
+    def param(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        logical_axes: Tuple[Optional[str], ...],
+        init: str = "normal",
+        scale: float = 1.0,
+        dtype: Any = None,
+    ):
+        path = self._full(name)
+        dtype = dtype or self.param_dtype
+        if self.mode == "spec":
+            if self.mesh is None:
+                return PartitionSpec()
+            return logical_to_spec(logical_axes, shape, self.rules, self.mesh)
+        key = jax.random.fold_in(self.key, _path_seed(path))
+        if init == "normal":
+            return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "uniform":
+            return (scale * (2.0 * jax.random.uniform(key, shape) - 1.0)).astype(dtype)
+        if init == "constant":
+            return jnp.full(shape, scale, dtype)
+        raise ValueError(f"unknown init {init!r}")
+
+
+# ---------------------------------------------------------------------------
+# Normalization / elementwise
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation, output in x.dtype. Gemma-style (1+γ)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32) + beta.astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-style soft capping: cap·tanh(x/cap)."""
+    return (cap * jnp.tanh(x / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotary dims (first ``fraction`` of the
+    head); shape (rot_dim/2,), float32."""
+    rot = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (..., seq, heads, head_dim)
+    positions: jax.Array,  # (..., seq) int32
+    inv_freq: jax.Array,  # (rot_dim/2,)
+) -> jax.Array:
+    """Rotary embedding over the leading ``rot_dim`` of the head; supports
+    partial rotary (e.g. Minitron's 50%)."""
+    rot = 2 * inv_freq.shape[0]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, rot/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = xf1 * cos - xf2 * sin
+    out2 = xf2 * cos + xf1 * sin
+    rotated = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([rotated, x_pass], axis=-1) if x_pass.shape[-1] else rotated

@@ -1,0 +1,470 @@
+"""Model assembly: embeddings → pattern-period scanned decoder → LM head.
+
+Layer-stack layout: ``cfg.block_pattern`` (e.g. 5×local+1×global for Gemma-3,
+(rglru, rglru, swa) for RecurrentGemma) defines a *period*. The depth is laid
+out as ``num_periods`` full periods — scanned with ``lax.scan`` over stacked
+parameters so HLO size / compile time are O(period), not O(depth) — plus
+``num_leftover`` explicitly-materialized remainder layers. ``cfg.remat``
+checkpoints each scanned period (activation memory = periods × saved inputs).
+
+Public API (class ``Model``): ``init``/``param_specs``, ``loss_fn`` (training
+forward with CE + MoE aux loss), ``prefill`` (builds decode caches),
+``decode_step`` (one token), ``init_cache``/``cache_specs``.
+
+The LM head never materializes unsharded logits: they are computed with the
+vocab axis sharded (TP) and the cross-entropy reduces over the sharded axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import blocks as B
+from repro.models.common import Builder, ShardCtx, rms_norm, softcap
+
+__all__ = ["Model", "build_model"]
+
+
+def _prepend_axis(spec: PartitionSpec) -> PartitionSpec:
+    return PartitionSpec(None, *spec)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, rules: ShardingRules = ShardingRules(),
+                 mesh=None, impl: str = "xla"):
+        self.cfg = cfg
+        self.rules = rules
+        self.mesh = mesh
+        self.ctx = ShardCtx(rules, mesh)
+        self.impl = impl
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+        self.param_dtype = jnp.dtype(cfg.param_dtype)
+
+    # ------------------------------------------------------------ building
+    def _build(self, mode: str, key=None):
+        cfg = self.cfg
+        b = Builder(mode, key, self.rules, self.mesh, self.param_dtype)
+        out: Dict[str, Any] = {}
+        # d^-0.5 embedding init: the first block op is an RMSNorm (input scale
+        # is immaterial) while *tied* logits come out unit-scale.
+        out["embed"] = b.param(
+            "embed", (cfg.vocab_size, cfg.d_model), ("vocab", "fsdp"),
+            scale=cfg.d_model**-0.5,
+            dtype=jnp.dtype(cfg.embed_dtype) if cfg.embed_dtype else None,
+        )
+        if not cfg.tie_embeddings:
+            out["head"] = b.param(
+                "head", (cfg.d_model, cfg.vocab_size), ("fsdp", "vocab"),
+                scale=cfg.d_model**-0.5,
+            )
+        out["final_norm"] = b.param("final_norm", (cfg.d_model,), ("embed",), init="zeros")
+
+        # --- stacked periods ------------------------------------------------
+        period = cfg.block_pattern
+        if cfg.num_periods > 0:
+            slots = {}
+            for si, kind in enumerate(period):
+                slot_name = f"slot{si}_{kind}"
+                if mode == "spec":
+                    one = B.block_params(b.scope(f"stack/{slot_name}"), cfg, kind)
+                    slots[slot_name] = jax.tree.map(
+                        _prepend_axis, one,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec),
+                    )
+                else:
+                    per = []
+                    for li in range(cfg.num_periods):
+                        kb = Builder(
+                            mode, jax.random.fold_in(key, 1000 + li), self.rules,
+                            self.mesh, self.param_dtype,
+                        )
+                        per.append(
+                            B.block_params(kb.scope(f"stack/{slot_name}"), cfg, kind)
+                        )
+                    slots[slot_name] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs, axis=0), *per
+                    )
+            out["stack"] = slots
+        # --- leftover layers --------------------------------------------------
+        if cfg.num_leftover > 0:
+            lo = {}
+            for li in range(cfg.num_leftover):
+                kind = period[li]
+                kb = b.scope(f"leftover{li}_{kind}") if mode == "spec" else Builder(
+                    mode, jax.random.fold_in(key, 2000 + li), self.rules,
+                    self.mesh, self.param_dtype,
+                ).scope(f"leftover{li}_{kind}")
+                lo[f"layer{li}_{kind}"] = B.block_params(kb, cfg, kind)
+            out["leftover"] = lo
+        return out
+
+    def init(self, key) -> Dict[str, Any]:
+        return self._build("init", key)
+
+    def param_specs(self) -> Dict[str, Any]:
+        return self._build("spec")
+
+    def abstract_params(self):
+        """ShapeDtypeStructs of the parameter tree (no allocation)."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------ embedding
+    def _embed(self, params, inputs: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            x = inputs.astype(self.compute_dtype)  # stub frontend: (B,S,D)
+        else:
+            # cast-before-gather: the FSDP all-gather of the table and the
+            # token gather itself then move bf16, not fp32 (§Perf iteration)
+            table = self.ctx.constrain(
+                params["embed"].astype(self.compute_dtype), ("vocab", None)
+            )
+            x = jnp.take(table, inputs, axis=0)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), self.compute_dtype)
+        return self.ctx.constrain(x, ("batch", "seq", "embed"))
+
+    def _head(self, params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            w = self.ctx.constrain(
+                params["embed"].astype(self.compute_dtype), ("vocab", None)
+            )  # (V, D) — gather the FSDP dim in bf16
+            logits = jnp.einsum("bsd,vd->bsv", x, w)
+        else:
+            w = self.ctx.constrain(
+                params["head"].astype(self.compute_dtype), (None, "vocab")
+            )  # (D, V)
+            logits = jnp.einsum("bsd,dv->bsv", x, w)
+        if cfg.logit_softcap > 0:
+            logits = softcap(logits, cfg.logit_softcap)
+        return self.ctx.constrain(logits, ("batch", "seq", "vocab"))
+
+    # -------------------------------------------------------------- forward
+    def _backbone(self, params, x, positions) -> Tuple[jax.Array, jax.Array]:
+        """x: (B,S,D) → (x, total aux loss)."""
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.num_periods > 0:
+
+            def period_body(carry, slot_params):
+                x, aux = carry
+                for si, kind in enumerate(cfg.block_pattern):
+                    x, a = B.block_fwd(
+                        x, slot_params[f"slot{si}_{kind}"], cfg, kind, self.ctx,
+                        positions, impl=self.impl,
+                    )
+                    aux = aux + a
+                return (x, aux), None
+
+            body = period_body
+            if cfg.remat:
+                body = jax.checkpoint(period_body, prevent_cse=False)
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), params["stack"]
+            )
+
+        if cfg.num_leftover > 0:
+            for li in range(cfg.num_leftover):
+                kind = cfg.block_pattern[li]
+                x, a = B.block_fwd(
+                    x, params["leftover"][f"layer{li}_{kind}"], cfg, kind,
+                    self.ctx, positions, impl=self.impl,
+                )
+                aux_total = aux_total + a
+        return x, aux_total
+
+    def loss_fn(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+        """batch: {"inputs": (B,S) int32 | (B,S,D), "labels": (B,S) int32}.
+        Mean token cross-entropy (+ MoE aux)."""
+        cfg = self.cfg
+        inputs, labels = batch["inputs"], batch["labels"]
+        bsz, seq = labels.shape
+        positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+        x = self._embed(params, inputs)
+        x, aux = self._backbone(params, x, positions)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)  # (B,S)
+        true_logit = jnp.take_along_axis(
+            logits, labels[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        ce = jnp.mean(logz - true_logit)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # --------------------------------------------------------------- decode
+    def init_cache(self, batch: int, cache_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = self.compute_dtype
+        out: Dict[str, Any] = {}
+        if cfg.num_periods > 0:
+            slots = {}
+            for si, kind in enumerate(cfg.block_pattern):
+                one = B.init_block_cache(cfg, kind, batch, cache_len, dtype)
+                slots[f"slot{si}_{kind}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (cfg.num_periods,) + x.shape
+                    ),
+                    one,
+                )
+            out["stack"] = slots
+        if cfg.num_leftover > 0:
+            lo = {}
+            for li in range(cfg.num_leftover):
+                kind = cfg.block_pattern[li]
+                lo[f"layer{li}_{kind}"] = B.init_block_cache(
+                    cfg, kind, batch, cache_len, dtype
+                )
+            out["leftover"] = lo
+        return out
+
+    def cache_specs(self, batch: int, cache_len: int):
+        """PartitionSpecs matching init_cache structure."""
+        if self.mesh is None:
+            return jax.tree.map(lambda _: PartitionSpec(), self.init_cache(batch, cache_len))
+        from repro.distributed.sharding import logical_to_spec
+
+        cache = jax.eval_shape(lambda: self.init_cache(batch, cache_len))
+
+        def spec_for_path(path, leaf):
+            nd = len(leaf.shape)
+            stacked = path and "stack" in path
+            if stacked:
+                if nd == 5:
+                    axes = (None, "batch", "cache_seq", "kv_heads", None)
+                elif nd == 4:
+                    axes = (None, "batch", None, "inner")
+                elif nd == 3:
+                    axes = (None, "batch", "inner")
+                else:
+                    axes = (None,) * nd
+            else:
+                if nd == 4:
+                    axes = ("batch", "cache_seq", "kv_heads", None)
+                elif nd == 3:
+                    axes = ("batch", None, "inner")
+                elif nd == 2:
+                    axes = ("batch", "inner")
+                else:
+                    axes = (None,) * nd
+            return logical_to_spec(axes, leaf.shape, self.rules, self.mesh)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        specs = [
+            spec_for_path("/".join(str(k) for k in path), leaf)
+            for path, leaf in flat
+        ]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def _cache_is_stacked_kv(self, leaf) -> bool:
+        return leaf.ndim == 5
+
+    def prefill(self, params, inputs: jax.Array, cache_len: int) -> Tuple[jax.Array, Dict]:
+        """Run the full-sequence forward, building decode caches.
+
+        Returns (last-position logits (B,V), cache). Implemented as the
+        training forward plus per-block cache extraction.
+        """
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            bsz, seq = inputs.shape[0], inputs.shape[1]
+        else:
+            bsz, seq = inputs.shape
+        positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+        x = self._embed(params, inputs)
+
+        caches: Dict[str, Any] = {}
+
+        def run_block(x, p, kind, cache_len):
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            aux = jnp.zeros((), jnp.float32)
+            if kind in ("attn", "swa"):
+                window = cfg.window if kind == "swa" else 0
+                h, (k, v) = B.attention_fwd(
+                    h, p["attn"], cfg, self.ctx, positions, window=window,
+                    theta=B._mixer_theta(cfg, kind), impl=self.impl,
+                )
+                cache = self._assemble_kv_cache(k, v, seq, cache_len, window)
+            elif kind == "mamba":
+                from repro.models import mamba as M
+
+                h, cache = self._mamba_prefill(h, p["mixer"])
+            else:  # rglru
+                h, cache = self._rglru_prefill(h, p["mixer"])
+            if cfg.sandwich_norm:
+                h = rms_norm(h, p["ln1_post"], cfg.norm_eps)
+            x = x + h
+            if B._has_mlp(cfg):
+                h = rms_norm(x, p["ln2"], cfg.norm_eps)
+                if cfg.moe is not None:
+                    h, aux = B.moe_fwd(h, p["mlp"], cfg, self.ctx)
+                else:
+                    h = B.mlp_fwd(h, p["mlp"], cfg, self.ctx)
+                if cfg.sandwich_norm:
+                    h = rms_norm(h, p["ln2_post"], cfg.norm_eps)
+                x = x + h
+            return x, cache
+
+        if cfg.num_periods > 0:
+
+            def period_body(x, slot_params):
+                new_caches = {}
+                for si, kind in enumerate(cfg.block_pattern):
+                    name = f"slot{si}_{kind}"
+                    x, cache = run_block(x, slot_params[name], kind, cache_len)
+                    new_caches[name] = cache
+                return x, new_caches
+
+            body = period_body
+            if cfg.remat:
+                body = jax.checkpoint(period_body, prevent_cse=False)
+            x, stack_caches = jax.lax.scan(body, x, params["stack"])
+            caches["stack"] = stack_caches
+
+        if cfg.num_leftover > 0:
+            lo = {}
+            for li in range(cfg.num_leftover):
+                kind = cfg.block_pattern[li]
+                name = f"layer{li}_{kind}"
+                x, cache = run_block(x, params["leftover"][name], kind, cache_len)
+                lo[name] = cache
+            caches["leftover"] = lo
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x[:, -1:, :]).astype(jnp.float32)[:, 0, :]
+        return logits, caches
+
+    def _assemble_kv_cache(self, k, v, seq, cache_len, window):
+        """Map prefill (k, v) (B,S,Hkv,Dh) into the decode cache layout."""
+        if window and window > 0:
+            w = min(cache_len, window)
+            take = min(seq, w)
+            kw, vw = k[:, -take:], v[:, -take:]
+            slots = (jnp.arange(seq - take, seq, dtype=jnp.int32)) % w
+            kc = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype).at[:, slots].set(kw)
+            vc = jnp.zeros_like(kc).at[:, slots].set(vw)
+            return (kc, vc)
+        if seq < cache_len:
+            pad = cache_len - seq
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return (k, v)
+
+    def _mamba_prefill(self, h, p):
+        from repro.models import mamba as M
+
+        out = M.mamba_fwd(h, p, self.cfg, self.ctx, impl=self.impl)
+        # recompute final states cheaply: conv state = last (dc-1) post-proj
+        cdt = h.dtype
+        di = self.cfg.mamba.d_inner
+        uz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(cdt))
+        u = uz[..., :di]
+        dc = self.cfg.mamba.d_conv
+        conv_state = u[:, -(dc - 1):, :]
+        uconv, _ = M._causal_conv(u, p["conv_w"], p["conv_b"])
+        uact = jax.nn.silu(uconv)
+        dt, b_t, c_t, a = M._ssm_inputs(uact, p, self.cfg)
+
+        def step(hc, inp):
+            u_t, dt_t, b_tt = inp
+            a_bar = jnp.exp(dt_t[:, :, None] * a[None, :, :])
+            hc = a_bar * hc + (dt_t * u_t)[:, :, None] * b_tt[:, None, :]
+            return hc, None
+
+        h0 = jnp.zeros((h.shape[0], di, self.cfg.mamba.d_state), jnp.float32)
+        hf, _ = jax.lax.scan(
+            step, h0,
+            (uact.astype(jnp.float32).swapaxes(0, 1), dt.swapaxes(0, 1),
+             b_t.swapaxes(0, 1)),
+        )
+        return out, {"conv": conv_state.astype(self.compute_dtype), "ssm": hf}
+
+    def _rglru_prefill(self, h, p):
+        from repro.models import rglru as R
+
+        out = R.rglru_fwd(h, p, self.cfg, self.ctx, impl=self.impl)
+        cdt = h.dtype
+        xi = jnp.einsum("bsd,di->bsi", h, p["w_x"].astype(cdt))
+        dc = self.cfg.rglru.conv_width
+        conv_state = xi[:, -(dc - 1):, :]
+        xic, _ = R._causal_conv(xi, p["conv_w"], p["conv_b"])
+        a, gated = R._gates(xic, p, self.cfg)
+
+        def step(hc, inp):
+            a_t, g_t = inp
+            return a_t * hc + g_t, None
+
+        h0 = jnp.zeros((h.shape[0], self.cfg.rglru.d_inner), jnp.float32)
+        hf, _ = jax.lax.scan(step, h0, (a.swapaxes(0, 1), gated.swapaxes(0, 1)))
+        return out, {"conv": conv_state.astype(self.compute_dtype), "h": hf}
+
+    def decode_step(
+        self, params, cache: Dict[str, Any], inputs: jax.Array, t: jax.Array
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One decode step. inputs: (B,) token ids or (B,1,D) embeddings;
+        t: scalar int32 absolute position. Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            x = inputs.astype(self.compute_dtype)
+            if x.ndim == 2:
+                x = x[:, None, :]
+            bsz = x.shape[0]
+        else:
+            bsz = inputs.shape[0]
+            x = jnp.take(
+                params["embed"].astype(self.compute_dtype), inputs[:, None], axis=0
+            )
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), self.compute_dtype)
+        x = self.ctx.constrain(x, ("batch", None, "embed"))
+
+        new_cache: Dict[str, Any] = {}
+        if cfg.num_periods > 0:
+
+            def period_body(x, xs):
+                slot_params, slot_caches = xs
+                updated = {}
+                for si, kind in enumerate(cfg.block_pattern):
+                    name = f"slot{si}_{kind}"
+                    x, c = B.block_decode(
+                        x, slot_params[name], cfg, kind, self.ctx,
+                        slot_caches[name], t,
+                    )
+                    updated[name] = c
+                return x, updated
+
+            x, stack_cache = jax.lax.scan(
+                period_body, x, (params["stack"], cache["stack"])
+            )
+            new_cache["stack"] = stack_cache
+
+        if cfg.num_leftover > 0:
+            lo = {}
+            for li in range(cfg.num_leftover):
+                kind = cfg.block_pattern[li]
+                name = f"layer{li}_{kind}"
+                x, c = B.block_decode(
+                    x, params["leftover"][name], cfg, kind, self.ctx,
+                    cache["leftover"][name], t,
+                )
+                lo[name] = c
+            new_cache["leftover"] = lo
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._head(params, x).astype(jnp.float32)[:, 0, :]
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig, rules: ShardingRules = ShardingRules(),
+                mesh=None, impl: str = "xla") -> Model:
+    return Model(cfg, rules, mesh, impl)

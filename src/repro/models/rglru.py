@@ -1,0 +1,134 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) — recurrentgemma-9b.
+
+The recurrent block (De et al., 2024, arXiv:2402.19427):
+
+    x → (linear branch: W_x → conv1d → RG-LRU) ⊙ GeLU(W_y branch) → W_out
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_a ξ_t + b_a)                 recurrence gate
+    i_t = σ(W_i ξ_t + b_i)                 input gate
+    a_t = exp(−c·softplus(Λ)·r_t)          decay in (0,1)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ ξ_t)
+
+XLA path: ``lax.scan`` over time with an (B, d_inner) fp32 carry. TPU perf
+path: chunked Pallas kernel (repro/kernels/rglru_scan). Decode is a single
+gated state update (O(1) memory — long_500k eligible).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Builder, ShardCtx
+from repro.models.mamba import _causal_conv
+
+__all__ = ["rglru_params", "rglru_fwd", "rglru_decode", "init_rglru_cache"]
+
+
+def rglru_params(b: Builder, cfg) -> dict:
+    d = cfg.d_model
+    r = cfg.rglru
+    di, dc = r.d_inner, r.conv_width
+    return {
+        "w_x": b.param("w_x", (d, di), ("fsdp", "inner"), scale=d**-0.5),
+        "w_y": b.param("w_y", (d, di), ("fsdp", "inner"), scale=d**-0.5),
+        "conv_w": b.param("conv_w", (dc, di), ("conv", "inner"), scale=dc**-0.5),
+        "conv_b": b.param("conv_b", (di,), ("inner",), init="zeros"),
+        "w_a": b.param("w_a", (di, di), ("inner", "fsdp"), scale=di**-0.5),
+        "b_a": b.param("b_a", (di,), ("inner",), init="zeros"),
+        "w_i": b.param("w_i", (di, di), ("fsdp", "inner"), scale=di**-0.5),
+        "b_i": b.param("b_i", (di,), ("inner",), init="zeros"),
+        # Λ init so a ≈ 0.9..0.999 at r=0.5 (Griffin's stable range)
+        "lam": b.param("lam", (di,), ("inner",), init="constant", scale=0.65),
+        "w_out": b.param("w_out", (di, d), ("inner", "embed"), scale=di**-0.5),
+    }
+
+
+def _gates(xi: jax.Array, p: dict, cfg):
+    """xi: (B,S,di) → decay a_t and gated input, both fp32."""
+    xif = xi.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("bsi,ij->bsj", xif, p["w_a"].astype(jnp.float32))
+        + p["b_a"].astype(jnp.float32)
+    )
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("bsi,ij->bsj", xif, p["w_i"].astype(jnp.float32))
+        + p["b_i"].astype(jnp.float32)
+    )
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * xif)
+    return a, gated
+
+
+def rglru_fwd(
+    x: jax.Array, p: dict, cfg, ctx: ShardCtx, impl: str = "xla"
+) -> jax.Array:
+    cdt = x.dtype
+    xi = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(cdt))
+    xi = ctx.constrain(xi, ("batch", "seq", "inner"))
+    xi, _ = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,di->bsi", x, p["w_y"].astype(cdt)))
+
+    a, gated = _gates(xi, p, cfg)
+
+    if impl == "pallas":
+        from repro.kernels.rglru_scan.ops import rglru_scan
+
+        h = rglru_scan(a, gated)
+    else:
+        # K-step unrolled scan (see mamba_fwd: carry-traffic ÷ K, §Perf)
+        seq = a.shape[1]
+        k_un = max(1, cfg.rglru.time_unroll)
+        while seq % k_un:
+            k_un -= 1
+
+        def step(h, inp):
+            a_k, g_k = inp  # (K,B,di) each
+            hs = []
+            for j in range(k_un):
+                h = a_k[j] * h + g_k[j]
+                hs.append(h)
+            return h, jnp.stack(hs, axis=0)
+
+        def to_chunks(t):
+            t = t.swapaxes(0, 1)
+            return t.reshape((seq // k_un, k_un) + t.shape[1:])
+
+        h0 = jnp.zeros((x.shape[0], cfg.rglru.d_inner), jnp.float32)
+        _, hs = jax.lax.scan(step, h0, (to_chunks(a), to_chunks(gated)))
+        h = hs.reshape(seq, x.shape[0], cfg.rglru.d_inner).swapaxes(0, 1)
+
+    out = h.astype(cdt) * y_branch
+    out = jnp.einsum("bsi,id->bsd", out, p["w_out"].astype(cdt))
+    return ctx.constrain(out, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state)
+# ---------------------------------------------------------------------------
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    r = cfg.rglru
+    return {
+        "conv": jnp.zeros((batch, r.conv_width - 1, r.d_inner), dtype),
+        "h": jnp.zeros((batch, r.d_inner), jnp.float32),
+    }
+
+
+def rglru_decode(
+    x: jax.Array, p: dict, cfg, ctx: ShardCtx, cache: dict
+) -> Tuple[jax.Array, dict]:
+    cdt = x.dtype
+    xi = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(cdt))
+    xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], cache["conv"])
+    y_branch = jax.nn.gelu(jnp.einsum("bsd,di->bsi", x, p["w_y"].astype(cdt)))
+
+    a, gated = _gates(xi, p, cfg)
+    h = a[:, 0] * cache["h"] + gated[:, 0]  # (B, di)
+
+    out = h[:, None, :].astype(cdt) * y_branch
+    out = jnp.einsum("bsi,id->bsd", out, p["w_out"].astype(cdt))
+    return ctx.constrain(out, ("batch", None, "embed")), {"conv": conv_state, "h": h}

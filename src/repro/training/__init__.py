@@ -1,0 +1,15 @@
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.training.train_step import TrainState, make_train_step, make_eval_step
+from repro.training.serve_step import make_decode_step, make_prefill
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_schedule",
+    "TrainState",
+    "make_train_step",
+    "make_eval_step",
+    "make_decode_step",
+    "make_prefill",
+]

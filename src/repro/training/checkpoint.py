@@ -1,0 +1,69 @@
+"""Trial-level checkpointing: params + optimizer + step → .npz (+ JSON meta).
+
+Per-host, atomic (write-temp-then-rename). Restores are bit-exact because the
+data pipeline is stateless-seeded (see repro.data.synthetic). At fleet scale
+each host writes its local shards; here (single host) the full tree is saved.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state, extra: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(state)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    meta = {"step": step, "extra": extra or {}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[5:13])
+        for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, state_template) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``state_template`` (arrays or
+    ShapeDtypeStructs)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,50 @@
+"""Serving entry points: prefill and single-token decode steps.
+
+``make_decode_step(model)`` returns ``(params, cache, inputs, t) ->
+(logits, cache)`` — the function lowered for the ``decode_32k`` and
+``long_500k`` dry-run cells (one new token against a seq_len KV cache, per
+the assignment). ``make_prefill`` is lowered for ``prefill_32k``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill", "make_decode_step", "greedy_generate"]
+
+
+def make_prefill(model, cache_len: int):
+    def prefill(params, inputs):
+        return model.prefill(params, inputs, cache_len)
+
+    return prefill
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, inputs, t):
+        return model.decode_step(params, cache, inputs, t)
+
+    return decode_step
+
+
+def greedy_generate(model, params, prompt, num_tokens: int, cache_len: int):
+    """Reference generation loop (used by examples/tests on small configs).
+    prompt: (B, S) tokens or (B, S, D) embeddings."""
+    logits, cache = jax.jit(make_prefill(model, cache_len))(params, prompt)
+    step = jax.jit(make_decode_step(model))
+    seq_len = prompt.shape[1]
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
+    for i in range(num_tokens):
+        out.append(tok)
+        if model.cfg.embed_inputs:
+            # stub frontend: feed the token back through the output embedding
+            emb = jnp.take(params["embed"], tok, axis=0)[:, None, :]
+            logits, cache = step(params, cache, emb, jnp.asarray(seq_len + i, jnp.int32))
+        else:
+            logits, cache = step(params, cache, tok, jnp.asarray(seq_len + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)  # (B, num_tokens)

@@ -1,0 +1,99 @@
+"""Jittable train/eval steps with microbatched gradient accumulation.
+
+``make_train_step(model, opt_cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings from ``model.param_specs()``:
+
+  * the global batch is split into ``cfg.microbatches`` microbatches scanned
+    sequentially (gradient accumulation) — the activation-memory lever that
+    lets the big assigned configs fit HBM at global_batch=256;
+  * gradients accumulate in fp32 (sharded like the params — ZeRO);
+  * loss/metrics averaged over microbatches;
+  * the AdamW update runs once per step (donated state — in-place on device).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "make_eval_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+
+
+def init_train_state(model, key, opt_cfg: AdamWConfig) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int) -> Dict[str, jax.Array]:
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by microbatches {n}"
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, microbatches: int | None = None):
+    """``microbatches`` overrides cfg.microbatches — the launcher clamps it so
+    the per-microbatch batch stays divisible by the mesh's batch-sharding ways
+    (otherwise XLA silently replicates activations)."""
+    cfg = model.cfg
+    n_micro = max(1, microbatches if microbatches is not None else cfg.microbatches)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        grad_fn = jax.value_and_grad(model.loss_fn, has_aux=True)
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            micro = _split_microbatches(batch, n_micro)
+            acc_dt = jnp.dtype(opt_cfg.grad_accum_dtype)
+
+            def accum(carry, mb):
+                g_acc, loss_acc, aux_acc = carry
+                (loss, m), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g
+                )
+                return (g_acc, loss_acc + loss, aux_acc + m["aux"]), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), state.params
+            )
+            (g_sum, loss_sum, aux_sum), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                micro,
+            )
+            grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+            loss = loss_sum / n_micro
+            metrics = {"ce": loss - aux_sum / n_micro, "aux": aux_sum / n_micro}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, opt_cfg
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

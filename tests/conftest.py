@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests are run with PYTHONPATH=src; this makes bare `pytest` work too.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+# GP core enables x64 on import; keep the whole test session consistent.
+jax.config.update("jax_enable_x64", True)

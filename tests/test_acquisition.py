@@ -1,0 +1,104 @@
+"""Acquisition functions: closed-form EI vs Monte Carlo, optimizer behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.acquisition import expected_improvement, lcb, thompson_draws
+from repro.core.gp import gp as G
+from repro.core.gp import params as P
+from repro.core.optimize_acq import AcqOptConfig, optimize_acquisition
+from repro.core.sobol import sobol_sample
+
+
+def test_ei_matches_monte_carlo():
+    mu = jnp.asarray([0.0, 1.0, -0.5])
+    var = jnp.asarray([1.0, 0.25, 4.0])
+    y_best = jnp.asarray(0.3)
+    closed = expected_improvement(mu, var, y_best)
+    rng = np.random.default_rng(0)
+    draws = rng.standard_normal((400_000, 3)) * np.sqrt(np.asarray(var)) + np.asarray(mu)
+    mc = np.maximum(0.0, float(y_best) - draws).mean(axis=0)
+    np.testing.assert_allclose(np.asarray(closed), mc, atol=5e-3)
+
+
+def test_ei_zero_when_certain_and_worse():
+    # tiny variance, mean above y_best ⇒ no improvement possible
+    ei = expected_improvement(jnp.asarray([5.0]), jnp.asarray([1e-12]), jnp.asarray(0.0))
+    assert float(ei[0]) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_ei_increases_with_variance():
+    y_best = jnp.asarray(0.0)
+    mu = jnp.asarray([1.0, 1.0])
+    var = jnp.asarray([0.01, 4.0])
+    ei = expected_improvement(mu, var, y_best)
+    assert float(ei[1]) > float(ei[0])
+
+
+def test_lcb_orders_by_optimism():
+    vals = lcb(jnp.asarray([0.0, 0.0]), jnp.asarray([1.0, 4.0]), kappa=2.0)
+    assert float(vals[1]) > float(vals[0])
+
+
+def test_thompson_draw_shapes():
+    d = thompson_draws(jnp.zeros((3, 7)), jnp.ones((3, 7)), jax.random.PRNGKey(0))
+    assert d.shape == (3, 7)
+
+
+def _toy_posterior(n=16, d=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((n, d)))
+    y = jnp.asarray(np.sin(5 * np.asarray(x[:, 0])))
+    y = (y - y.mean()) / (y.std() + 1e-12)
+    return G.fit_gp(x, y, P.default_params(d)), x, y
+
+
+def test_optimize_acquisition_returns_sorted_valid_points():
+    post, x, y = _toy_posterior()
+    anchors = jnp.asarray(sobol_sample(2, 256))
+    cands, vals = optimize_acquisition(
+        post, anchors, jnp.asarray(float(jnp.min(y))),
+        jnp.zeros((8, 2)), jnp.zeros(8, bool), jax.random.PRNGKey(0),
+        AcqOptConfig(num_anchors=256),
+    )
+    assert cands.shape == (8, 2)
+    assert bool(jnp.all((cands >= 0) & (cands <= 1)))
+    v = np.asarray(vals)
+    assert (np.diff(v) <= 1e-9).all()  # sorted desc
+
+
+def test_pending_exclusion():
+    post, x, y = _toy_posterior()
+    anchors = jnp.asarray(sobol_sample(2, 256))
+    cfg = AcqOptConfig(num_anchors=256, exclusion_radius=0.05)
+    # first, find the unconstrained best candidate
+    free, _ = optimize_acquisition(
+        post, anchors, jnp.asarray(float(jnp.min(y))),
+        jnp.zeros((8, 2)), jnp.zeros(8, bool), jax.random.PRNGKey(0), cfg,
+    )
+    top = free[0]
+    # now mark it pending: the new best must be outside the exclusion ball
+    pend = jnp.zeros((8, 2)).at[0].set(top)
+    mask = jnp.zeros(8, bool).at[0].set(True)
+    excl, _ = optimize_acquisition(
+        post, anchors, jnp.asarray(float(jnp.min(y))),
+        pend, mask, jax.random.PRNGKey(0), cfg,
+    )
+    dist = float(jnp.max(jnp.abs(excl[0] - top)))
+    assert dist >= cfg.exclusion_radius - 1e-6
+
+
+def test_refinement_does_not_hurt():
+    """Gradient refinement must return acquisition ≥ the best raw anchor."""
+    post, x, y = _toy_posterior(seed=3)
+    anchors = jnp.asarray(sobol_sample(2, 128))
+    y_best = jnp.asarray(float(jnp.min(y)))
+    cfg0 = AcqOptConfig(num_anchors=128, refine_steps=0)
+    cfg1 = AcqOptConfig(num_anchors=128, refine_steps=30)
+    _, v0 = optimize_acquisition(post, anchors, y_best, jnp.zeros((8, 2)),
+                                 jnp.zeros(8, bool), jax.random.PRNGKey(1), cfg0)
+    _, v1 = optimize_acquisition(post, anchors, y_best, jnp.zeros((8, 2)),
+                                 jnp.zeros(8, bool), jax.random.PRNGKey(1), cfg1)
+    assert float(v1[0]) >= float(v0[0]) - 1e-9

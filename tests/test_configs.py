@@ -1,0 +1,74 @@
+"""The assigned architecture table, verified field by field (deliverable f)."""
+
+import pytest
+
+from repro.configs import ARCHITECTURES, SHAPES, get_config
+
+# (arch, layers, d_model, heads, kv, d_ff, vocab)
+TABLE = [
+    ("musicgen-large", 48, 2048, 32, 32, 8192, 2048),
+    ("internvl2-1b", 24, 896, 14, 2, 4864, 151_655),
+    ("falcon-mamba-7b", 64, 4096, 0, 0, 0, 65_024),
+    ("granite-moe-1b-a400m", 24, 1024, 16, 8, 0, 49_155),
+    ("qwen3-moe-235b-a22b", 94, 4096, 64, 4, 0, 151_936),
+    ("gemma3-27b", 62, 5376, 32, 16, 21_504, 262_144),
+    ("qwen2.5-3b", 36, 2048, 16, 2, 11_008, 151_936),
+    ("minitron-4b", 32, 3072, 24, 8, 9216, 256_000),
+    ("h2o-danube-3-4b", 24, 3840, 32, 8, 10_240, 32_000),
+    ("recurrentgemma-9b", 38, 4096, 16, 1, 12_288, 256_000),
+]
+
+
+@pytest.mark.parametrize("arch,L,d,h,kv,ff,v", TABLE)
+def test_table_values(arch, L, d, h, kv, ff, v):
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_all_ten_present():
+    assert len(ARCHITECTURES) == 10
+
+
+def test_moe_settings():
+    g = get_config("granite-moe-1b-a400m").moe
+    assert (g.num_experts, g.top_k, g.d_expert) == (32, 8, 512)
+    q = get_config("qwen3-moe-235b-a22b").moe
+    assert (q.num_experts, q.top_k, q.d_expert) == (128, 8, 1536)
+
+
+def test_mamba_settings():
+    m = get_config("falcon-mamba-7b").mamba
+    assert m.d_state == 16 and m.d_inner == 8192
+
+
+def test_stub_frontends():
+    assert get_config("musicgen-large").embed_inputs
+    assert get_config("internvl2-1b").embed_inputs
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32_768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_sub_quadratic_flags():
+    assert get_config("falcon-mamba-7b").is_sub_quadratic()
+    assert get_config("recurrentgemma-9b").is_sub_quadratic()
+    assert get_config("h2o-danube-3-4b").is_sub_quadratic()
+    assert not get_config("qwen2.5-3b").is_sub_quadratic()
+    assert not get_config("gemma3-27b").is_sub_quadratic()  # has global layers
+
+
+def test_microbatches_divide_batches():
+    for name in ARCHITECTURES:
+        cfg = get_config(name)
+        assert SHAPES["train_4k"].global_batch % cfg.microbatches == 0
+        # microbatched global batch must still be shardable over 16-way data
+        assert (SHAPES["train_4k"].global_batch // cfg.microbatches) % 16 == 0

@@ -1,0 +1,100 @@
+"""Median rule (paper §5.2) and ASHA (beyond-paper) stopping semantics."""
+
+import numpy as np
+import pytest
+
+from repro.core import ASHAConfig, ASHARule, MedianRule, MedianRuleConfig
+
+
+def _curve(floor, n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return floor + 2.0 * np.exp(-0.4 * np.arange(1, n + 1)) + 0.01 * rng.standard_normal(n)
+
+
+class TestMedianRule:
+    def test_inactive_without_completed_curves(self):
+        rule = MedianRule()
+        assert not rule.should_stop(_curve(10.0))  # terrible, but no peers yet
+
+    def test_stops_bad_keeps_good(self):
+        rule = MedianRule(MedianRuleConfig(min_completed_curves=3))
+        for s in range(4):
+            rule.record_completed(_curve(1.0 + 0.05 * s, seed=s))
+        bad = _curve(5.0, n=10, seed=9)
+        good = _curve(0.5, n=10, seed=10)
+        assert rule.should_stop(bad)
+        assert not rule.should_stop(good)
+
+    def test_dynamic_activation_threshold(self):
+        rule = MedianRule(MedianRuleConfig(min_completed_curves=1,
+                                           min_iteration_fraction=0.25))
+        rule.record_completed(_curve(1.0, n=40))
+        assert rule.activation_iteration() == 10
+        # a bad curve shorter than the threshold is not stopped yet
+        assert not rule.should_stop(_curve(9.0, n=5))
+        assert rule.should_stop(_curve(9.0, n=10))
+
+    def test_median_semantics_exact(self):
+        """f worse than the median of completed values at iteration r ⇒ stop."""
+        rule = MedianRule(MedianRuleConfig(min_completed_curves=3,
+                                           min_iteration_fraction=0.0,
+                                           min_iteration_floor=1))
+        for v in (1.0, 2.0, 3.0):
+            rule.record_completed([v] * 4)
+        assert rule.should_stop([2.5])  # above median (=2.0)
+        assert not rule.should_stop([1.5])  # below median
+
+    def test_state_roundtrip(self):
+        rule = MedianRule()
+        rule.record_completed(_curve(1.0))
+        rule2 = MedianRule()
+        rule2.load_state_dict(rule.state_dict())
+        assert rule2.num_completed == 1
+
+
+class TestASHA:
+    def test_promotion_at_rungs_only(self):
+        rule = ASHARule(ASHAConfig(r_min=2, eta=2))
+        # off-rung lengths never stop
+        assert not rule.should_stop([9.0])
+        assert not rule.should_stop([9.0, 9.0, 9.0])
+
+    def test_bottom_half_stopped(self):
+        rule = ASHARule(ASHAConfig(r_min=1, eta=2))
+        for v in (1.0, 2.0, 3.0, 4.0):
+            rule.record_completed([v] * 8)
+        assert rule.should_stop([10.0])  # bottom of rung 0
+        assert not rule.should_stop([0.5])  # top of rung 0
+
+    def test_state_roundtrip(self):
+        rule = ASHARule()
+        rule.record_completed([1.0, 0.5, 0.2])
+        r2 = ASHARule()
+        r2.load_state_dict(rule.state_dict())
+        assert r2._rungs == rule._rungs
+
+
+class TestHyperband:
+    def test_bracket_ladder(self):
+        from repro.core.asha import HyperbandConfig, SynchronousHyperband
+
+        hb = SynchronousHyperband(HyperbandConfig(r_max=27, eta=3))
+        brackets = hb.brackets()
+        assert len(brackets) == 4  # s = 3, 2, 1, 0
+        # most aggressive bracket: 27 configs at r=1, ladder to r=27
+        assert brackets[0][0] == {"n": 27, "r": 1}
+        assert brackets[0][-1]["r"] == 27
+        # the last bracket runs everything at full resource
+        assert brackets[-1][0]["r"] == 27
+        # monotone: n decreases, r increases along each bracket
+        for rungs in brackets:
+            ns = [x["n"] for x in rungs]
+            rs = [x["r"] for x in rungs]
+            assert ns == sorted(ns, reverse=True)
+            assert rs == sorted(rs)
+
+    def test_promotion(self):
+        from repro.core.asha import SynchronousHyperband
+
+        keep = SynchronousHyperband.promote([5.0, 1.0, 3.0, 2.0, 4.0, 0.5], 3)
+        assert keep == [5, 1]

@@ -1,0 +1,102 @@
+"""Search-space encoding tests (paper §4.1/§5.1) incl. hypothesis properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Categorical, Continuous, Integer, SearchSpace
+
+
+def make_space():
+    return SearchSpace([
+        Continuous("lr", 1e-6, 1.0, scaling="log"),
+        Continuous("momentum", 0.0, 0.99),
+        Continuous("beta2", 0.9, 0.9999, scaling="reverse_log"),
+        Integer("layers", 1, 12),
+        Integer("batch", 8, 512, scaling="log"),
+        Categorical("act", ["relu", "gelu", "silu"]),
+    ])
+
+
+def test_encoded_dim():
+    s = make_space()
+    assert s.encoded_dim == 5 + 3  # 5 numeric + 3 one-hot
+
+
+def test_log_scaling_midpoint():
+    p = Continuous("lr", 1e-4, 1.0, scaling="log")
+    assert p.from_unit(0.5) == pytest.approx(1e-2, rel=1e-9)
+    assert p.to_unit(1e-2) == pytest.approx(0.5, abs=1e-12)
+
+
+def test_log_scaling_rejects_zero_low():
+    # the paper's §6.2 lesson: log scaling over [0, 1] is invalid
+    with pytest.raises(ValueError):
+        Continuous("bad", 0.0, 1.0, scaling="log")
+
+
+def test_integer_rounding():
+    p = Integer("n", 1, 10)
+    assert p.from_unit(0.0) == 1
+    assert p.from_unit(1.0) == 10
+    assert isinstance(p.from_unit(0.33), int)
+
+
+def test_categorical_onehot():
+    p = Categorical("act", ["a", "b", "c"])
+    enc = p.to_unit("b")
+    assert enc.tolist() == [0.0, 1.0, 0.0]
+    assert p.from_unit(np.asarray([0.2, 0.1, 0.9])) == "c"
+
+
+def test_encode_decode_roundtrip_dict():
+    s = make_space()
+    cfg = {"lr": 3e-4, "momentum": 0.9, "beta2": 0.995, "layers": 6,
+           "batch": 64, "act": "gelu"}
+    out = s.decode(s.encode(cfg))
+    assert out["act"] == "gelu"
+    assert out["layers"] == 6
+    assert out["batch"] == 64
+    assert out["lr"] == pytest.approx(3e-4, rel=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=8, max_size=8))
+def test_decode_encode_projection_idempotent(vec):
+    """round_trip is a projection: applying it twice equals once."""
+    s = make_space()
+    v = np.asarray(vec)
+    once = s.round_trip(v)
+    twice = s.round_trip(once)
+    np.testing.assert_allclose(once, twice, atol=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_samples_within_bounds(seed):
+    s = make_space()
+    for cfg in s.sample(np.random.default_rng(seed), 5):
+        assert 1e-6 <= cfg["lr"] <= 1.0
+        assert 0.0 <= cfg["momentum"] <= 0.99
+        assert 1 <= cfg["layers"] <= 12
+        assert 8 <= cfg["batch"] <= 512
+        assert cfg["act"] in ("relu", "gelu", "silu")
+
+
+def test_random_search_is_loguniform_under_log_scaling():
+    """§5.1: log scaling applies to random search too."""
+    s = SearchSpace([Continuous("c", 1e-9, 1e9, scaling="log")])
+    vals = [c["c"] for c in s.sample(np.random.default_rng(0), 4000)]
+    logs = np.log10(vals)
+    # uniform in [-9, 9]: mean ~0, fraction below 1e-3 ~ 1/3
+    assert abs(np.mean(logs)) < 0.5
+    frac_small = np.mean(np.asarray(vals) < 1e-3)
+    assert 0.28 < frac_small < 0.39
+
+
+def test_warpable_dims_mask():
+    s = make_space()
+    mask = s.warpable_dims()
+    assert mask[:5].all() and not mask[5:].any()

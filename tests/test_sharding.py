@@ -1,0 +1,121 @@
+"""Sharding rules, spec/param alignment, HLO static analyzer unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.launch.hlo_static import analyze_hlo
+from repro.launch.roofline import V5E, model_flops, roofline_terms
+from repro.configs import SHAPES, get_config
+
+
+def _mesh2d():
+    # abstract mesh over the single CPU device (shape math only)
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+class TestLogicalToSpec:
+    def test_basic_mapping(self):
+        mesh = _mesh2d()
+        rules = ShardingRules()
+        spec = logical_to_spec(("fsdp", "ffn"), (128, 256), rules, mesh)
+        assert spec == PartitionSpec("data", "model")
+
+    def test_divisibility_guard(self):
+        mesh = _mesh2d()
+        # force mesh sizes > 1 via a fake shape: use rules against real mesh of 1 — always divisible.
+        # use a 2-device-style check by constructing rules that map to missing axes
+        rules = ShardingRules(batch=("pod", "data"))
+        spec = logical_to_spec(("batch", None), (4, 8), rules, mesh)
+        # 'pod' axis not in mesh -> dropped, only 'data' remains
+        assert spec == PartitionSpec("data")
+
+    def test_duplicate_axis_suppressed(self):
+        mesh = _mesh2d()
+        rules = ShardingRules(heads="model", ffn="model")
+        spec = logical_to_spec(("heads", "ffn"), (16, 64), rules, mesh)
+        # 'model' used once; second occurrence dropped
+        assert spec == PartitionSpec("model")
+
+    def test_unknown_axis_raises(self):
+        with pytest.raises(KeyError):
+            logical_to_spec(("nope",), (4,), ShardingRules(), _mesh2d())
+
+
+class TestHLOStatic:
+    def _compile(self, fn, *args):
+        return jax.jit(fn).lower(*args).compile().as_text()
+
+    def test_matmul_flops(self):
+        a = jnp.zeros((64, 128), jnp.float32)
+        b = jnp.zeros((128, 32), jnp.float32)
+        txt = self._compile(lambda a, b: a @ b, a, b)
+        stats = analyze_hlo(txt)
+        want = 2 * 64 * 128 * 32
+        assert stats.flops == pytest.approx(want, rel=0.2), stats.to_json()
+
+    def test_scan_trip_count_multiplies(self):
+        a = jnp.zeros((64, 64), jnp.float32)
+
+        def f(a):
+            def body(c, _):
+                return c @ a, None
+
+            out, _ = jax.lax.scan(body, a, None, length=17)
+            return out
+
+        txt = self._compile(f, a)
+        stats = analyze_hlo(txt)
+        want = 17 * 2 * 64 * 64 * 64
+        assert stats.flops == pytest.approx(want, rel=0.25), stats.to_json()
+
+    def test_nested_scan_multiplies(self):
+        a = jnp.zeros((32, 32), jnp.float32)
+
+        def f(a):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ a, None
+
+                ci, _ = jax.lax.scan(inner, c, None, length=5)
+                return ci, None
+
+            out, _ = jax.lax.scan(outer, a, None, length=3)
+            return out
+
+        txt = self._compile(f, a)
+        stats = analyze_hlo(txt)
+        want = 15 * 2 * 32**3
+        assert stats.flops == pytest.approx(want, rel=0.3), stats.to_json()
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        out = roofline_terms(197e12, 819e9 * 2, 0.0, chips=1)
+        assert out["compute_s"] == pytest.approx(1.0)
+        assert out["memory_s"] == pytest.approx(2.0)
+        assert out["bottleneck"] == "memory"
+
+    def test_model_flops_train_scale(self):
+        cfg = get_config("qwen2.5-3b")
+        mf = model_flops(cfg, SHAPES["train_4k"])
+        # ~ 6 * 3e9 * 1e6 = 1.9e16, plus attention/head terms
+        assert 1.5e16 < mf < 6e16
+
+    def test_decode_flops_dominated_by_weights_and_cache(self):
+        cfg = get_config("qwen2.5-3b")
+        mf = model_flops(cfg, SHAPES["decode_32k"])
+        # 2 * N * 128 tokens ≈ 7.9e11 plus cache reads
+        assert 5e11 < mf < 5e12
+
+    def test_moe_active_params(self):
+        from repro.launch.roofline import count_params
+
+        cfg = get_config("qwen3-moe-235b-a22b")
+        c = count_params(cfg)
+        assert c["total"] > 2.0e11  # ~235B
+        assert c["active"] < 0.15 * c["total"]  # top-8 of 128 experts

@@ -1,0 +1,219 @@
+"""Workflow-engine integration tests: async slots, retries, early stopping,
+stragglers, checkpoint/restore, elasticity (paper §3 + §4.4 + §5.2)."""
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BOConfig,
+    BOSuggester,
+    Continuous,
+    MedianRule,
+    RandomSuggester,
+    SearchSpace,
+    SobolSuggester,
+    Tuner,
+    TuningJobConfig,
+    WarmStartPool,
+)
+from repro.core.scheduler import SimBackend, ThreadBackend
+from repro.core.trial import TrialState
+
+
+def _space():
+    return SearchSpace([
+        Continuous("lr", 1e-4, 1.0, scaling="log"),
+        Continuous("wd", 1e-5, 1e-1, scaling="log"),
+    ])
+
+
+def _floor(cfg):
+    return (math.log10(cfg["lr"]) + 2) ** 2 + (math.log10(cfg["wd"]) + 3) ** 2
+
+
+def _curve_objective(cfg, n=12, cost=1.0):
+    floor = _floor(cfg)
+    vals = floor + 3.0 * np.exp(-0.5 * np.arange(1, n + 1))
+    return vals, cost
+
+
+class TestSimBackendTuner:
+    def test_sequential_completes_all(self):
+        sugg = RandomSuggester(_space(), seed=0)
+        tuner = Tuner(_space(), _curve_objective, sugg, SimBackend(),
+                      TuningJobConfig(max_trials=6))
+        res = tuner.run()
+        assert len(res.trials) == 6
+        assert all(t.state == TrialState.COMPLETED for t in res.trials)
+        assert math.isfinite(res.best_objective)
+
+    def test_async_parallel_uses_slots(self):
+        sugg = RandomSuggester(_space(), seed=0)
+        backend = SimBackend(startup_cost=1.0)
+        tuner = Tuner(_space(), _curve_objective, sugg, backend,
+                      TuningJobConfig(max_trials=8, max_parallel=4))
+        res = tuner.run()
+        # 8 trials × 12 iters × 1s, 4-way parallel ⇒ ≈ 2 sequential batches
+        assert res.total_time < 8 * 13  # strictly better than sequential
+        assert len(res.trials) == 8
+
+    def test_early_stopping_saves_resource(self):
+        def obj(cfg):
+            return _curve_objective(cfg, n=20)
+
+        def run(rule):
+            sugg = RandomSuggester(_space(), seed=1)
+            tuner = Tuner(_space(), obj, sugg, SimBackend(),
+                          TuningJobConfig(max_trials=12), stopping_rule=rule)
+            return tuner.run()
+
+        res_es = run(MedianRule())
+        res_no = run(None)
+        assert res_es.num_early_stopped > 0
+        assert res_es.total_iterations < res_no.total_iterations
+        # paper Fig. 4: similar final objective
+        assert res_es.best_objective < res_no.best_objective + 1.0
+
+    def test_failures_retried_then_failed(self):
+        calls = {}
+
+        def failure_fn(trial, attempt):
+            # trial 2 fails on every attempt; trial 4 fails once then passes
+            if trial.trial_id == 2:
+                return 0.5
+            if trial.trial_id == 4 and attempt == 1:
+                return 0.3
+            return None
+
+        sugg = RandomSuggester(_space(), seed=2)
+        tuner = Tuner(_space(), _curve_objective, sugg,
+                      SimBackend(failure_fn=failure_fn),
+                      TuningJobConfig(max_trials=6, max_retries=2,
+                                      retry_backoff=0.5))
+        res = tuner.run()
+        t2 = next(t for t in res.trials if t.trial_id == 2)
+        t4 = next(t for t in res.trials if t.trial_id == 4)
+        assert t2.state == TrialState.FAILED
+        assert t2.attempts == 3  # initial + 2 retries
+        assert t4.state == TrialState.COMPLETED
+        assert t4.attempts == 2
+        assert res.num_failed_attempts >= 4
+
+    def test_straggler_timeout_stops_trial(self):
+        def obj(cfg):
+            vals, _ = _curve_objective(cfg, n=50)
+            return vals, 10.0  # very slow trial
+
+        sugg = RandomSuggester(_space(), seed=3)
+        tuner = Tuner(_space(), obj, sugg, SimBackend(),
+                      TuningJobConfig(max_trials=2, trial_timeout=100.0))
+        res = tuner.run()
+        assert all(t.is_terminal for t in res.trials)
+        assert res.num_early_stopped == 2  # both hit the budget
+        assert all(t.resource_used < 50 for t in res.trials)
+
+    def test_checkpoint_restore_resumes(self, tmp_path):
+        path = str(tmp_path / "tuner.json")
+        sugg = RandomSuggester(_space(), seed=4)
+        tuner = Tuner(_space(), _curve_objective, sugg, SimBackend(),
+                      TuningJobConfig(max_trials=5, checkpoint_path=path))
+        res = tuner.run()
+        assert os.path.exists(path)
+
+        sugg2 = RandomSuggester(_space(), seed=4)
+        tuner2 = Tuner(_space(), _curve_objective, sugg2, SimBackend(),
+                       TuningJobConfig(max_trials=5, checkpoint_path=path))
+        tuner2.restore()
+        res2 = tuner2.run()  # nothing left to do
+        assert len(res2.trials) == 5
+        assert res2.best_objective == pytest.approx(res.best_objective)
+
+    def test_restore_requeues_unfinished(self, tmp_path):
+        """A trial that was RUNNING when the tuner died is re-executed."""
+        path = str(tmp_path / "t.json")
+        sugg = RandomSuggester(_space(), seed=5)
+        tuner = Tuner(_space(), _curve_objective, sugg, SimBackend(),
+                      TuningJobConfig(max_trials=3, checkpoint_path=path))
+        # manually create a running trial + checkpoint (simulated crash)
+        tuner._refill_slots()
+        tuner.save()
+        sugg2 = RandomSuggester(_space(), seed=5)
+        tuner2 = Tuner(_space(), _curve_objective, sugg2, SimBackend(),
+                       TuningJobConfig(max_trials=3, checkpoint_path=path))
+        tuner2.restore()
+        res = tuner2.run()
+        assert len(res.trials) == 3
+        assert all(t.is_terminal for t in res.trials)
+
+    def test_elastic_parallelism_change(self):
+        """max_parallel can grow mid-run without breaking state (elasticity)."""
+        sugg = RandomSuggester(_space(), seed=6)
+        backend = SimBackend()
+        tuner = Tuner(_space(), _curve_objective, sugg, backend,
+                      TuningJobConfig(max_trials=10, max_parallel=1))
+
+        def grow(tu, trial):
+            tu.max_parallel = 5
+
+        tuner.callbacks.append(grow)
+        res = tuner.run()
+        assert len(res.trials) == 10
+        assert all(t.is_terminal for t in res.trials)
+
+    def test_pending_never_duplicated(self):
+        """§4.4: async BO must not re-propose pending candidates."""
+        space = _space()
+        sugg = BOSuggester(space, BOConfig(num_init=2).fast(), seed=0)
+        seen = []
+
+        def obj(cfg):
+            seen.append(tuple(sorted(cfg.items())))
+            return _curve_objective(cfg)
+
+        tuner = Tuner(space, obj, sugg, SimBackend(startup_cost=5.0),
+                      TuningJobConfig(max_trials=8, max_parallel=4))
+        tuner.run()
+        assert len(set(seen)) == len(seen), "duplicate configs proposed"
+
+
+class TestThreadBackend:
+    def test_live_objective_with_reports(self):
+        space = _space()
+
+        def live_obj(cfg, report):
+            floor = _floor(cfg)
+            v = floor + 1.0
+            for i in range(5):
+                v = floor + 1.0 * (0.5**i)
+                if not report(v):
+                    return v
+            return v
+
+        sugg = SobolSuggester(space, seed=0)
+        backend = ThreadBackend(max_workers=4)
+        tuner = Tuner(space, live_obj, sugg, backend,
+                      TuningJobConfig(max_trials=6, max_parallel=3))
+        res = tuner.run()
+        backend.shutdown()
+        assert len(res.trials) == 6
+        assert all(t.state == TrialState.COMPLETED for t in res.trials)
+        assert all(len(t.curve) == 5 for t in res.trials)
+
+    def test_exception_becomes_failed_trial(self):
+        space = _space()
+        def bad_obj(cfg, report):
+            raise RuntimeError("boom")
+
+        sugg = SobolSuggester(space, seed=1)
+        backend = ThreadBackend(max_workers=2)
+        tuner = Tuner(space, bad_obj, sugg, backend,
+                      TuningJobConfig(max_trials=2, max_retries=1,
+                                      retry_backoff=0.01))
+        res = tuner.run()
+        backend.shutdown()
+        assert all(t.state == TrialState.FAILED for t in res.trials)
+        assert all("boom" in (t.error or "") for t in res.trials)

@@ -1,0 +1,69 @@
+"""Hypothesis property tests for the workflow engine: under arbitrary failure
+injection, parallelism, and curve shapes, the tuner must always terminate
+with every trial in a terminal state and a coherent result."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Continuous,
+    MedianRule,
+    RandomSuggester,
+    SearchSpace,
+    Tuner,
+    TuningJobConfig,
+)
+from repro.core.scheduler import SimBackend
+from repro.core.trial import TrialState
+
+
+def _space():
+    return SearchSpace([Continuous("x", 1e-3, 1.0, scaling="log")])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),  # failure pattern seed
+    st.integers(1, 6),  # parallelism
+    st.integers(1, 10),  # trials
+    st.floats(0.0, 0.9),  # failure probability
+    st.booleans(),  # median rule on/off
+)
+def test_tuner_always_terminates_coherently(seed, parallel, trials, p_fail, use_median):
+    frng = np.random.default_rng(seed)
+
+    def failure_fn(trial, attempt):
+        return 0.5 if frng.random() < p_fail else None
+
+    def objective(cfg):
+        n = 3 + int(10 * cfg["x"])
+        vals = 1.0 / cfg["x"] * np.exp(-0.3 * np.arange(1, n + 1)) + cfg["x"]
+        return vals, 1.0
+
+    tuner = Tuner(
+        _space(),
+        objective,
+        RandomSuggester(_space(), seed=seed % 997),
+        SimBackend(failure_fn=failure_fn),
+        TuningJobConfig(max_trials=trials, max_parallel=parallel,
+                        max_retries=2, retry_backoff=0.1),
+        stopping_rule=MedianRule() if use_median else None,
+    )
+    res = tuner.run()
+
+    # invariants
+    assert len(res.trials) == trials
+    assert all(t.is_terminal for t in res.trials)
+    completed = [t for t in res.trials
+                 if t.state in (TrialState.COMPLETED, TrialState.STOPPED)]
+    if completed:
+        assert math.isfinite(res.best_objective)
+        assert res.best_objective == min(t.objective for t in completed)
+    failed = [t for t in res.trials if t.state == TrialState.FAILED]
+    for t in failed:
+        assert t.attempts == 3  # initial + max_retries
+    # virtual time advances monotonically in the timeline
+    times = [t for t, _ in res.timeline]
+    assert times == sorted(times)

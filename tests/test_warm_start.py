@@ -1,0 +1,85 @@
+"""Warm start (paper §5.3): transferability rules, z-scoring, the §6.2 edge case."""
+
+import numpy as np
+import pytest
+
+from repro.core import Continuous, Integer, Categorical, SearchSpace, WarmStartPool, transferable
+
+
+def _space(scaling="linear", low=0.0):
+    return SearchSpace([
+        Continuous("x", low, 1.0, scaling=scaling),
+        Categorical("act", ["a", "b"]),
+    ])
+
+
+def test_linear_parent_log_child_drops_zero():
+    """The paper's §6.2 lesson: 0 explored in a linear-scaled parent is
+    invalid in a log-scaled child and must be dropped, not clipped."""
+    parent_space = _space("linear", low=0.0)
+    child_space = _space("log", low=1e-3)
+    pool = WarmStartPool()
+    pool.add_parent([
+        ({"x": 0.0, "act": "a"}, 1.0),   # invalid under log child
+        ({"x": 0.5, "act": "a"}, 2.0),
+        ({"x": 0.9, "act": "b"}, 3.0),
+    ])
+    x, y, tid, dropped = pool.export(child_space)
+    assert dropped == 1
+    assert len(x) == 2
+
+
+def test_out_of_bounds_and_unknown_choice_dropped():
+    child = _space()
+    assert not transferable(child, {"x": 1.5, "act": "a"})
+    assert not transferable(child, {"x": 0.5, "act": "zzz"})
+    assert not transferable(child, {"act": "a"})  # missing HP
+    assert transferable(child, {"x": 0.5, "act": "a"})
+
+
+def test_per_task_zscoring():
+    child = _space()
+    pool = WarmStartPool()
+    # two parents on wildly different objective scales
+    pool.add_parent([({"x": v, "act": "a"}, 1000.0 * v) for v in (0.1, 0.5, 0.9)])
+    pool.add_parent([({"x": v, "act": "b"}, 0.001 * v) for v in (0.2, 0.6, 0.8)])
+    x, y, tid, _ = pool.export(child)
+    assert len(x) == 6
+    # each task is z-scored: per-task mean 0, std 1
+    for t in (0, 1):
+        ys = y[tid == t]
+        assert abs(ys.mean()) < 1e-9
+        assert ys.std() == pytest.approx(1.0, rel=1e-6)
+
+
+def test_single_point_parent_skipped():
+    child = _space()
+    pool = WarmStartPool()
+    pool.add_parent([({"x": 0.5, "act": "a"}, 1.0)])
+    x, y, tid, dropped = pool.export(child)
+    assert len(x) == 0 and dropped == 1
+
+
+def test_nonfinite_parent_obs_dropped():
+    child = _space()
+    pool = WarmStartPool()
+    pool.add_parent([
+        ({"x": 0.1, "act": "a"}, float("nan")),
+        ({"x": 0.5, "act": "a"}, 1.0),
+        ({"x": 0.9, "act": "a"}, 2.0),
+    ])
+    x, _, _, _ = pool.export(child)
+    assert len(x) == 2
+
+
+def test_state_roundtrip():
+    child = _space()
+    pool = WarmStartPool()
+    pool.add_parent([({"x": 0.3, "act": "a"}, 1.0), ({"x": 0.6, "act": "b"}, 2.0)],
+                    name="job-1")
+    p2 = WarmStartPool()
+    p2.load_state_dict(pool.state_dict())
+    a = pool.export(child)
+    b = p2.export(child)
+    np.testing.assert_allclose(a[0], b[0])
+    np.testing.assert_allclose(a[1], b[1])
