@@ -1,0 +1,171 @@
+"""Per-decision latency and batched-refill throughput of the BO engine.
+
+Compares the seed's stateless decision path (full GPHP re-sampling + full
+Cholesky refactorization on every call — ``BOConfig(incremental=False)``)
+against the incremental engine (``refit_every=5``: cached slice samples,
+rank-1 posterior appends between refits) across history sizes
+n ∈ {32, 64, 128, 256, 512}. Also measures batched slot refill:
+``suggest_batch(8)`` (one pipeline pass + fantasized interim picks) vs 8
+sequential single-slot decisions.
+
+Both arms use an identical, deliberately small slice-sampling budget so the
+*relative* speedup isolates the engine change, not the MCMC budget; the
+absolute from-scratch latency scales with ``SliceSamplerConfig`` exactly as
+the paper's §4.2 cost model predicts.
+
+Writes ``BENCH_suggest.json`` (repo root by default) and returns CSV rows
+for ``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core import BOConfig, BOSuggester, Continuous, ObservationStore, SearchSpace
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+
+# tiny but structurally faithful MCMC budget (burn-in + thinning kept)
+BENCH_SLICE = SliceSamplerConfig(num_samples=12, burn_in=6, thin=2)
+SIZES = (32, 64, 128, 256, 512)
+DECISIONS = 5  # timed decisions per arm (median reported)
+BATCH_K = 8
+
+_D = 4
+
+
+def _space() -> SearchSpace:
+    return SearchSpace([Continuous(f"x{i}", 0.0, 1.0) for i in range(_D)])
+
+
+def _objective(cfg) -> float:
+    return float(sum((cfg[f"x{i}"] - 0.5 + 0.1 * i) ** 2 for i in range(_D)))
+
+
+def _seed_store(space: SearchSpace, n: int, rng: np.random.Generator) -> ObservationStore:
+    store = ObservationStore(space)
+    for c in space.sample(rng, n):
+        store.push(c, _objective(c))
+    return store
+
+
+def _config(incremental: bool) -> BOConfig:
+    return BOConfig(
+        num_init=3,
+        slice_config=BENCH_SLICE,
+        refit_every=5 if incremental else 1,
+        incremental=incremental,
+    )
+
+
+def _run_arm(space: SearchSpace, n: int, incremental: bool, seed: int = 0) -> List[float]:
+    """Median-of-DECISIONS per-decision wall time (s) for one arm.
+
+    Seeds ``n - 8`` observations so the warm-up push plus the timed decisions
+    stay inside the n-row shape bucket (no recompile mid-measurement)."""
+    rng = np.random.default_rng(seed)
+    store = _seed_store(space, n - 8, rng)
+    sugg = BOSuggester(space, _config(incremental), seed=seed, store=store)
+    # warm-up: compiles every jitted piece for this bucket (and, for the
+    # incremental arm, performs the initial refit whose samples get cached)
+    cfg = sugg.suggest_batch(1)[0]
+    store.push(cfg, _objective(cfg))
+    times = []
+    for _ in range(DECISIONS):
+        t0 = time.perf_counter()
+        cfg = sugg.suggest_batch(1)[0]
+        times.append(time.perf_counter() - t0)
+        store.push(cfg, _objective(cfg))
+    return times
+
+
+def _run_batch(space: SearchSpace, n: int, k: int, mode: str, seed: int = 0) -> float:
+    """Wall time (s) to fill k simultaneously freed slots at history size n.
+
+    mode: "seed" — the stateless path (k full re-fit pipelines, what the seed
+    tuner did when k slots freed at once); "sequential" — k single-slot calls
+    on the incremental engine; "batched" — one ``suggest_batch(k)`` pass.
+    """
+    rng = np.random.default_rng(seed)
+    store = _seed_store(space, n - 8, rng)
+    sugg = BOSuggester(
+        space, _config(incremental=mode != "seed"), seed=seed, store=store
+    )
+    out = sugg.suggest_batch(1)  # compile (+ initial refit on the incr. arms)
+    store.mark_pending("warm", out[0])
+    store.clear_pending("warm")
+    t0 = time.perf_counter()
+    if mode == "batched":
+        picks = sugg.suggest_batch(k)
+        for i, c in enumerate(picks):
+            store.mark_pending(i, c)
+    else:
+        for i in range(k):
+            c = sugg.suggest_batch(1)[0]
+            store.mark_pending(i, c)
+    return time.perf_counter() - t0
+
+
+def run(sizes=SIZES, out_path: str | None = None) -> List[Tuple[str, float, str]]:
+    space = _space()
+    rows: List[Tuple[str, float, str]] = []
+    report = {
+        "config": {
+            "dims": _D,
+            "slice": {"num_samples": BENCH_SLICE.num_samples,
+                      "burn_in": BENCH_SLICE.burn_in, "thin": BENCH_SLICE.thin},
+            "refit_every": 5,
+            "decisions": DECISIONS,
+            "batch_k": BATCH_K,
+        },
+        "per_decision": [],
+        "batched_refill": [],
+    }
+    for n in sizes:
+        scratch = _run_arm(space, n, incremental=False)
+        incr = _run_arm(space, n, incremental=True)
+        med_s, med_i = float(np.median(scratch)), float(np.median(incr))
+        speedup = med_s / med_i if med_i > 0 else float("inf")
+        report["per_decision"].append({
+            "n": n,
+            "scratch_median_ms": med_s * 1e3,
+            "incremental_median_ms": med_i * 1e3,
+            "scratch_all_ms": [t * 1e3 for t in scratch],
+            "incremental_all_ms": [t * 1e3 for t in incr],
+            "speedup": speedup,
+        })
+        rows.append((f"suggest_scratch_n{n}_us", med_s * 1e6, "median/decision"))
+        rows.append((f"suggest_incremental_n{n}_us", med_i * 1e6,
+                     f"{speedup:.1f}x"))
+
+    for n in (64, 256):
+        t_seed = _run_batch(space, n, BATCH_K, mode="seed")
+        t_seq = _run_batch(space, n, BATCH_K, mode="sequential")
+        t_bat = _run_batch(space, n, BATCH_K, mode="batched")
+        report["batched_refill"].append({
+            "n": n, "k": BATCH_K,
+            "seed_stateless_ms": t_seed * 1e3,
+            "sequential_incremental_ms": t_seq * 1e3,
+            "batched_ms": t_bat * 1e3,
+            "configs_per_sec_batched": BATCH_K / t_bat if t_bat > 0 else float("inf"),
+            "speedup_vs_seed": t_seed / t_bat if t_bat > 0 else float("inf"),
+            "speedup_vs_sequential": t_seq / t_bat if t_bat > 0 else float("inf"),
+        })
+        rows.append((f"refill_batch{BATCH_K}_n{n}_us", t_bat * 1e6,
+                     f"{t_seed / t_bat:.1f}x_vs_seed"))
+
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_suggest.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

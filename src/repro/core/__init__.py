@@ -25,6 +25,7 @@ from repro.core.search_space import (  # noqa: E402
     ScalingType,
     SearchSpace,
 )
+from repro.core.history import ObservationStore  # noqa: E402
 from repro.core.suggest import (  # noqa: E402
     BOConfig,
     BOSuggester,
@@ -46,6 +47,7 @@ __all__ = [
     "Integer",
     "ScalingType",
     "SearchSpace",
+    "ObservationStore",
     "BOConfig",
     "BOSuggester",
     "RandomSuggester",

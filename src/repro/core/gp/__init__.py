@@ -1,5 +1,11 @@
 from repro.core.gp.params import GPHyperParams, GPHyperBounds, default_bounds
 from repro.core.gp.gp import GPPosterior, fit_gp, log_marginal_likelihood, predict
+from repro.core.gp.incremental import (
+    cholesky_append_row,
+    grow_posterior,
+    posterior_append,
+    refresh_alpha,
+)
 from repro.core.gp.kernels import matern52_ard
 from repro.core.gp.warping import kumaraswamy_cdf, warp_inputs
 
@@ -11,6 +17,10 @@ __all__ = [
     "fit_gp",
     "log_marginal_likelihood",
     "predict",
+    "cholesky_append_row",
+    "grow_posterior",
+    "posterior_append",
+    "refresh_alpha",
     "matern52_ard",
     "kumaraswamy_cdf",
     "warp_inputs",

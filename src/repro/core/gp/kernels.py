@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core.gp.params import GPHyperParams
 from repro.core.gp.warping import warp_inputs
 
-__all__ = ["matern52_ard", "gram", "SQRT5"]
+__all__ = ["matern52_ard", "gram", "gram_cross", "SQRT5"]
 
 SQRT5 = 2.2360679774997896
 
@@ -75,3 +75,24 @@ def gram(
 
         return matern52_gram(x1, x2, params, warp=warp)
     raise ValueError(f"unknown gram backend {backend!r}")
+
+
+def gram_cross(
+    x_new: jax.Array,
+    x_train: jax.Array,
+    params: GPHyperParams,
+    *,
+    warp: bool = True,
+    backend: str = "xla",
+) -> jax.Array:
+    """Single cross-covariance row k(x_new, X): (d,), (n, d) -> (n,).
+
+    The rank-1 posterior append (``repro.core.gp.incremental``) needs only
+    this row, not the full n×n gram; the Pallas backend dispatches to the
+    dedicated ``matern52_cross`` row kernel.
+    """
+    if backend == "pallas":
+        from repro.kernels.matern52.ops import matern52_cross
+
+        return matern52_cross(x_new, x_train, params, warp=warp)
+    return matern52_ard(x_new[None, :], x_train, params, warp=warp)[0]

@@ -1,0 +1,215 @@
+"""Stateful observation store for the incremental BO decision engine.
+
+The paper's asynchronous loop (§4.4) updates the surrogate the moment an
+evaluation finishes and refills the freed slot. The seed implementation was
+stateless: every decision re-encoded the full ``List[Tuple[dict, float]]``
+history, so per-decision cost grew with the job instead of being amortized.
+``ObservationStore`` is the event-sourced replacement:
+
+  * encoded inputs live in a capacity-doubled (power-of-two bucketed) array,
+    so the suggester can view them zero-copy and pad to the GP's shape bucket
+    without rebuilding;
+  * objectives stay resident, so the standardization the GP needs (paper
+    §4.2: zero mean / unit std) is one numerically stable O(n) vector pass
+    per decision — never a re-encode of the dict history;
+  * warm-start parent observations (paper §5.3) are folded in **once** at
+    construction, pre-encoded and per-task z-scored, instead of being decoded
+    to dicts and re-encoded on every suggestion;
+  * the pending set (configs submitted but not finished) is tracked by key so
+    the §4.4 "never re-propose a pending candidate" rule and fantasizing
+    strategies read it directly;
+  * a monotone ``version`` lets a cached GP posterior discover exactly which
+    rows were appended since it was factorized and apply rank-1 updates
+    (see ``repro.core.gp.incremental``) instead of refactorizing.
+
+Rows are append-only and live rows always form a prefix, which is the
+invariant the rank-1 Cholesky append relies on.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Hashable, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.search_space import SearchSpace
+
+__all__ = ["ObservationStore", "bucket_size"]
+
+Observation = Tuple[Mapping[str, Any], float]
+
+_STD_FLOOR = 1e-12
+
+
+def bucket_size(n: int, floor: int = 8) -> int:
+    """Next power-of-two shape bucket ≥ n (jit recompiles stay logarithmic)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+class ObservationStore:
+    """Encoded (X, y) history + pending set for one tuning job.
+
+    Layout: rows ``[0, num_parents)`` hold warm-start parent observations
+    (y already z-scored per parent task); rows ``[num_parents, n)`` hold this
+    job's own observations with raw objectives. ``standardized()`` reproduces
+    the seed pipeline's values exactly: own rows are z-scored against each
+    other when parents are present, then the combined vector is standardized
+    to zero mean / unit std.
+    """
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        warm_start=None,
+        capacity_floor: int = 8,
+    ):
+        self.space = space
+        d = space.encoded_dim
+        if warm_start is not None and getattr(warm_start, "num_parents", 0) > 0:
+            px, pz, _, _ = warm_start.export(space)
+        else:
+            px = np.zeros((0, d))
+            pz = np.zeros((0,))
+        self._num_parents = int(px.shape[0])
+        cap = bucket_size(max(capacity_floor, self._num_parents))
+        self._x = np.zeros((cap, d), dtype=np.float64)
+        self._y = np.zeros((cap,), dtype=np.float64)
+        self._x[: self._num_parents] = px
+        self._y[: self._num_parents] = pz
+        self._n_own = 0
+        self._pending: Dict[Hashable, Tuple[Dict[str, Any], np.ndarray]] = {}
+
+    # ------------------------------------------------------------- counters
+    @property
+    def num_parents(self) -> int:
+        return self._num_parents
+
+    @property
+    def num_own(self) -> int:
+        return self._n_own
+
+    @property
+    def num_observations(self) -> int:
+        """Total rows (parents + own). Doubles as the store ``version``: rows
+        are append-only, so this value identifies the X prefix exactly."""
+        return self._num_parents + self._n_own
+
+    @property
+    def version(self) -> int:
+        return self.num_observations
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------ mutation
+    def push(self, config: Mapping[str, Any], y: float) -> bool:
+        """Append one finished observation. Non-finite objectives are dropped
+        (they must neither seed the GP nor shift the standardization)."""
+        return self.push_encoded(self.space.encode(config), y)
+
+    def push_encoded(self, x: np.ndarray, y: float) -> bool:
+        y = float(y)
+        if not math.isfinite(y):
+            return False
+        n = self.num_observations
+        if n >= self._x.shape[0]:
+            self._grow(bucket_size(n + 1))
+        self._x[n] = x
+        self._y[n] = y
+        self._n_own += 1
+        return True
+
+    def _grow(self, cap: int) -> None:
+        d = self._x.shape[1]
+        x = np.zeros((cap, d), dtype=np.float64)
+        y = np.zeros((cap,), dtype=np.float64)
+        n = self.num_observations
+        x[:n], y[:n] = self._x[:n], self._y[:n]
+        self._x, self._y = x, y
+
+    def mark_pending(self, key: Hashable, config: Mapping[str, Any]) -> None:
+        self._pending[key] = (dict(config), self.space.encode(config))
+
+    def clear_pending(self, key: Hashable) -> None:
+        self._pending.pop(key, None)
+
+    # --------------------------------------------------------------- views
+    def x_rows(self, start: int, stop: int) -> np.ndarray:
+        """Encoded rows [start, stop) — the append log a cached posterior
+        reads to catch up via rank-1 updates."""
+        return self._x[start:stop]
+
+    def pending_encoded(self) -> np.ndarray:
+        if not self._pending:
+            return np.zeros((0, self.space.encoded_dim))
+        return np.stack([x for _, x in self._pending.values()], axis=0)
+
+    def pending_configs(self) -> List[Dict[str, Any]]:
+        return [dict(c) for c, _ in self._pending.values()]
+
+    # ------------------------------------------------------ standardization
+    def _own_moments(self) -> Tuple[float, float]:
+        # two-pass moments: the one-pass sumsq/n − mean² form cancels
+        # catastrophically for large-mean objectives (e.g. 1e9 ± 1e-3),
+        # which would squash own z-scores to noise next to parent rows.
+        own = self._y[self._num_parents : self.num_observations]
+        if len(own) == 0:
+            return 0.0, 1.0
+        mean = float(own.mean())
+        std = float(own.std())
+        return mean, std if std > _STD_FLOOR else 1.0
+
+    def combined_y(self) -> np.ndarray:
+        """Parent z-scores followed by own objectives (own z-scored against
+        each other iff parents are present and ≥ 2 own rows exist — the
+        per-task alignment of paper §5.3)."""
+        n, npar = self.num_observations, self._num_parents
+        y = self._y[:n].copy()
+        if npar > 0 and self._n_own >= 2:
+            mean, std = self._own_moments()
+            y[npar:] = (y[npar:] - mean) / std
+        return y
+
+    def standardized(self) -> Tuple[np.ndarray, np.ndarray, float, float]:
+        """(X_view, y_std, mean, scale): the zero-mean/unit-std targets the GP
+        consumes, plus the affine used (to map predictions back if needed).
+        X_view is a read-only prefix view — copy before mutating."""
+        n = self.num_observations
+        y = self.combined_y()
+        if n == 0:
+            return self._x[:0], y, 0.0, 1.0
+        mean = float(y.mean())
+        std = float(y.std())
+        scale = std if std > _STD_FLOOR else 1.0
+        return self._x[:n], (y - mean) / scale, mean, scale
+
+    # -------------------------------------------------------------- export
+    def history_pairs(self) -> List[Observation]:
+        """Decoded (config, objective) pairs in the seed suggester-history
+        convention — the compatibility feed for stateless suggesters."""
+        n = self.num_observations
+        y = self.combined_y()
+        return [
+            (self.space.decode(self._x[i]), float(y[i])) for i in range(n)
+        ]
+
+    # ---------------------------------------------------------- persistence
+    def state_dict(self) -> Dict[str, Any]:
+        """Own rows only: parents are reconstructed from the warm-start pool
+        (which checkpoints separately), pending from the trial table."""
+        npar, n = self._num_parents, self.num_observations
+        return {
+            "own_x": self._x[npar:n].tolist(),
+            "own_y": self._y[npar:n].tolist(),
+        }
+
+    def load_state_dict(self, state: Mapping[str, Any]) -> None:
+        self._n_own = 0
+        self._pending.clear()
+        for x, y in zip(state["own_x"], state["own_y"]):
+            self.push_encoded(np.asarray(x, dtype=np.float64), float(y))

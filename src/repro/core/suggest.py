@@ -1,24 +1,41 @@
-"""Candidate suggestion: the BO engine of AMT (paper §4) plus random search.
+"""Candidate suggestion: the incremental BO decision engine of AMT (paper §4).
 
-``BOSuggester.suggest(history, pending)`` implements one decision step:
+The engine is *stateful*: it reads observations from an
+``ObservationStore`` (``repro.core.history``) and keeps two caches between
+decisions so the per-decision cost is amortized, which is what makes the
+paper's asynchronous slot-refill loop (§4.4) serve at fleet scale:
 
-  1. Encode history into the unit cube; standardize observations to zero
-     mean / unit std (paper §4.2).
-  2. Optionally *fantasize* pending candidates (constant-liar or
-     kriging-believer) — the paper's §4.4 notes plain async BO ignores the
-     information in pending picks and suggests fantasizing as the remedy; we
-     implement it behind ``pending_strategy`` (default: the paper-faithful
-     "exclude" — never re-propose a pending point).
-  3. Fit GPHPs by slice sampling (paper default; 10 effective samples) or
-     MAP-II empirical Bayes.
-  4. Optimize the integrated EI over Sobol anchors + gradient refinement.
-  5. Round-trip the winner through the search space (ints rounded, one-hots
-     snapped) and de-duplicate against history/pending; fall back to the next
-     candidate, then to a fresh Sobol point.
+  * **GPHP samples** — slice-sampling (paper default, §4.2) is the dominant
+    cost. ``BOConfig.refit_every`` re-samples only after that many *new*
+    observations; between refits the cached draws are reused and only the
+    posterior factors change.
+  * **Cholesky factors** — one ``GPPosterior`` per GPHP sample is cached.
+    A new observation is folded in by a rank-1 border append
+    (``repro.core.gp.incremental``, O(S·n²)) instead of refactorizing at
+    O(S·n³); ``alpha`` is recomputed each decision because the running
+    standardization rescales every target.
+
+One decision step (``suggest_batch``):
+
+  1. Read the store's standardized snapshot (encoded X, zero-mean/unit-std y
+     — paper §4.2); cold-start from a Sobol design below ``num_init`` (§2.1).
+  2. Bring the cached posterior up to date (refit / rank-1 appends).
+  3. Handle pending candidates (§4.4): "exclude" (paper-faithful — never
+     re-propose), or fantasize them onto a scratch posterior via the same
+     rank-1 append ("liar" / "kb", beyond-paper).
+  4. For each of the k freed slots: optimize integrated EI over Sobol anchors
+     + gradient refinement (§4.3), round-trip the winner through the search
+     space, de-duplicate, then fantasize the interim pick so the remaining
+     slots are filled from one pipeline pass instead of k full pipelines.
+
+``suggest(history, pending)`` remains as a compatibility wrapper: it syncs a
+private store by prefix-diffing the passed history (append-only callers get
+the incremental path for free; anything else falls back to a full rebuild,
+i.e. the seed's stateless behavior).
 
 Shape bucketing keeps jit recompiles logarithmic in the number of
-observations. The first ``num_init`` suggestions come from a Sobol design
-(§2.1: quasi-random initialization).
+observations; growing into a larger bucket pads the cached factors with an
+identity block rather than refactorizing.
 """
 
 from __future__ import annotations
@@ -34,11 +51,17 @@ from repro.core.gp import gp as gplib
 from repro.core.gp import params as gpparams
 from repro.core.gp.empirical_bayes import EmpiricalBayesConfig
 from repro.core.gp.fit import map_gphps, mcmc_gphps
+from repro.core.gp.incremental import (
+    grow_posterior,
+    posterior_append,
+    refresh_alpha,
+)
 from repro.core.gp.slice_sampler import (
     FAST_CONFIG,
     PAPER_CONFIG,
     SliceSamplerConfig,
 )
+from repro.core.history import ObservationStore, bucket_size
 from repro.core.optimize_acq import AcqOptConfig, optimize_acquisition
 from repro.core.search_space import SearchSpace
 from repro.core.sobol import SobolSequence
@@ -46,13 +69,6 @@ from repro.core.sobol import SobolSequence
 __all__ = ["BOConfig", "BOSuggester", "RandomSuggester", "SobolSuggester"]
 
 Observation = Tuple[Mapping[str, Any], float]
-
-
-def _bucket(n: int, floor: int = 8) -> int:
-    b = floor
-    while b < n:
-        b *= 2
-    return b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +84,8 @@ class BOConfig:
     liar_value: float = 0.0  # standardized-space constant liar (0 = mean liar)
     dedupe_tol: float = 1e-6  # L∞ tolerance for duplicate candidates
     max_pending: int = 64  # static pad size for the pending buffer
+    refit_every: int = 1  # re-sample GPHPs after this many new observations
+    incremental: bool = True  # rank-1 posterior updates between refits
 
     def fast(self) -> "BOConfig":
         """Cheaper MCMC settings for many-seed benchmark sweeps."""
@@ -75,9 +93,18 @@ class BOConfig:
 
 
 class BOSuggester:
-    """Sequential/asynchronous Bayesian-optimization suggester (minimize)."""
+    """Stateful sequential/asynchronous Bayesian-optimization suggester
+    (minimize). Bind an ``ObservationStore`` (``bind_store``) and call
+    ``suggest_batch(k)``; or use the stateless ``suggest(history, pending)``
+    compatibility API."""
 
-    def __init__(self, space: SearchSpace, config: BOConfig = BOConfig(), seed: int = 0):
+    def __init__(
+        self,
+        space: SearchSpace,
+        config: BOConfig = BOConfig(),
+        seed: int = 0,
+        store: Optional[ObservationStore] = None,
+    ):
         self.space = space
         self.config = config
         self._rng = np.random.default_rng(seed)
@@ -91,11 +118,60 @@ class BOSuggester:
         # persisted slice-chain state: warm-starts the next chain (paper runs
         # one chain per decision; warm chains amortize burn-in).
         self._chain_state: Optional[np.ndarray] = None
+        # --- incremental-engine caches -----------------------------------
+        self._store: Optional[ObservationStore] = store
+        self._wrapper_store: Optional[ObservationStore] = None
+        self._wrapper_fps: List[Tuple[float, bytes]] = []
+        self._cached_samples: Optional[np.ndarray] = None  # packed (S, 3d+2)
+        self._cached_post = None  # GPPosterior for store rows [0, _cached_n)
+        self._cached_n = 0  # observations folded into the cadence accounting
+        self._obs_since_refit = 0
+        self._cache_token: Optional[int] = None  # id() of the cached store
 
     # ------------------------------------------------------------------ rng
     def _next_key(self) -> jax.Array:
         self._key, sub = jax.random.split(self._key)
         return sub
+
+    # ----------------------------------------------------------- store glue
+    def bind_store(self, store: ObservationStore) -> None:
+        """Attach the engine to a live observation store (the Tuner does this
+        at construction and after restore). Cached GPHP samples survive a
+        rebind — the cadence state may have been checkpoint-restored — but
+        the factorization is rebuilt lazily against the new store."""
+        self._store = store
+        self._cached_post = None
+        self._cache_token = None
+
+    def reset_cache(self) -> None:
+        self._cached_samples = None
+        self._cached_post = None
+        self._cached_n = 0
+        self._obs_since_refit = 0
+        self._cache_token = None
+
+    def _sync_wrapper_store(self, history: Sequence[Observation]) -> ObservationStore:
+        """Mirror a caller-owned history list into a private store. Append-only
+        callers hit the incremental path; any rewrite of already-seen entries
+        falls back to a fresh store + full refit (stateless semantics)."""
+        fps: List[Tuple[float, bytes]] = []
+        entries: List[Tuple[np.ndarray, float]] = []
+        for cfg_, y in history:
+            x = self.space.encode(cfg_)
+            entries.append((x, float(y)))
+            fps.append((float(y), x.tobytes()))
+        fresh = self._wrapper_store is None
+        if not fresh and fps[: len(self._wrapper_fps)] == self._wrapper_fps:
+            tail = entries[len(self._wrapper_fps):]
+        else:
+            if not fresh:  # prefix rewritten: cached state describes stale data
+                self.reset_cache()
+            self._wrapper_store = ObservationStore(self.space)
+            tail = entries
+        for x, y in tail:
+            self._wrapper_store.push_encoded(x, y)
+        self._wrapper_fps = fps
+        return self._wrapper_store
 
     # ------------------------------------------------------------- main api
     def suggest(
@@ -103,80 +179,181 @@ class BOSuggester:
         history: Sequence[Observation],
         pending: Sequence[Mapping[str, Any]] = (),
     ) -> Dict[str, Any]:
+        """Compatibility wrapper: one decision from an explicit history."""
+        store = self._sync_wrapper_store(history)
+        pend_np = (
+            self.space.encode_batch(list(pending))
+            if pending
+            else np.zeros((0, self.space.encoded_dim))
+        )
+        return self._decide(store, 1, pend_np)[0]
+
+    def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
+        """Fill k freed slots in one engine pass (batched slot refill)."""
+        if self._store is None:
+            raise RuntimeError("suggest_batch requires a bound ObservationStore")
+        return self._decide(self._store, k, self._store.pending_encoded())
+
+    # ------------------------------------------------------------ decisions
+    def _decide(
+        self, store: ObservationStore, k: int, pend_np: np.ndarray
+    ) -> List[Dict[str, Any]]:
         cfg = self.config
-        if len(history) < cfg.num_init:
-            return self._quasi_random(history, pending)
+        space = self.space
+        n = store.num_observations
+        picks: List[np.ndarray] = []
+        out: List[Dict[str, Any]] = []
 
-        x_np = self.space.encode_batch([h[0] for h in history])
-        y_np = np.asarray([h[1] for h in history], dtype=np.float64)
-        finite = np.isfinite(y_np)
-        if finite.sum() < max(2, cfg.num_init):
-            return self._quasi_random(history, pending)
-        x_np, y_np = x_np[finite], y_np[finite]
+        if n < max(2, cfg.num_init):
+            x_seen = store.x_rows(0, n)
+            for _ in range(k):
+                config, vec = self._quasi_random(
+                    self._seen_matrix(x_seen, pend_np, picks)
+                )
+                picks.append(vec)
+                out.append(config)
+            return out
 
-        # --- standardize (paper: zero-mean normalization) ------------------
-        y_mean, y_std = float(y_np.mean()), float(y_np.std())
-        y_std = y_std if y_std > 1e-12 else 1.0
-        y_n = (y_np - y_mean) / y_std
+        x_all, y_std, _, _ = store.standardized()
+        post = self._posterior_for(store, x_all, y_std)
+        size = post.x_train.shape[0]
+        y_live = np.zeros(size)
+        y_live[:n] = y_std
+        post = refresh_alpha(post, jnp.asarray(y_live))
+        self._cached_post = post
+        y_best = jnp.asarray(float(y_std.min()))  # best *real* observation
 
-        pend_np = self.space.encode_batch(list(pending)) if pending else np.zeros(
-            (0, self.space.encoded_dim)
-        )
-
-        # --- fantasize pending (beyond-paper strategies) -------------------
-        n_real = x_np.shape[0]
-        if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
-            fantasy = self._fantasy_values(x_np, y_n, pend_np)
-            x_np = np.concatenate([x_np, pend_np], axis=0)
-            y_n = np.concatenate([y_n, fantasy], axis=0)
-
-        # --- pad to bucket --------------------------------------------------
-        n = x_np.shape[0]
-        nb = _bucket(n)
-        d = self.space.encoded_dim
-        x_pad = np.zeros((nb, d))
-        y_pad = np.zeros((nb,))
-        x_pad[:n], y_pad[:n] = x_np, y_n
-        mask = np.zeros(nb, dtype=bool)
-        mask[:n] = True
-        xj, yj, mj = jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
-
-        # --- GPHP inference --------------------------------------------------
-        params_batch = self._fit_gphps(xj, yj, mj)
-        post = gplib.fit_posterior_batch(
-            xj, yj, params_batch, mj, backend=cfg.acq.backend
-        )
-
-        # --- acquisition optimization ---------------------------------------
-        y_best = jnp.asarray(float(y_n[:n_real].min()))  # best *real* observation
+        # --- pending (§4.4) + scratch posterior for fantasies ---------------
+        d = space.encoded_dim
         pend_buf = np.zeros((cfg.max_pending, d))
         pend_mask = np.zeros(cfg.max_pending, dtype=bool)
-        p = min(len(pend_np), cfg.max_pending)
-        if cfg.pending_strategy == "exclude" and p > 0:
-            pend_buf[:p] = pend_np[:p]
-            pend_mask[:p] = True
-        cands, _ = optimize_acquisition(
-            post,
-            self._anchors,
-            y_best,
-            jnp.asarray(pend_buf),
-            jnp.asarray(pend_mask),
-            self._next_key(),
-            cfg.acq,
+        n_excl = 0
+        work = post
+        y_work = list(y_live[: n])
+        if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
+            for xp in pend_np:
+                work, y_work = self._fantasy_append(work, y_work, xp)
+        elif len(pend_np) > 0:
+            n_excl = min(len(pend_np), cfg.max_pending)
+            pend_buf[:n_excl] = pend_np[:n_excl]
+            pend_mask[:n_excl] = True
+
+        # --- batched refill: one pipeline pass fills all k slots -------------
+        for slot in range(k):
+            cands, _ = optimize_acquisition(
+                work,
+                self._anchors,
+                y_best,
+                jnp.asarray(pend_buf),
+                jnp.asarray(pend_mask),
+                self._next_key(),
+                cfg.acq,
+            )
+            seen = self._seen_matrix(x_all, pend_np, picks)
+            config = vec = None
+            for cand in np.asarray(cands):
+                snapped = space.round_trip(cand)
+                if len(seen) == 0 or np.min(
+                    np.max(np.abs(seen - snapped[None, :]), axis=1)
+                ) > cfg.dedupe_tol:
+                    config, vec = space.decode(snapped), snapped
+                    break
+            if config is None:
+                config, vec = self._quasi_random(seen)
+            out.append(config)
+            picks.append(vec)
+            if slot + 1 < k:
+                if cfg.pending_strategy in ("liar", "kb"):
+                    work, y_work = self._fantasy_append(work, y_work, vec)
+                elif n_excl < cfg.max_pending:
+                    pend_buf[n_excl] = vec
+                    pend_mask[n_excl] = True
+                    n_excl += 1
+        return out
+
+    # ------------------------------------------------------ posterior cache
+    def _posterior_for(
+        self, store: ObservationStore, x_all: np.ndarray, y_std: np.ndarray
+    ):
+        """Return a posterior covering the store's n rows, via (in order of
+        preference) the cached factors + rank-1 appends, a refactorization
+        under cached GPHP samples, or a full GPHP refit."""
+        cfg = self.config
+        n = x_all.shape[0]
+        nb = bucket_size(n)
+        d = self.space.encoded_dim
+        token = id(store)
+        backend = cfg.acq.backend
+
+        samples_valid = (
+            cfg.incremental
+            and self._cached_samples is not None
+            and self._cache_token in (None, token)
+            and self._cached_n <= n
+        )
+        post_valid = samples_valid and self._cached_post is not None
+        acct = self._cached_n if samples_valid else 0
+        new_obs = n - acct
+        resample = not samples_valid or (
+            new_obs > 0 and self._obs_since_refit + new_obs >= cfg.refit_every
         )
 
-        # --- dedupe & decode -------------------------------------------------
-        seen = np.concatenate([x_np, pend_np], axis=0) if len(pend_np) else x_np
-        for cand in np.asarray(cands):
-            snapped = self.space.round_trip(cand)
-            if len(seen) == 0 or np.min(
-                np.max(np.abs(seen - snapped[None, :]), axis=1)
-            ) > cfg.dedupe_tol:
-                return self.space.decode(snapped)
-        return self._quasi_random(history, pending)
+        if resample or not post_valid:
+            x_pad = np.zeros((nb, d))
+            y_pad = np.zeros((nb,))
+            x_pad[:n], y_pad[:n] = x_all, y_std
+            mask = np.zeros(nb, dtype=bool)
+            mask[:n] = True
+            xj, yj, mj = jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
+            if resample:
+                samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
+                self._cached_samples = np.asarray(samples)
+                self._obs_since_refit = 0
+            else:
+                # cached draws (e.g. restored from a checkpoint) but no live
+                # factorization: rebuild without consuming RNG state.
+                self._obs_since_refit += new_obs
+            params_batch = gpparams.GPHyperParams.unpack(
+                jnp.asarray(self._cached_samples), d
+            )
+            post = gplib.fit_posterior_batch(xj, yj, params_batch, mj, backend=backend)
+        else:
+            post = self._cached_post
+            if post.x_train.shape[0] < nb:
+                post = grow_posterior(post, nb)
+            for i in range(acct, n):
+                post = posterior_append(
+                    post, jnp.asarray(store.x_rows(i, i + 1)[0]), backend=backend
+                )
+            self._obs_since_refit += new_obs
+
+        self._cached_n = n
+        self._cache_token = token
+        return post
+
+    def _fantasy_append(self, work, y_work: List[float], x_vec: np.ndarray):
+        """Fold a fantasized observation (pending candidate or interim batch
+        pick) into the scratch posterior via the rank-1 append."""
+        cfg = self.config
+        if cfg.pending_strategy == "kb":
+            mu, _ = gplib.predict(
+                work, jnp.asarray(x_vec)[None, :], backend=cfg.acq.backend
+            )
+            val = float(jnp.mean(mu))  # kriging believer: integrated post. mean
+        else:
+            val = cfg.liar_value  # constant liar in standardized space
+        live = len(y_work)
+        if live >= work.x_train.shape[0]:
+            work = grow_posterior(work, bucket_size(live + 1))
+        work = posterior_append(work, jnp.asarray(x_vec), backend=cfg.acq.backend)
+        y_work = y_work + [val]
+        y_pad = np.zeros(work.x_train.shape[0])
+        y_pad[: len(y_work)] = y_work
+        return refresh_alpha(work, jnp.asarray(y_pad)), y_work
 
     # ---------------------------------------------------------------- gphps
-    def _fit_gphps(self, xj, yj, mj) -> gpparams.GPHyperParams:
+    def _fit_gphps(self, xj, yj, mj) -> jax.Array:
+        """Sample/optimize packed GPHPs; returns (S, 3d+2) packed draws."""
         cfg = self.config
         d = self.space.encoded_dim
         bounds = self._bounds
@@ -192,53 +369,40 @@ class BOSuggester:
                 cfg.acq.backend,
             )
             self._chain_state = np.asarray(best)
-            return gpparams.GPHyperParams.unpack(best[None, :], d)
+            return best[None, :]
         samples = mcmc_gphps(
             xj, yj, mj, bounds, init, self._next_key(), cfg.slice_config,
             cfg.acq.backend,
         )
         self._chain_state = np.asarray(samples[-1])
-        return gpparams.GPHyperParams.unpack(samples, d)
-
-    # ------------------------------------------------------------- fantasies
-    def _fantasy_values(self, x_np, y_n, pend_np) -> np.ndarray:
-        cfg = self.config
-        if cfg.pending_strategy == "liar":
-            return np.full(len(pend_np), cfg.liar_value)
-        # kriging believer: posterior mean under a quick MAP fit
-        n = x_np.shape[0]
-        nb = _bucket(n)
-        d = self.space.encoded_dim
-        x_pad, y_pad = np.zeros((nb, d)), np.zeros((nb,))
-        x_pad[:n], y_pad[:n] = x_np, y_n
-        mask = np.zeros(nb, dtype=bool)
-        mask[:n] = True
-        post = gplib.fit_gp(
-            jnp.asarray(x_pad),
-            jnp.asarray(y_pad),
-            gpparams.default_params(d),
-            jnp.asarray(mask),
-            backend=cfg.acq.backend,
-        )
-        mu, _ = gplib.predict(post, jnp.asarray(pend_np), backend=cfg.acq.backend)
-        return np.asarray(mu)
+        return samples
 
     # ---------------------------------------------------------- cold starts
-    def _quasi_random(
+    def _seen_matrix(
         self,
-        history: Sequence[Observation],
-        pending: Sequence[Mapping[str, Any]],
-    ) -> Dict[str, Any]:
-        seen = self.space.encode_batch(
-            [h[0] for h in history] + list(pending)
-        ) if (history or pending) else np.zeros((0, self.space.encoded_dim))
+        x_all: np.ndarray,
+        pend_np: np.ndarray,
+        picks: Sequence[np.ndarray],
+    ) -> np.ndarray:
+        parts = [x_all]
+        if len(pend_np):
+            parts.append(pend_np)
+        if picks:
+            parts.append(np.stack(picks, axis=0))
+        return np.concatenate(parts, axis=0) if parts else x_all
+
+    def _quasi_random(
+        self, seen: np.ndarray
+    ) -> Tuple[Dict[str, Any], np.ndarray]:
+        """Sobol cold-start / dedupe fallback (§2.1), avoiding ``seen`` rows."""
         for _ in range(32):
             vec = self.space.round_trip(self._sobol_init.next(1)[0])
             if len(seen) == 0 or np.min(
                 np.max(np.abs(seen - vec[None, :]), axis=1)
             ) > self.config.dedupe_tol:
-                return self.space.decode(vec)
-        return self.space.decode(self._rng.random(self.space.encoded_dim))
+                return self.space.decode(vec), vec
+        vec = self.space.round_trip(self._rng.random(self.space.encoded_dim))
+        return self.space.decode(vec), vec
 
     # ------------------------------------------------------------ state i/o
     def state_dict(self) -> Dict[str, Any]:
@@ -248,6 +412,13 @@ class BOSuggester:
             else self._chain_state.tolist(),
             "sobol_count": self._sobol_init._count,
             "key": np.asarray(self._key).tolist(),
+            # incremental-engine cadence: cached GPHP draws persist so a
+            # restored job resumes the exact refit schedule (and RNG stream).
+            "cached_samples": None
+            if self._cached_samples is None
+            else np.asarray(self._cached_samples).tolist(),
+            "cached_n": self._cached_n,
+            "obs_since_refit": self._obs_since_refit,
         }
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
@@ -257,6 +428,14 @@ class BOSuggester:
         if state.get("sobol_count", 0):
             self._sobol_init.next(int(state["sobol_count"]))
         self._key = jnp.asarray(np.asarray(state["key"], dtype=np.uint32))
+        samples = state.get("cached_samples")
+        self._cached_samples = None if samples is None else np.asarray(samples)
+        self._cached_n = int(state.get("cached_n", 0))
+        self._obs_since_refit = int(state.get("obs_since_refit", 0))
+        self._cached_post = None  # refactorized lazily from cached_samples
+        self._cache_token = None
+        self._wrapper_store = None
+        self._wrapper_fps = []
 
 
 class RandomSuggester:
@@ -272,6 +451,9 @@ class RandomSuggester:
         pending: Sequence[Mapping[str, Any]] = (),
     ) -> Dict[str, Any]:
         return self.space.sample(self._rng, 1)[0]
+
+    def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
+        return self.space.sample(self._rng, k)
 
     def state_dict(self) -> Dict[str, Any]:
         return {"bitgen": self._rng.bit_generator.state}
@@ -289,8 +471,13 @@ class SobolSuggester:
         self._count = 0
 
     def suggest(self, history=(), pending=()) -> Dict[str, Any]:
-        self._count += 1
-        return self.space.decode(self.space.round_trip(self._seq.next(1)[0]))
+        return self.suggest_batch(1)[0]
+
+    def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
+        self._count += k
+        return [
+            self.space.decode(self.space.round_trip(v)) for v in self._seq.next(k)
+        ]
 
     def state_dict(self) -> Dict[str, Any]:
         return {"count": self._count}

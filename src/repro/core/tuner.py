@@ -10,6 +10,17 @@ control loop:
     (JSON; *metadata only* — trial payloads/models live with the training
     side, mirroring the paper's "no customer data in DynamoDB" principle)
 
+Decision-path architecture: the tuner owns an ``ObservationStore``
+(``repro.core.history``) and *pushes state transitions into it on events* —
+observation appended when a trial reaches COMPLETED/STOPPED with a finite
+objective, pending marked at submit and cleared at terminality. Suggesters
+that support it (``BOSuggester``) are bound to the store at construction and
+serve decisions incrementally from cached GP state; warm-start parent
+observations are folded into the store once, not re-encoded per decision.
+Slot refill is *batched*: all free slots are computed up front and filled by
+one ``suggest_batch(k)`` call, so K simultaneously freed slots cost one
+engine pass instead of K (paper §4.4 at fleet scale).
+
 Features implemented per the paper:
   * asynchronous slot refill (§4.4): as soon as an evaluation finishes, the
     GP is updated and the freed slot is filled, never re-proposing pending
@@ -36,8 +47,7 @@ import os
 import tempfile
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
-import numpy as np
-
+from repro.core.history import ObservationStore
 from repro.core.trial import Trial, TrialState
 from repro.core.warm_start import WarmStartPool
 
@@ -114,36 +124,28 @@ class Tuner:
         self._timeline: List[Tuple[float, float]] = []
         self._num_failed_attempts = 0
         self.max_parallel = job_config.max_parallel
+        self.store = self._new_store()
 
     # ------------------------------------------------------------- history
-    def _own_history(self) -> List[Tuple[Dict[str, Any], float]]:
-        # FAILED trials are excluded: their curve minima are measurements at
-        # the moment of death, not final objectives, and no model artifact
-        # exists — they must neither seed the GP nor win the job.
-        return [
-            (dict(t.config), t.objective)
-            for t in self.trials.values()
-            if t.state in (TrialState.COMPLETED, TrialState.STOPPED)
-            and math.isfinite(t.objective)
-        ]
+    def _new_store(self) -> ObservationStore:
+        """Fresh observation store (warm-start parents folded in once); bind
+        it to the suggester so decisions are served incrementally."""
+        store = ObservationStore(self.space, warm_start=self.warm_start)
+        if hasattr(self.suggester, "bind_store"):
+            self.suggester.bind_store(store)
+        return store
 
-    def _suggester_history(self) -> List[Tuple[Dict[str, Any], float]]:
-        own = self._own_history()
-        if self.warm_start is None or self.warm_start.num_parents == 0:
-            return own
-        parent_obs = self.warm_start.as_observations(self.space)
-        if len(own) >= 2:
-            ys = np.asarray([y for _, y in own])
-            std = ys.std() if ys.std() > 1e-12 else 1.0
-            own = [(c, float((y - ys.mean()) / std)) for c, y in own]
-        return parent_obs + own
-
-    def _pending_configs(self) -> List[Dict[str, Any]]:
-        return [
-            dict(t.config)
-            for t in self.trials.values()
-            if t.state in (TrialState.PENDING, TrialState.RUNNING)
-        ]
+    def _observe_terminal(self, trial: Trial) -> None:
+        """Event-sourced store transition at trial terminality. FAILED or
+        non-finite trials only clear their pending slot: their curve minima
+        are measurements at the moment of death, not final objectives — they
+        must neither seed the GP nor win the job."""
+        self.store.clear_pending(trial.trial_id)
+        if (
+            trial.state in (TrialState.COMPLETED, TrialState.STOPPED)
+            and math.isfinite(trial.objective)
+        ):
+            self.store.push(trial.config, trial.objective)
 
     # ---------------------------------------------------------------- main
     def run(self) -> TuningResult:
@@ -196,24 +198,38 @@ class Tuner:
 
     # ---------------------------------------------------------- event flow
     def _refill_slots(self) -> None:
-        while (
-            self.backend.active_count() < self.max_parallel
-            and self._submitted < self.config.max_trials
-        ):
-            config = self.suggester.suggest(
-                self._suggester_history(), self._pending_configs()
-            )
-            trial = Trial(
-                trial_id=self._next_id,
-                config=dict(config),
-                submit_time=self.backend.now(),
-            )
-            self._next_id += 1
-            self._submitted += 1
-            self.trials[trial.trial_id] = trial
-            trial.state = TrialState.RUNNING
-            trial.attempts = 1
-            self.backend.submit(trial, self.objective)
+        """Compute all free slots up front and fill them with one batched
+        suggester pass (one GP pipeline for K freed slots instead of K)."""
+        free = min(
+            self.max_parallel - self.backend.active_count(),
+            self.config.max_trials - self._submitted,
+        )
+        if free <= 0:
+            return
+        if hasattr(self.suggester, "suggest_batch"):
+            for config in self.suggester.suggest_batch(free):
+                self._launch(config)
+        else:
+            # stateless suggesters get the store-derived history view per slot
+            for _ in range(free):
+                config = self.suggester.suggest(
+                    self.store.history_pairs(), self.store.pending_configs()
+                )
+                self._launch(config)
+
+    def _launch(self, config: Dict[str, Any]) -> None:
+        trial = Trial(
+            trial_id=self._next_id,
+            config=dict(config),
+            submit_time=self.backend.now(),
+        )
+        self._next_id += 1
+        self._submitted += 1
+        self.trials[trial.trial_id] = trial
+        trial.state = TrialState.RUNNING
+        trial.attempts = 1
+        self.store.mark_pending(trial.trial_id, trial.config)
+        self.backend.submit(trial, self.objective)
 
     def _requeue_retries(self) -> None:
         now = self.backend.now()
@@ -257,6 +273,7 @@ class Tuner:
                 trial.state = TrialState.COMPLETED
                 if self.stopping_rule is not None and trial.curve:
                     self.stopping_rule.record_completed(trial.curve)
+            self._observe_terminal(trial)
             self._record_timeline(ev.time)
             for cb in self.callbacks:
                 cb(self, trial)
@@ -271,6 +288,7 @@ class Tuner:
                 trial.state = TrialState.FAILED
                 trial.end_time = ev.time
                 trial.error = ev.error
+                self._observe_terminal(trial)
                 self._record_timeline(ev.time)
                 for cb in self.callbacks:
                     cb(self, trial)
@@ -338,7 +356,12 @@ class Tuner:
             "submitted": self._submitted,
             "timeline": self._timeline,
             "num_failed_attempts": self._num_failed_attempts,
+            "stop_requested": sorted(self._stop_requested),
             "trials": [t.to_json() for t in self.trials.values()],
+            # store blob preserves the *push order* of observations, which the
+            # trial table alone cannot (events may land out of trial-id order)
+            # — required for bit-identical GP state after restore.
+            "store": self.store.state_dict(),
             "suggester": type(self.suggester).__name__,
             "suggester_state": self.suggester.state_dict()
             if hasattr(self.suggester, "state_dict")
@@ -373,20 +396,38 @@ class Tuner:
         self._submitted = state["submitted"]
         self._timeline = [tuple(x) for x in state["timeline"]]
         self._num_failed_attempts = state["num_failed_attempts"]
+        # restore pending stop requests so a resumed job doesn't re-issue
+        # stops for trials that were already asked to stop
+        self._stop_requested = set(state.get("stop_requested", []))
         self.trials = {}
         for tj in state["trials"]:
             t = Trial.from_json(tj)
             if not t.is_terminal:
-                # job died while this trial ran: re-run it (same config)
+                # job died while this trial ran: re-run it (same config;
+                # already counted in ``submitted``). The re-run starts from a
+                # fresh curve, so any stop requested against the *old* attempt
+                # must not suppress (or mislabel) the new one.
                 t.state = TrialState.PENDING
                 t.curve = []
                 self._retry_queue.append((0.0, t))
-                self._submitted = self._submitted  # config already counted
+                self._stop_requested.discard(t.trial_id)
             self.trials[t.trial_id] = t
+        if state.get("warm_start_state"):
+            self.warm_start = self.warm_start or WarmStartPool()
+            self.warm_start.load_state_dict(state["warm_start_state"])
+        # rebuild the observation store: parents from the (possibly restored)
+        # warm-start pool, own rows from the checkpointed blob in push order,
+        # pending slots from the re-queued trial table.
+        self.store = self._new_store()
+        if state.get("store"):
+            self.store.load_state_dict(state["store"])
+        else:  # older checkpoints: reconstruct from the trial table
+            for t in sorted(self.trials.values(), key=lambda tr: tr.trial_id):
+                if t.state in (TrialState.COMPLETED, TrialState.STOPPED) and math.isfinite(t.objective):
+                    self.store.push(t.config, t.objective)
+        for _, t in self._retry_queue:
+            self.store.mark_pending(t.trial_id, t.config)
         if state.get("suggester_state") and hasattr(self.suggester, "load_state_dict"):
             self.suggester.load_state_dict(state["suggester_state"])
         if state.get("stopping_rule_state") and self.stopping_rule is not None:
             self.stopping_rule.load_state_dict(state["stopping_rule_state"])
-        if state.get("warm_start_state"):
-            self.warm_start = self.warm_start or WarmStartPool()
-            self.warm_start.load_state_dict(state["warm_start_state"])

@@ -21,10 +21,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["matern52_gram_pallas", "TILE_N", "TILE_M"]
+__all__ = ["matern52_gram_pallas", "matern52_cross_pallas", "TILE_N", "TILE_M", "ROW_TILE"]
 
 TILE_N = 128
 TILE_M = 128
+ROW_TILE = 8  # f32 sublane minimum: the cross-row kernel carries 8 lhs rows
 _SQRT5 = 2.2360679774997896
 _EPS = 1e-6
 
@@ -67,6 +68,80 @@ def _kernel(
     r = jnp.sqrt(r2)
     amp2 = amp2_ref[0, 0]
     out_ref[...] = amp2 * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+
+def _cross_kernel(
+    xn_ref,  # (ROW_TILE, dpad) f32 — new points (row-replicated when fewer)
+    xt_ref,  # (TILE_M, dpad) f32 — training-row tile
+    inv_ell_ref,  # (1, dpad)
+    warp_a_ref,  # (1, dpad)
+    warp_b_ref,  # (1, dpad)
+    warp_on_ref,  # (1, dpad)
+    amp2_ref,  # (1, 1)
+    out_ref,  # (ROW_TILE, TILE_M)
+):
+    """Cross-gram row tile k(x_new, X[tile]) for the rank-1 append path.
+
+    Same fused warp + Matérn math as ``_kernel``, but the lhs is a fixed
+    ROW_TILE-row block instead of a grid axis: the append path needs one row
+    of K, so HBM traffic is (ROW_TILE + TILE_M)·d reads and ROW_TILE·TILE_M
+    writes per tile instead of an n×n gram materialization.
+    """
+    a = warp_a_ref[...]
+    b = warp_b_ref[...]
+    on = warp_on_ref[...]
+    inv_ell = inv_ell_ref[...]
+
+    def warp(x):
+        xc = jnp.clip(x, _EPS, 1.0 - _EPS)
+        xa = jnp.clip(jnp.exp(a * jnp.log(xc)), _EPS, 1.0 - _EPS)
+        w = 1.0 - jnp.exp(b * jnp.log1p(-xa))
+        return on * w + (1.0 - on) * x
+
+    s1 = warp(xn_ref[...]) * inv_ell  # (ROW_TILE, dpad)
+    s2 = warp(xt_ref[...]) * inv_ell  # (TILE_M, dpad)
+    n1 = jnp.sum(s1 * s1, axis=1, keepdims=True)
+    n2 = jnp.sum(s2 * s2, axis=1, keepdims=True)
+    cross = jax.lax.dot_general(
+        s1, s2,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (ROW_TILE, TILE_M)
+    r2 = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    r = jnp.sqrt(r2)
+    amp2 = amp2_ref[0, 0]
+    out_ref[...] = amp2 * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matern52_cross_pallas(
+    x_new: jax.Array,  # (ROW_TILE, dpad) f32
+    x_train: jax.Array,  # (m_pad, dpad) f32, m_pad % TILE_M == 0
+    inv_ell: jax.Array,  # (1, dpad)
+    warp_a: jax.Array,  # (1, dpad)
+    warp_b: jax.Array,  # (1, dpad)
+    warp_on: jax.Array,  # (1, dpad)
+    amp2: jax.Array,  # (1, 1)
+    interpret: bool = True,
+) -> jax.Array:
+    m, d = x_train.shape
+    grid = (m // TILE_M,)
+    return pl.pallas_call(
+        _cross_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, d), lambda j: (0, 0)),
+            pl.BlockSpec((TILE_M, d), lambda j: (j, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, TILE_M), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((ROW_TILE, m), jnp.float32),
+        interpret=interpret,
+    )(x_new, x_train, inv_ell, warp_a, warp_b, warp_on, amp2)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

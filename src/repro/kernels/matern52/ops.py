@@ -15,9 +15,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gp.params import GPHyperParams
-from repro.kernels.matern52.kernel import TILE_M, TILE_N, matern52_gram_pallas
+from repro.kernels.matern52.kernel import (
+    ROW_TILE,
+    TILE_M,
+    TILE_N,
+    matern52_cross_pallas,
+    matern52_gram_pallas,
+)
 
-__all__ = ["matern52_gram"]
+__all__ = ["matern52_gram", "matern52_cross"]
 
 
 def _default_interpret() -> bool:
@@ -31,6 +37,26 @@ def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def _packed_params(params: GPHyperParams, dpad: int, warp: bool):
+    """(inv_ell, a, b, on, amp2) in the kernel's padded (1, dpad) layout."""
+    inv_ell = _pad_to(
+        jnp.exp(-params.log_lengthscale.astype(jnp.float32))[None, :], dpad, 1
+    )  # padded features: inv_ell = 0 ⇒ inert
+    a = jnp.exp(params.log_warp_a.astype(jnp.float32))[None, :]
+    b = jnp.exp(params.log_warp_b.astype(jnp.float32))[None, :]
+    identity = (
+        (jnp.abs(params.log_warp_a) < 1e-7) & (jnp.abs(params.log_warp_b) < 1e-7)
+    )[None, :]
+    on = jnp.where(identity, 0.0, 1.0).astype(jnp.float32)
+    if not warp:
+        on = jnp.zeros_like(on)
+    a = _pad_to(a, dpad, 1)
+    b = _pad_to(b, dpad, 1)
+    on = _pad_to(on, dpad, 1)
+    amp2 = jnp.exp(2.0 * params.log_amplitude.astype(jnp.float32)).reshape(1, 1)
+    return inv_ell, a, b, on, amp2
 
 
 def matern52_gram(
@@ -52,24 +78,41 @@ def matern52_gram(
 
     x1p = _pad_to(_pad_to(x1.astype(jnp.float32), npad, 0), dpad, 1)
     x2p = _pad_to(_pad_to(x2.astype(jnp.float32), mpad, 0), dpad, 1)
-
-    inv_ell = _pad_to(
-        jnp.exp(-params.log_lengthscale.astype(jnp.float32))[None, :], dpad, 1
-    )  # padded features: inv_ell = 0 ⇒ inert
-    a = jnp.exp(params.log_warp_a.astype(jnp.float32))[None, :]
-    b = jnp.exp(params.log_warp_b.astype(jnp.float32))[None, :]
-    identity = (
-        (jnp.abs(params.log_warp_a) < 1e-7) & (jnp.abs(params.log_warp_b) < 1e-7)
-    )[None, :]
-    on = jnp.where(identity, 0.0, 1.0).astype(jnp.float32)
-    if not warp:
-        on = jnp.zeros_like(on)
-    a = _pad_to(a, dpad, 1)
-    b = _pad_to(b, dpad, 1)
-    on = _pad_to(on, dpad, 1)
-    amp2 = jnp.exp(2.0 * params.log_amplitude.astype(jnp.float32)).reshape(1, 1)
+    inv_ell, a, b, on, amp2 = _packed_params(params, dpad, warp)
 
     out = matern52_gram_pallas(
         x1p, x2p, inv_ell, a, b, on, amp2, interpret=interpret
     )
     return out[:n, :m].astype(x1.dtype)
+
+
+def matern52_cross(
+    x_new: jax.Array,
+    x_train: jax.Array,
+    params: GPHyperParams,
+    *,
+    warp: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Cross-covariance row k(x_new, X): (d,), (m, d) -> (m,).
+
+    The incremental append path (``repro.core.gp.incremental``) calls this
+    once per new observation; only one ROW_TILE × m tile is computed instead
+    of an n×n gram.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    (d,) = x_new.shape
+    m = x_train.shape[0]
+    mpad = -(-m // TILE_M) * TILE_M
+    dpad = max(8, -(-d // 8) * 8)
+
+    xn = jnp.broadcast_to(x_new.astype(jnp.float32)[None, :], (ROW_TILE, d))
+    xn = _pad_to(xn, dpad, 1)
+    xt = _pad_to(_pad_to(x_train.astype(jnp.float32), mpad, 0), dpad, 1)
+    inv_ell, a, b, on, amp2 = _packed_params(params, dpad, warp)
+
+    out = matern52_cross_pallas(
+        xn, xt, inv_ell, a, b, on, amp2, interpret=interpret
+    )
+    return out[0, :m].astype(x_train.dtype)

@@ -13,7 +13,7 @@ import jax
 from repro.core.gp.kernels import matern52_ard
 from repro.core.gp.params import GPHyperParams
 
-__all__ = ["matern52_gram_ref"]
+__all__ = ["matern52_gram_ref", "matern52_cross_ref"]
 
 
 def matern52_gram_ref(
@@ -24,3 +24,14 @@ def matern52_gram_ref(
     warp: bool = True,
 ) -> jax.Array:
     return matern52_ard(x1, x2, params, warp=warp)
+
+
+def matern52_cross_ref(
+    x_new: jax.Array,
+    x_train: jax.Array,
+    params: GPHyperParams,
+    *,
+    warp: bool = True,
+) -> jax.Array:
+    """Oracle for the cross-gram row kernel: one row of the full gram."""
+    return matern52_ard(x_new[None, :], x_train, params, warp=warp)[0]

@@ -1,0 +1,48 @@
+"""Optional-``hypothesis`` shim for property-based tests.
+
+This container has no network access, so ``hypothesis`` may not be
+installed. Importing it at module scope used to abort collection of three
+whole test modules; with this shim the property tests degrade to per-test
+skips while every plain test in the same module keeps running.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``):
+
+    from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+When ``hypothesis`` is importable the real objects are re-exported
+unchanged. When it is not, ``given(...)`` returns a skip marker and ``st``
+returns inert stub strategies so decorator expressions still evaluate.
+Modules that are *entirely* property-based should instead call
+``pytest.importorskip("hypothesis")`` at module scope.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StubStrategies:
+        """Evaluates ``st.<anything>(...)`` to an inert placeholder."""
+
+        def __getattr__(self, _name):
+            def _strategy(*_args, **_kwargs):
+                return None
+
+            return _strategy
+
+    st = _StubStrategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

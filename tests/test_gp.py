@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # degrades to skips offline
 
 from repro.core.gp import gp as G
 from repro.core.gp import params as P

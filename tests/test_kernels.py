@@ -12,8 +12,8 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mamba_scan.ops import selective_scan
 from repro.kernels.mamba_scan.ref import selective_scan_ref
-from repro.kernels.matern52.ops import matern52_gram
-from repro.kernels.matern52.ref import matern52_gram_ref
+from repro.kernels.matern52.ops import matern52_cross, matern52_gram
+from repro.kernels.matern52.ref import matern52_cross_ref, matern52_gram_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 
@@ -51,6 +51,25 @@ def test_matern52_identity_warp_dims():
     )
     got = matern52_gram(x, x, p, interpret=True)
     want = matern52_gram_ref(x, x, p)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,d", [(1, 1), (40, 5), (129, 13), (300, 31)])
+@pytest.mark.parametrize("warp", [True, False])
+def test_matern52_cross_sweep(m, d, warp):
+    """Cross-gram row kernel (rank-1 append path) vs one row of the oracle."""
+    x_new = jnp.asarray(RNG.random(d))
+    x_train = jnp.asarray(RNG.random((m, d)))
+    p = GPHyperParams(
+        log_lengthscale=jnp.asarray(RNG.normal(0, 0.5, d)),
+        log_amplitude=jnp.asarray(0.3),
+        log_noise=jnp.asarray(-3.0),
+        log_warp_a=jnp.asarray(RNG.normal(0, 0.3, d)),
+        log_warp_b=jnp.asarray(RNG.normal(0, 0.3, d)),
+    )
+    got = matern52_cross(x_new, x_train, p, warp=warp, interpret=True)
+    want = matern52_cross_ref(x_new, x_train, p, warp=warp)
+    assert got.shape == (m,)
     np.testing.assert_allclose(got, want, atol=2e-5)
 
 

@@ -149,6 +149,28 @@ class TestSimBackendTuner:
         assert len(res.trials) == 3
         assert all(t.is_terminal for t in res.trials)
 
+    def test_restore_stop_requested_scoped_to_terminal_trials(self, tmp_path):
+        """Stop requests persist across restore for terminal trials only: a
+        re-queued trial re-runs from a fresh curve, so a stale stop request
+        must not suppress early stopping nor mislabel it STOPPED."""
+        path = str(tmp_path / "t.json")
+        sugg = RandomSuggester(_space(), seed=8)
+        tuner = Tuner(_space(), _curve_objective, sugg, SimBackend(),
+                      TuningJobConfig(max_trials=2, checkpoint_path=path))
+        tuner._refill_slots()  # trial 0 RUNNING
+        tuner._stop_requested.add(0)  # stop asked just before the "crash"
+        tuner.save()
+
+        sugg2 = RandomSuggester(_space(), seed=8)
+        tuner2 = Tuner(_space(), _curve_objective, sugg2, SimBackend(),
+                       TuningJobConfig(max_trials=2, checkpoint_path=path))
+        tuner2.restore()
+        assert 0 not in tuner2._stop_requested  # re-queued: fresh evaluation
+        res = tuner2.run()
+        t0 = next(t for t in res.trials if t.trial_id == 0)
+        assert t0.state == TrialState.COMPLETED  # not mislabeled STOPPED
+        assert not t0.stopped_early
+
     def test_elastic_parallelism_change(self):
         """max_parallel can grow mid-run without breaking state (elasticity)."""
         sugg = RandomSuggester(_space(), seed=6)

@@ -5,7 +5,10 @@ with every trial in a terminal state and a coherent result."""
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # whole module is property-based
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     Continuous,
