@@ -16,12 +16,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BOConfig, BOSuggester, Continuous, SearchSpace
+from repro.core.acquisition import integrate_over_samples
 from repro.core.gp import gp as G
 from repro.core.gp import params as P
 from repro.core.gp.fit import mcmc_gphps
 from repro.core.gp.incremental import posterior_append, refresh_alpha
 from repro.core.gp.slice_sampler import FAST_CONFIG, PAPER_CONFIG
 from repro.core.gp.kernels import matern52_ard
+from repro.kernels.acq_score.ops import acq_score
 
 
 def _time(fn, reps=3):
@@ -48,6 +50,32 @@ def run() -> List[Tuple[str, float, str]]:
     ref_bytes = (2 * n * d + n * n * d * 2 + n * n) * 4
     ker_bytes = (2 * n * d + n * n) * 4
     rows.append(("gram_pallas_traffic_ratio", us, f"{ref_bytes/ker_bytes:.1f}x"))
+
+    # --- fused anchor scoring: xla composition vs pallas kernel -------------
+    # (the per-decision hot path: integrated EI at the dense Sobol grid per
+    # GPHP sample; pallas numbers here are interpret-mode — functional on
+    # CPU; the HBM-pass win applies on a real TPU)
+    S, n_anchor, n_hist, ad = 8, 1024, 256, 8
+    xs_h = jnp.asarray(rng.random((n_hist, ad)))
+    ys_h = jnp.asarray(rng.standard_normal(n_hist))
+    packed = jnp.stack(
+        [P.default_params(ad).pack() + 0.05 * rng.standard_normal(3 * ad + 2)
+         for _ in range(S)]
+    )
+    post = G.fit_posterior_batch(  # with_inverse: the engine's pallas setup
+        xs_h, ys_h, P.GPHyperParams.unpack(packed, ad), with_inverse=True
+    )
+    anchors = jnp.asarray(rng.random((n_anchor, ad)))
+    y_best = jnp.asarray(float(ys_h.min()))
+    for backend in ("xla", "pallas"):
+        f_s = jax.jit(
+            lambda a, b=backend: integrate_over_samples(
+                acq_score(post, a, y_best, acq="ei", backend=b)
+            )
+        )
+        us = _time(lambda: f_s(anchors).block_until_ready())
+        rows.append((f"acq_score_{backend}_S{S}_n{n_hist}_a{n_anchor}_us", us,
+                     "fused" if backend == "pallas" else "3-op composition"))
 
     # --- GP fit via slice sampling: paper config vs fast config -------------
     nobs, dd = 64, 8

@@ -13,6 +13,11 @@ Both arms use an identical, deliberately small slice-sampling budget so the
 absolute from-scratch latency scales with ``SliceSamplerConfig`` exactly as
 the paper's §4.2 cost model predicts.
 
+Also measures the per-decision anchor-scoring hot path (§4.3): integrated EI
+at the dense Sobol grid via the fused Pallas predict+EI kernel
+(``repro.kernels.acq_score``, interpret mode on CPU) against the unfused XLA
+gram → triangular-solve → EI composition.
+
 Writes ``BENCH_suggest.json`` (repo root by default) and returns CSV rows
 for ``benchmarks/run.py``.
 """
@@ -24,10 +29,16 @@ import os
 import time
 from typing import List, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BOConfig, BOSuggester, Continuous, ObservationStore, SearchSpace
+from repro.core import acquisition as acqlib
+from repro.core.gp import gp as gplib
+from repro.core.gp import params as gpparams
 from repro.core.gp.slice_sampler import SliceSamplerConfig
+from repro.kernels.acq_score.ops import acq_score
 
 # tiny but structurally faithful MCMC budget (burn-in + thinning kept)
 BENCH_SLICE = SliceSamplerConfig(num_samples=12, burn_in=6, thin=2)
@@ -110,6 +121,70 @@ def _run_batch(space: SearchSpace, n: int, k: int, mode: str, seed: int = 0) -> 
     return time.perf_counter() - t0
 
 
+def _run_anchor_scoring(
+    n_hist: int = 256, num_samples: int = 8, reps: int = 15, seed: int = 0
+) -> List[dict]:
+    """Median wall time (ms) of one integrated-EI sweep over the anchor grid:
+    fused Pallas kernel (interpret on CPU) vs the XLA composition."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((n_hist, _D)))
+    y = jnp.asarray(rng.standard_normal(n_hist))
+    packed = jnp.stack(
+        [
+            gpparams.default_params(_D).pack()
+            + 0.05 * rng.standard_normal(3 * _D + 2)
+            for _ in range(num_samples)
+        ]
+    )
+    # with_inverse=True: what the engine threads through for backend="pallas"
+    # (L⁻¹ built at refit, O(n²)-maintained by the rank-1 append)
+    post = gplib.fit_posterior_batch(
+        x, y, gpparams.GPHyperParams.unpack(packed, _D), with_inverse=True
+    )
+    y_best = jnp.asarray(float(y.min()))
+
+    def median_ms(fn) -> float:
+        fn()  # compile
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times)) * 1e3
+
+    out = []
+    for num_anchors in (1024, 4096):
+        anchors = jnp.asarray(rng.random((num_anchors, _D)))
+        fused = jax.jit(
+            lambda a: acqlib.integrate_over_samples(
+                acq_score(post, a, y_best, acq="ei", backend="pallas")
+            )
+        )
+        unfused = jax.jit(
+            lambda a: acqlib.integrate_over_samples(
+                acq_score(post, a, y_best, acq="ei", backend="xla")
+            )
+        )
+        np.testing.assert_allclose(  # the arms must agree before timing them
+            np.asarray(fused(anchors)), np.asarray(unfused(anchors)), atol=1e-5
+        )
+        ms_f = median_ms(lambda: fused(anchors).block_until_ready())
+        ms_x = median_ms(lambda: unfused(anchors).block_until_ready())
+        out.append(
+            {
+                "num_anchors": num_anchors,
+                "n": n_hist,
+                "gphp_samples": num_samples,
+                "fused_pallas_interpret_ms": ms_f,
+                "unfused_xla_ms": ms_x,
+                "speedup": ms_x / ms_f if ms_f > 0 else float("inf"),
+                "note": "interpret mode (CPU): functional parity + overhead "
+                "floor; the one-HBM-pass win applies on compiled backends",
+            }
+        )
+    return out
+
+
 def run(sizes=SIZES, out_path: str | None = None) -> List[Tuple[str, float, str]]:
     space = _space()
     rows: List[Tuple[str, float, str]] = []
@@ -124,7 +199,17 @@ def run(sizes=SIZES, out_path: str | None = None) -> List[Tuple[str, float, str]
         },
         "per_decision": [],
         "batched_refill": [],
+        "anchor_scoring": [],
     }
+    for entry in _run_anchor_scoring():
+        report["anchor_scoring"].append(entry)
+        rows.append(
+            (
+                f"acq_anchors{entry['num_anchors']}_fused_us",
+                entry["fused_pallas_interpret_ms"] * 1e3,
+                f"{entry['speedup']:.2f}x_vs_xla",
+            )
+        )
     for n in sizes:
         scratch = _run_arm(space, n, incremental=False)
         incr = _run_arm(space, n, incremental=True)

@@ -33,10 +33,13 @@ def _norm_cdf(z: jax.Array) -> jax.Array:
 def expected_improvement(
     mu: jax.Array, var: jax.Array, y_best: jax.Array
 ) -> jax.Array:
-    """EI(x) = E[max(0, y* − y(x))] for minimization. Shapes broadcast."""
+    """EI(x) = E[max(0, y* − y(x))] for minimization. Shapes broadcast.
+
+    Clamped at 0: the closed form is non-negative analytically, but the
+    γΦ(γ) + φ(γ) cancellation can round to ~−1e-17 for γ ≪ 0."""
     sigma = jnp.sqrt(jnp.maximum(var, 1e-16))
     gamma = (y_best - mu) / sigma
-    return sigma * (gamma * _norm_cdf(gamma) + _norm_pdf(gamma))
+    return jnp.maximum(sigma * (gamma * _norm_cdf(gamma) + _norm_pdf(gamma)), 0.0)
 
 
 def lcb(mu: jax.Array, var: jax.Array, kappa: float = 2.0) -> jax.Array:

@@ -46,13 +46,20 @@ class GPPosterior(NamedTuple):
     sample axis (S, ...) — produced by ``fit_posterior_batch``.
 
     Note: this is a pure pytree (jit/vmap-safe); the gram ``backend`` is
-    passed separately as a static argument where needed."""
+    passed separately as a static argument where needed.
+
+    ``chol_inv`` (optional) caches L⁻¹ for the fused Pallas anchor-scoring
+    kernel (``repro.kernels.acq_score``), whose in-VMEM solve is the matmul
+    L⁻¹K*ᵀ. It is maintained with the same cost profile as the factor: built
+    once per refit (``with_inverse=True``), updated in O(n²) by the rank-1
+    border append, identity-padded on bucket growth."""
 
     x_train: jax.Array  # (n, d) encoded (unwarped) inputs
     mask: jax.Array  # (n,) bool — valid rows
     chol: jax.Array  # (..., n, n) lower Cholesky of K̃ + σ²I
     alpha: jax.Array  # (..., n)  K̃⁻¹ y
     params: GPHyperParams  # (...,) GPHPs
+    chol_inv: Optional[jax.Array] = None  # (..., n, n) cached L⁻¹
 
     @property
     def num_samples(self) -> int:
@@ -118,6 +125,12 @@ def log_posterior_density(
     return jnp.where(inside, mll + log_prior, -jnp.inf)
 
 
+def _triangular_inverse(chol: jax.Array) -> jax.Array:
+    """L⁻¹ for a (batch of) lower factor(s) — identity rows stay identity."""
+    eye = jnp.broadcast_to(jnp.eye(chol.shape[-1], dtype=chol.dtype), chol.shape)
+    return jax.lax.linalg.triangular_solve(chol, eye, left_side=True, lower=True)
+
+
 def fit_gp(
     x: jax.Array,
     y: jax.Array,
@@ -125,6 +138,7 @@ def fit_gp(
     mask: Optional[jax.Array] = None,
     *,
     backend: str = "xla",
+    with_inverse: bool = False,
 ) -> GPPosterior:
     """Factorize the posterior for a single GPHP setting."""
     n = x.shape[0]
@@ -134,7 +148,14 @@ def fit_gp(
     kmat = _masked_kernel(x, params, mask, backend)
     chol = jnp.linalg.cholesky(kmat)
     alpha = jax.scipy.linalg.cho_solve((chol, True), y)
-    return GPPosterior(x_train=x, mask=mask, chol=chol, alpha=alpha, params=params)
+    return GPPosterior(
+        x_train=x,
+        mask=mask,
+        chol=chol,
+        alpha=alpha,
+        params=params,
+        chol_inv=_triangular_inverse(chol) if with_inverse else None,
+    )
 
 
 def fit_posterior_batch(
@@ -144,6 +165,7 @@ def fit_posterior_batch(
     mask: Optional[jax.Array] = None,
     *,
     backend: str = "xla",
+    with_inverse: bool = False,
 ) -> GPPosterior:
     """Factorize once per MCMC sample (leading axis S on ``params_batch``)."""
     n = x.shape[0]
@@ -155,7 +177,14 @@ def fit_posterior_batch(
         return post.chol, post.alpha
 
     chol, alpha = jax.vmap(one)(params_batch)
-    return GPPosterior(x_train=x, mask=mask, chol=chol, alpha=alpha, params=params_batch)
+    return GPPosterior(
+        x_train=x,
+        mask=mask,
+        chol=chol,
+        alpha=alpha,
+        params=params_batch,
+        chol_inv=_triangular_inverse(chol) if with_inverse else None,
+    )
 
 
 def predict(

@@ -44,6 +44,26 @@ __all__ = [
 ]
 
 
+def _border_parts(
+    chol: jax.Array, k_row: jax.Array, k_diag: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(w, l22) of the bordered factor [[L, 0], [wᵀ, l22]]: one triangular
+    solve, O(n²)."""
+    w = jax.scipy.linalg.solve_triangular(chol, k_row, lower=True)
+    # w is exact on live coords and 0 on masked ones (identity rows solve to 0)
+    l22 = jnp.sqrt(jnp.maximum(k_diag - jnp.dot(w, w), _JITTER))
+    return w, l22
+
+
+def _set_border_row(
+    chol: jax.Array, w: jax.Array, l22: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """Write the border [w, l22, 0…] into row ``idx`` of the factor."""
+    cols = jnp.arange(chol.shape[0])
+    new_row = jnp.where(cols == idx, l22, jnp.where(cols < idx, w, 0.0))
+    return chol.at[idx, :].set(new_row)
+
+
 def cholesky_append_row(
     chol: jax.Array,  # (n, n) lower factor, identity on masked rows
     k_row: jax.Array,  # (n,) cross-covariances, 0 at masked columns
@@ -52,13 +72,22 @@ def cholesky_append_row(
 ) -> jax.Array:
     """Rank-1 border update: return the factor with row ``idx`` replaced by
     [w, √(k_diag − wᵀw), 0…]. O(n²) vs O(n³) for refactorization."""
-    n = chol.shape[0]
-    w = jax.scipy.linalg.solve_triangular(chol, k_row, lower=True)
-    # w is exact on live coords and 0 on masked ones (identity rows solve to 0)
-    l22 = jnp.sqrt(jnp.maximum(k_diag - jnp.dot(w, w), _JITTER))
-    cols = jnp.arange(n)
-    new_row = jnp.where(cols == idx, l22, jnp.where(cols < idx, w, 0.0))
-    return chol.at[idx, :].set(new_row)
+    w, l22 = _border_parts(chol, k_row, k_diag)
+    return _set_border_row(chol, w, l22, idx)
+
+
+def _inverse_append_row(
+    linv: jax.Array,  # (n, n) cached L⁻¹ (identity on masked rows)
+    w: jax.Array,  # (n,) border row of the factor (0 at cols ≥ idx)
+    l22: jax.Array,  # () new diagonal entry of the factor
+    idx: jax.Array,  # () index of the appended row
+) -> jax.Array:
+    """The inverse of the bordered factor is itself a border update:
+
+        [[L, 0], [wᵀ, l22]]⁻¹ = [[L⁻¹, 0], [−wᵀL⁻¹/l22, 1/l22]]
+
+    so the cached L⁻¹ stays O(n²)-maintained, like the factor."""
+    return _set_border_row(linv, -(w @ linv) / l22, 1.0 / l22, idx)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -72,24 +101,33 @@ def posterior_append(
     stale — call ``refresh_alpha`` with the new standardized targets."""
     idx = jnp.sum(post.mask)
     batched = post.chol.ndim == 3
+    with_inv = post.chol_inv is not None
 
-    def one(chol, params):
+    def one(chol, params, linv):
         cross = gram_cross(x_new, post.x_train, params, backend=backend)
         k_row = jnp.where(post.mask, cross, 0.0)
         noise = jnp.exp(2.0 * params.log_noise) + _JITTER
         k_diag = jnp.exp(2.0 * params.log_amplitude) + noise
-        return cholesky_append_row(chol, k_row, k_diag, idx)
+        w, l22 = _border_parts(chol, k_row, k_diag)
+        chol = _set_border_row(chol, w, l22, idx)
+        if linv is None:
+            return chol, None
+        return chol, _inverse_append_row(linv, w, l22, idx)
 
-    if batched:
-        chol = jax.vmap(one)(post.chol, post.params)
+    if batched and with_inv:
+        chol, linv = jax.vmap(one)(post.chol, post.params, post.chol_inv)
+    elif batched:
+        chol = jax.vmap(lambda c, p: one(c, p, None)[0])(post.chol, post.params)
+        linv = None
     else:
-        chol = one(post.chol, post.params)
+        chol, linv = one(post.chol, post.params, post.chol_inv)
     return GPPosterior(
         x_train=post.x_train.at[idx].set(x_new),
         mask=post.mask.at[idx].set(True),
         chol=chol,
         alpha=post.alpha,
         params=post.params,
+        chol_inv=linv,
     )
 
 
@@ -108,7 +146,8 @@ def refresh_alpha(post: GPPosterior, y: jax.Array) -> GPPosterior:
 
 def grow_posterior(post: GPPosterior, new_size: int) -> GPPosterior:
     """Re-pad a posterior to a larger shape bucket without refactorizing:
-    masked rows are identity rows, so the factor grows by an identity block."""
+    masked rows are identity rows, so the factor grows by an identity block
+    (and block-diag inverses compose, so the cached L⁻¹ grows the same way)."""
     n = post.x_train.shape[0]
     pad = new_size - n
     if pad <= 0:
@@ -116,8 +155,16 @@ def grow_posterior(post: GPPosterior, new_size: int) -> GPPosterior:
     x = jnp.pad(post.x_train, ((0, pad), (0, 0)))
     mask = jnp.pad(post.mask, (0, pad))
     lead = post.chol.ndim - 2
-    chol = jnp.pad(post.chol, ((0, 0),) * lead + ((0, pad), (0, pad)))
     diag = jnp.arange(n, new_size)
-    chol = chol.at[..., diag, diag].set(1.0)
+
+    def grow_tri(t):
+        t = jnp.pad(t, ((0, 0),) * lead + ((0, pad), (0, pad)))
+        return t.at[..., diag, diag].set(1.0)
+
+    chol = grow_tri(post.chol)
+    linv = None if post.chol_inv is None else grow_tri(post.chol_inv)
     alpha = jnp.pad(post.alpha, ((0, 0),) * lead + ((0, pad),))
-    return GPPosterior(x_train=x, mask=mask, chol=chol, alpha=alpha, params=post.params)
+    return GPPosterior(
+        x_train=x, mask=mask, chol=chol, alpha=alpha, params=post.params,
+        chol_inv=linv,
+    )

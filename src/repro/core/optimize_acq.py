@@ -13,6 +13,16 @@ Pipeline (all jitted, shapes static per (n_bucket, d, S)):
      acquisition (jax.grad flows through the GP posterior), clipping to the
      unit cube;
   4. return refined candidates ranked by acquisition value.
+
+Backends: ``AcqOptConfig.backend`` selects how stage 1 (and the final
+re-ranking) scores anchors. ``"pallas"`` dispatches EI/LCB to the fused
+predict+acquisition kernel (``repro.kernels.acq_score``): cross-gram,
+cached-Cholesky solve and the closed form run in one VMEM pass per
+(GPHP-sample × anchor-tile), instead of three XLA ops with HBM round-trips.
+Stage 3 (gradient refinement) always evaluates through the XLA composition —
+``jax.grad`` must flow through the posterior, which ``pallas_call`` does not
+provide — so the hot dense-grid sweep is fused while the 8-point ascent keeps
+exact gradients.
 """
 
 from __future__ import annotations
@@ -37,7 +47,7 @@ class AcqOptConfig(NamedTuple):
     refine_lr: float = 0.05
     lcb_kappa: float = 2.0
     exclusion_radius: float = 0.02  # L∞ radius (unit cube) around pending pts
-    backend: str = "xla"  # gram backend ("xla" | "pallas")
+    backend: str = "xla"  # anchor-scoring backend ("xla" | "pallas" fused kernel)
 
 
 def _acq_values(
@@ -46,9 +56,22 @@ def _acq_values(
     y_best: jax.Array,
     cfg: AcqOptConfig,
     key: jax.Array,
+    *,
+    differentiable: bool = False,
 ) -> jax.Array:
-    """Integrated acquisition at x: (m, d) -> (m,). Larger is better."""
-    mu, var = predict(post, x, backend=cfg.backend)
+    """Integrated acquisition at x: (m, d) -> (m,). Larger is better.
+
+    ``differentiable=True`` forces the XLA predict+closed-form composition
+    (the gradient-refinement stage needs jax.grad); otherwise EI/LCB on the
+    pallas backend go through the fused anchor-scoring kernel."""
+    if cfg.acq in ("ei", "lcb") and cfg.backend == "pallas" and not differentiable:
+        from repro.kernels.acq_score.ops import acq_score
+
+        vals = acq_score(
+            post, x, y_best, acq=cfg.acq, kappa=cfg.lcb_kappa, backend="pallas"
+        )
+        return A.integrate_over_samples(vals)
+    mu, var = predict(post, x, backend="xla" if differentiable else cfg.backend)
     if cfg.acq == "ei":
         vals = A.expected_improvement(mu, var, y_best)
     elif cfg.acq == "lcb":
@@ -76,8 +99,8 @@ def optimize_acquisition(
     best-first, with pending-exclusion applied."""
     k_ts, _ = jax.random.split(key)
 
-    def masked_acq(x: jax.Array) -> jax.Array:
-        vals = _acq_values(post, x, y_best, cfg, k_ts)
+    def masked_acq(x: jax.Array, differentiable: bool = False) -> jax.Array:
+        vals = _acq_values(post, x, y_best, cfg, k_ts, differentiable=differentiable)
         if pending.shape[0] > 0:
             # L∞ distance to every pending point
             dists = jnp.max(
@@ -94,8 +117,9 @@ def optimize_acquisition(
     x0 = anchors[top_idx]  # (num_refine, d)
 
     # --- projected Adam ascent on the acquisition -------------------------
+    # (differentiable=True: refinement keeps the XLA path for jax.grad)
     def acq_scalar(x_single: jax.Array) -> jax.Array:
-        return masked_acq(x_single[None, :])[0]
+        return masked_acq(x_single[None, :], differentiable=True)[0]
 
     grad_fn = jax.vmap(jax.grad(acq_scalar))
 

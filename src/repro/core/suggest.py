@@ -73,7 +73,20 @@ Observation = Tuple[Mapping[str, Any], float]
 
 @dataclasses.dataclass(frozen=True)
 class BOConfig:
-    """Configuration of the BO engine. Defaults are the paper's choices."""
+    """Configuration of the BO engine. Defaults are the paper's choices.
+
+    Two backend knobs, deliberately independent:
+
+    * ``backend`` — anchor-*scoring* backend, a convenience that overrides
+      ``acq.backend``. ``"pallas"`` fuses cross-gram + cached-factor solve +
+      EI/LCB into one kernel pass (``repro.kernels.acq_score``).
+    * ``fit_backend`` — gram backend for GPHP fitting and posterior
+      factorization (MCMC marginal-likelihood grams, refits, rank-1 appends).
+      Kept separate so switching the scoring backend never perturbs the
+      fitted posterior — ``backend="pallas"`` and ``backend="xla"`` engines
+      walk bit-identical GPHP chains and differ only in how anchors are
+      scored (the e2e invariance tests rely on this).
+    """
 
     num_init: int = 3  # Sobol initial design before the GP takes over
     gphp_method: str = "mcmc"  # "mcmc" (slice sampling) | "map" (empirical Bayes)
@@ -86,6 +99,18 @@ class BOConfig:
     max_pending: int = 64  # static pad size for the pending buffer
     refit_every: int = 1  # re-sample GPHPs after this many new observations
     incremental: bool = True  # rank-1 posterior updates between refits
+    backend: Optional[str] = None  # constructor shorthand: folded into
+    # acq.backend and reset to None, so a later dataclasses.replace(acq=...)
+    # is never stomped by a stale shorthand
+    fit_backend: str = "xla"  # gram backend for GPHP fitting/factorization
+
+    def __post_init__(self):
+        if self.backend is not None:
+            if self.backend != self.acq.backend:
+                object.__setattr__(
+                    self, "acq", self.acq._replace(backend=self.backend)
+                )
+            object.__setattr__(self, "backend", None)
 
     def fast(self) -> "BOConfig":
         """Cheaper MCMC settings for many-seed benchmark sweeps."""
@@ -283,7 +308,7 @@ class BOSuggester:
         nb = bucket_size(n)
         d = self.space.encoded_dim
         token = id(store)
-        backend = cfg.acq.backend
+        backend = cfg.fit_backend
 
         samples_valid = (
             cfg.incremental
@@ -316,7 +341,12 @@ class BOSuggester:
             params_batch = gpparams.GPHyperParams.unpack(
                 jnp.asarray(self._cached_samples), d
             )
-            post = gplib.fit_posterior_batch(xj, yj, params_batch, mj, backend=backend)
+            # pallas anchor scoring consumes L⁻¹; build it at refit time so
+            # every decision (and fantasy append) reuses the cached inverse.
+            post = gplib.fit_posterior_batch(
+                xj, yj, params_batch, mj, backend=backend,
+                with_inverse=cfg.acq.backend == "pallas",
+            )
         else:
             post = self._cached_post
             if post.x_train.shape[0] < nb:
@@ -337,7 +367,7 @@ class BOSuggester:
         cfg = self.config
         if cfg.pending_strategy == "kb":
             mu, _ = gplib.predict(
-                work, jnp.asarray(x_vec)[None, :], backend=cfg.acq.backend
+                work, jnp.asarray(x_vec)[None, :], backend=cfg.fit_backend
             )
             val = float(jnp.mean(mu))  # kriging believer: integrated post. mean
         else:
@@ -345,7 +375,7 @@ class BOSuggester:
         live = len(y_work)
         if live >= work.x_train.shape[0]:
             work = grow_posterior(work, bucket_size(live + 1))
-        work = posterior_append(work, jnp.asarray(x_vec), backend=cfg.acq.backend)
+        work = posterior_append(work, jnp.asarray(x_vec), backend=cfg.fit_backend)
         y_work = y_work + [val]
         y_pad = np.zeros(work.x_train.shape[0])
         y_pad[: len(y_work)] = y_work
@@ -366,13 +396,13 @@ class BOSuggester:
         if cfg.gphp_method == "map":
             best = map_gphps(
                 xj, yj, mj, bounds, init, self._next_key(), cfg.eb_config,
-                cfg.acq.backend,
+                cfg.fit_backend,
             )
             self._chain_state = np.asarray(best)
             return best[None, :]
         samples = mcmc_gphps(
             xj, yj, mj, bounds, init, self._next_key(), cfg.slice_config,
-            cfg.acq.backend,
+            cfg.fit_backend,
         )
         self._chain_state = np.asarray(samples[-1])
         return samples

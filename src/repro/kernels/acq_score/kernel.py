@@ -1,0 +1,177 @@
+"""Pallas TPU kernel: fused predict + acquisition over the Sobol anchor grid.
+
+Anchor scoring is the per-decision hot path of the BO engine (paper §4.3):
+every suggestion evaluates the integrated acquisition at ``num_anchors``
+Sobol points, per GPHP MCMC sample. The XLA composition runs three separate
+ops with an HBM round-trip between each:
+
+    cross-gram (S·A·n)  →  triangular solve (S·A·n²)  →  EI/LCB (S·A)
+
+This kernel fuses the whole chain per (GPHP-sample × anchor-tile) grid cell:
+the Kumaraswamy warp and Matérn-5/2 cross-gram row block against the cached
+train set are computed in registers, the cached-Cholesky solve for μ/σ² runs
+in VMEM, and the acquisition value is the only thing written back — one HBM
+pass over the anchors, K* never materialized off-chip.
+
+Solve strategy: the dispatcher (ops.py) pre-inverts the cached lower factor
+once per call — O(n³/3) per sample, amortized over the O(A·n²) anchor sweep
+(A ≥ n for the paper's dense grids) — so the in-kernel "triangular solve"
+V = L⁻¹K*ᵀ is an MXU matmul instead of an n-step substitution recurrence.
+μ = K*·α reuses the cached alpha directly.
+
+Masked-row contract (matches ``repro.core.gp.gp``): padded/masked train rows
+have mask = 0, α = 0 and an identity row/col in L (hence in L⁻¹), so they
+contribute exactly nothing to μ or σ².
+
+Padding contract (enforced by ops.py): anchors padded to TILE_A rows,
+features to a multiple of 8 with inv_ell = 0, train rows to a multiple of 8
+with mask = 0; padded anchor scores are trimmed by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["acq_score_pallas", "TILE_A", "anchor_tile"]
+
+TILE_A = 128  # minimum anchors per grid cell (lane-aligned)
+_VMEM_TILE_ELEMS = 1 << 20  # cap tile_a·npad so K*/V tiles stay ≤ 4 MB (f32)
+
+
+def anchor_tile(mpad: int, npad: int) -> int:
+    """Anchors per grid cell: as large as the VMEM budget allows.
+
+    Bigger tiles amortize the per-cell streaming of the (npad, npad) inverted
+    factor — with the paper's 1024-anchor grid and n ≤ 256 buckets the whole
+    anchor sweep for a GPHP sample is one cell. Callers pad the anchor count
+    to a multiple of the returned tile."""
+    cap = max(TILE_A, _VMEM_TILE_ELEMS // max(npad, 1) // TILE_A * TILE_A)
+    return min(mpad, cap)
+_SQRT5 = 2.2360679774997896
+_SQRT2 = 1.4142135623730951
+_INV_SQRT2PI = 0.3989422804014327
+_EPS = 1e-6
+
+
+def _acq_kernel(
+    anchors_ref,  # (tile_a, dpad) anchor tile
+    xt_ref,  # (npad, dpad) cached train set
+    linv_ref,  # (1, npad, npad) inverted Cholesky factor, sample s
+    alpha_ref,  # (1, npad) cached K̃⁻¹y, sample s
+    mask_ref,  # (1, npad) 1.0 on live train rows
+    inv_ell_ref,  # (1, dpad) 1/ℓ, 0 on padded features, sample s
+    warp_a_ref,  # (1, dpad) Kumaraswamy a, sample s
+    warp_b_ref,  # (1, dpad) Kumaraswamy b, sample s
+    warp_on_ref,  # (1, dpad) 1.0 where warping applies, sample s
+    amp2_ref,  # (1, 1) signal variance, sample s
+    y_best_ref,  # (1, 1) incumbent (standardized)
+    kappa_ref,  # (1, 1) LCB exploration weight
+    out_ref,  # (1, tile_a) acquisition values
+    *,
+    acq: str,
+):
+    a = warp_a_ref[...]
+    b = warp_b_ref[...]
+    on = warp_on_ref[...]
+    inv_ell = inv_ell_ref[...]
+
+    def warp(x):
+        xc = jnp.clip(x, _EPS, 1.0 - _EPS)
+        xa = jnp.clip(jnp.exp(a * jnp.log(xc)), _EPS, 1.0 - _EPS)
+        w = 1.0 - jnp.exp(b * jnp.log1p(-xa))
+        return on * w + (1.0 - on) * x
+
+    s1 = warp(anchors_ref[...]) * inv_ell  # (TILE_A, dpad)
+    s2 = warp(xt_ref[...]) * inv_ell  # (npad, dpad)
+
+    # ‖a−b‖² = ‖a‖² + ‖b‖² − 2 a·bᵀ  — the cross term runs on the MXU.
+    n1 = jnp.sum(s1 * s1, axis=1, keepdims=True)  # (TILE_A, 1)
+    n2 = jnp.sum(s2 * s2, axis=1, keepdims=True)  # (npad, 1)
+    cross = jax.lax.dot_general(
+        s1, s2,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=s1.dtype,
+    )  # (TILE_A, npad)
+    r2 = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    r = jnp.sqrt(r2)
+    amp2 = amp2_ref[0, 0]
+    k_star = amp2 * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+    k_star = k_star * mask_ref[...]  # (TILE_A, npad); masked train rows inert
+
+    # μ = K*·α — cached alpha, contraction on the MXU.
+    mu = jax.lax.dot_general(
+        alpha_ref[...], k_star,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=s1.dtype,
+    )  # (1, TILE_A)
+
+    # σ² = amp² − ‖L⁻¹K*ᵀ‖²_col — the cached-factor solve as an MXU matmul.
+    v = jax.lax.dot_general(
+        linv_ref[0], k_star,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=s1.dtype,
+    )  # (npad, TILE_A)
+    var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0, keepdims=True), 1e-12)
+    sigma = jnp.sqrt(var)  # (1, TILE_A)
+
+    if acq == "ei":
+        y_best = y_best_ref[0, 0]
+        gamma = (y_best - mu) / sigma
+        cdf = 0.5 * (1.0 + jax.lax.erf(gamma / _SQRT2))
+        pdf = _INV_SQRT2PI * jnp.exp(-0.5 * gamma * gamma)
+        # clamp: the closed form rounds to ~−1e-17 for γ ≪ 0
+        out_ref[...] = jnp.maximum(sigma * (gamma * cdf + pdf), 0.0)
+    else:  # "lcb" — negated lower confidence bound (larger is better)
+        out_ref[...] = kappa_ref[0, 0] * sigma - mu
+
+
+@functools.partial(jax.jit, static_argnames=("acq", "tile_a", "interpret"))
+def acq_score_pallas(
+    anchors: jax.Array,  # (m_pad, dpad), m_pad % tile_a == 0
+    x_train: jax.Array,  # (npad, dpad)
+    linv: jax.Array,  # (S, npad, npad)
+    alpha: jax.Array,  # (S, npad)
+    mask: jax.Array,  # (1, npad)
+    inv_ell: jax.Array,  # (S, dpad)
+    warp_a: jax.Array,  # (S, dpad)
+    warp_b: jax.Array,  # (S, dpad)
+    warp_on: jax.Array,  # (S, dpad)
+    amp2: jax.Array,  # (S, 1)
+    y_best: jax.Array,  # (1, 1)
+    kappa: jax.Array,  # (1, 1)
+    acq: str = "ei",
+    tile_a: int = TILE_A,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-sample acquisition at every anchor: returns (S, m_pad)."""
+    m, d = anchors.shape
+    s, npad, _ = linv.shape
+    grid = (s, m // tile_a)
+    return pl.pallas_call(
+        functools.partial(_acq_kernel, acq=acq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_a, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((npad, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, npad, npad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, npad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, npad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_a), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, m), anchors.dtype),
+        interpret=interpret,
+    )(
+        anchors, x_train, linv, alpha, mask,
+        inv_ell, warp_a, warp_b, warp_on, amp2, y_best, kappa,
+    )

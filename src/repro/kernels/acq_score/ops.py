@@ -1,0 +1,136 @@
+"""Backend dispatcher for fused anchor scoring: ``acq_score``.
+
+``backend="xla"`` is the production composition the engine always had
+(``gp.predict`` + closed-form EI/LCB, three XLA ops). ``backend="pallas"``
+pads/packs and invokes the fused kernel: one HBM pass per decision over the
+anchor grid.
+
+The kernel's solve is the matmul L⁻¹K*ᵀ. The inverted factor comes from the
+posterior's ``chol_inv`` cache when the engine threaded it through
+(``fit_posterior_batch(with_inverse=True)`` + O(n²) maintenance in the
+rank-1 append — no per-decision inversion at all); otherwise it is computed
+here, once per call — O(n³/3) per GPHP sample against the O(A·n²) anchor
+sweep it feeds (the paper's grids use A ≥ n). Padded train rows extend the
+factor with an identity block (as in ``gp.incremental.grow_posterior``),
+whose inverse is again identity, keeping padded rows exactly inert.
+
+Dtype policy: in interpret mode (CPU — this container) the kernel runs in
+the posterior's own dtype, so the x64-enabled test session gets f64 parity
+against the XLA path; on a real TPU (``interpret=False``) inputs are cast to
+f32 like every other kernel in this repo.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acquisition as A
+from repro.core.gp.gp import GPPosterior, _triangular_inverse, predict
+from repro.core.gp.params import GPHyperParams
+from repro.kernels.acq_score.kernel import TILE_A, acq_score_pallas, anchor_tile
+
+__all__ = ["acq_score"]
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, size: int, axis: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _packed_params_batch(params: GPHyperParams, dpad: int, dt) -> tuple:
+    """(inv_ell, a, b, on, amp2) in the kernel's (S, dpad) layout."""
+    inv_ell = jnp.exp(-params.log_lengthscale.astype(dt))
+    a = jnp.exp(params.log_warp_a.astype(dt))
+    b = jnp.exp(params.log_warp_b.astype(dt))
+    identity = (jnp.abs(params.log_warp_a) < 1e-7) & (
+        jnp.abs(params.log_warp_b) < 1e-7
+    )
+    on = jnp.where(identity, 0.0, 1.0).astype(dt)
+    # padded features: inv_ell = 0 ⇒ zero contribution to distances
+    inv_ell = _pad_to(inv_ell, dpad, 1)
+    a = _pad_to(a, dpad, 1)
+    b = _pad_to(b, dpad, 1)
+    on = _pad_to(on, dpad, 1)
+    amp2 = jnp.exp(2.0 * params.log_amplitude.astype(dt))[:, None]  # (S, 1)
+    return inv_ell, a, b, on, amp2
+
+
+def acq_score(
+    post: GPPosterior,
+    x_star: jax.Array,  # (m, d) anchor locations in the unit cube
+    y_best: jax.Array,  # scalar: best standardized observation
+    *,
+    acq: str = "ei",
+    kappa: float = 2.0,
+    backend: str = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Acquisition values at ``x_star``: (S, m) if the posterior carries S
+    GPHP samples, else (m,). Larger is better. ``acq``: "ei" | "lcb"."""
+    if acq not in ("ei", "lcb"):
+        raise ValueError(f"unsupported acquisition {acq!r}")
+    if backend == "xla":
+        mu, var = predict(post, x_star, backend="xla")
+        if acq == "ei":
+            return A.expected_improvement(mu, var, y_best)
+        return A.lcb(mu, var, kappa)
+    if backend != "pallas":
+        raise ValueError(f"unknown acq_score backend {backend!r}")
+
+    if interpret is None:
+        interpret = _default_interpret()
+    batched = post.chol.ndim == 3
+    chol = post.chol if batched else post.chol[None]
+    alpha = post.alpha if batched else post.alpha[None]
+    params = (
+        post.params
+        if batched
+        else jax.tree.map(lambda p: p[None], post.params)
+    )
+
+    m, d = x_star.shape
+    n = chol.shape[-1]
+    npad = max(8, -(-n // 8) * 8)
+    dpad = max(8, -(-d // 8) * 8)
+    tile_a = anchor_tile(-(-m // TILE_A) * TILE_A, npad)
+    mpad = -(-m // tile_a) * tile_a
+    dt = x_star.dtype if interpret else jnp.float32
+
+    anchors = _pad_to(_pad_to(x_star.astype(dt), mpad, 0), dpad, 1)
+    xt = _pad_to(_pad_to(post.x_train.astype(dt), npad, 0), dpad, 1)
+    mask = _pad_to(post.mask.astype(dt)[None, :], npad, 1)
+
+    # identity-extend the (inverted) factor over padded rows; block-diagonal
+    # triangular matrices invert blockwise, so padding and inversion commute.
+    def ident_pad(t):
+        t = _pad_to(_pad_to(t.astype(dt), npad, 1), npad, 2)
+        if npad > n:
+            diag = jnp.arange(n, npad)
+            t = t.at[:, diag, diag].set(1.0)
+        return t
+
+    if post.chol_inv is not None:
+        linv = ident_pad(post.chol_inv if batched else post.chol_inv[None])
+    else:
+        linv = _triangular_inverse(ident_pad(chol))
+    alphap = _pad_to(alpha.astype(dt), npad, 1)
+
+    inv_ell, a, b, on, amp2 = _packed_params_batch(params, dpad, dt)
+    y_b = jnp.asarray(y_best, dt).reshape(1, 1)
+    kap = jnp.asarray(kappa, dt).reshape(1, 1)
+
+    out = acq_score_pallas(
+        anchors, xt, linv, alphap, mask, inv_ell, a, b, on, amp2, y_b, kap,
+        acq=acq, tile_a=tile_a, interpret=interpret,
+    )  # (S, mpad)
+    out = out[:, :m].astype(x_star.dtype)
+    return out if batched else out[0]

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused predict+acquisition kernel.
+
+Deliberately *not* implemented by calling ``repro.core.gp.gp.predict`` +
+``repro.core.acquisition`` — the parity suite compares the Pallas kernel
+against both this standalone mirror of the kernel math (gram → cached-factor
+solve → closed form) *and* the production composition, so the three paths
+triangulate each other.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp.gp import GPPosterior
+from repro.core.gp.kernels import matern52_ard
+
+__all__ = ["acq_score_ref"]
+
+_SQRT2 = 1.4142135623730951
+_INV_SQRT2PI = 0.3989422804014327
+
+
+def acq_score_ref(
+    post: GPPosterior,
+    x_star: jax.Array,  # (m, d)
+    y_best: jax.Array,  # scalar (standardized incumbent)
+    *,
+    acq: str = "ei",
+    kappa: float = 2.0,
+) -> jax.Array:
+    """Acquisition per anchor: (S, m) if the posterior holds S samples,
+    else (m,). Larger is better (EI, or negated LCB)."""
+    if acq not in ("ei", "lcb"):
+        raise ValueError(f"unsupported acquisition {acq!r}")
+    batched = post.chol.ndim == 3
+    mask = post.mask.astype(x_star.dtype)
+
+    def one(chol, alpha, params):
+        k_star = matern52_ard(x_star, post.x_train, params) * mask[None, :]
+        mu = k_star @ alpha  # (m,)
+        eye = jnp.eye(chol.shape[0], dtype=chol.dtype)
+        linv = jax.scipy.linalg.solve_triangular(chol, eye, lower=True)
+        v = linv @ k_star.T  # (n, m)
+        amp2 = jnp.exp(2.0 * params.log_amplitude)
+        var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0), 1e-12)
+        sigma = jnp.sqrt(var)
+        if acq == "ei":
+            gamma = (y_best - mu) / sigma
+            cdf = 0.5 * (1.0 + jax.lax.erf(gamma / _SQRT2))
+            pdf = _INV_SQRT2PI * jnp.exp(-0.5 * gamma * gamma)
+            return jnp.maximum(sigma * (gamma * cdf + pdf), 0.0)
+        return kappa * sigma - mu
+
+    if batched:
+        return jax.vmap(one)(post.chol, post.alpha, post.params)
+    return one(post.chol, post.alpha, post.params)

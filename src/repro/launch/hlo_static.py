@@ -112,7 +112,15 @@ class _Instr:
                 token.append(ch)
         if token:
             parts.append("".join(token).strip())
-        return [p.lstrip("%") for p in parts if p.strip().startswith("%")]
+        # Operands may be bare refs ("%name") or typed refs
+        # ("f32[64,128]{1,0} %name" — newer XLA text format); take the
+        # trailing %ref either way and drop non-ref parts.
+        names = []
+        for p in parts:
+            m = re.search(r"%([\w.\-]+)$", p.strip())
+            if m:
+                names.append(m.group(1))
+        return names
 
 
 @dataclasses.dataclass

@@ -1,11 +1,19 @@
-"""Acquisition functions: closed-form EI vs Monte Carlo, optimizer behaviour."""
+"""Acquisition functions: closed-form EI vs Monte Carlo, optimizer behaviour,
+and hypothesis property tests of the acquisition math (degrade to skips when
+``hypothesis`` is unavailable — see ``_hypothesis_compat``)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.acquisition import expected_improvement, lcb, thompson_draws
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.acquisition import (
+    expected_improvement,
+    integrate_over_samples,
+    lcb,
+    thompson_draws,
+)
 from repro.core.gp import gp as G
 from repro.core.gp import params as P
 from repro.core.optimize_acq import AcqOptConfig, optimize_acquisition
@@ -88,6 +96,107 @@ def test_pending_exclusion():
     )
     dist = float(jnp.max(jnp.abs(excl[0] - top)))
     assert dist >= cfg.exclusion_radius - 1e-6
+
+
+# ------------------------------------------------- property-based (hypothesis)
+# Strategies draw RNG seeds; moments are generated with numpy so value ranges
+# stay controlled (wide but finite mu/var/y_best in standardized space).
+_SEEDS = st.integers(min_value=0, max_value=2**32 - 1) if HAVE_HYPOTHESIS else None
+
+
+def _moments(seed, s=4, m=16):
+    rng = np.random.default_rng(seed)
+    mu = jnp.asarray(rng.uniform(-10.0, 10.0, (s, m)))
+    var = jnp.asarray(10.0 ** rng.uniform(-12.0, 2.0, (s, m)))
+    y_best = jnp.asarray(rng.uniform(-10.0, 10.0))
+    return mu, var, y_best
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEEDS)
+def test_property_ei_nonnegative(seed):
+    mu, var, y_best = _moments(seed)
+    ei = expected_improvement(mu, var, y_best)
+    assert bool(jnp.all(ei >= 0.0))
+    assert bool(jnp.all(jnp.isfinite(ei)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEEDS)
+def test_property_ei_vanishes_as_sigma_to_zero_when_worse(seed):
+    """σ → 0 with μ > y*: no improvement is possible, EI must → 0."""
+    rng = np.random.default_rng(seed)
+    y_best = jnp.asarray(rng.uniform(-5.0, 5.0))
+    mu = y_best + jnp.asarray(rng.uniform(0.1, 10.0, 16))  # strictly worse
+    for log_var in (-8.0, -10.0, -13.0):
+        ei = expected_improvement(mu, jnp.asarray(10.0**log_var), y_best)
+        assert float(jnp.max(ei)) < 1e-3 * 10 ** (log_var / 2 + 4)
+    ei0 = expected_improvement(mu, jnp.zeros(16), y_best)
+    assert float(jnp.max(ei0)) == pytest.approx(0.0, abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEEDS)
+def test_property_lcb_monotone_in_kappa(seed):
+    """Negated LCB (larger-is-better) must be non-decreasing in κ."""
+    mu, var, _ = _moments(seed)
+    kappas = sorted(np.random.default_rng(seed).uniform(0.0, 8.0, 4))
+    prev = lcb(mu, var, kappas[0])
+    for k in kappas[1:]:
+        cur = lcb(mu, var, k)
+        assert bool(jnp.all(cur >= prev - 1e-12))
+        prev = cur
+
+
+@settings(max_examples=30, deadline=None)
+@given(_SEEDS)
+def test_property_integrated_acq_invariant_to_sample_permutation(seed):
+    """The GPHP integral (mean over S) must not care about sample order."""
+    mu, var, y_best = _moments(seed, s=6, m=8)
+    perm = np.random.default_rng(seed + 1).permutation(6)
+    for vals in (expected_improvement(mu, var, y_best), lcb(mu, var, 2.0)):
+        base = integrate_over_samples(vals)
+        shuffled = integrate_over_samples(vals[perm])
+        np.testing.assert_allclose(
+            np.asarray(base), np.asarray(shuffled), rtol=1e-12, atol=1e-12
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(_SEEDS)
+def test_property_fused_scores_invariant_to_posterior_permutation(seed):
+    """Permuting the posterior's GPHP samples permutes per-sample scores and
+    leaves the integrated acquisition unchanged — on the fused kernel too."""
+    from repro.kernels.acq_score.ops import acq_score
+
+    rng = np.random.default_rng(seed)
+    n, d, S = 8, 2, 4
+    x = jnp.asarray(rng.random((n, d)))
+    y = jnp.asarray(rng.standard_normal(n))
+    packed = jnp.stack(
+        [P.default_params(d).pack() + 0.1 * rng.standard_normal(3 * d + 2)
+         for _ in range(S)]
+    )
+    post = G.fit_posterior_batch(x, y, P.GPHyperParams.unpack(packed, d))
+    perm = rng.permutation(S)
+    shuffled = G.GPPosterior(
+        x_train=post.x_train,
+        mask=post.mask,
+        chol=post.chol[perm],
+        alpha=post.alpha[perm],
+        params=jax.tree.map(lambda p: p[perm], post.params),
+    )
+    anchors = jnp.asarray(rng.random((32, d)))
+    y_best = jnp.asarray(float(y.min()))
+    for backend in ("xla", "pallas"):
+        a = acq_score(post, anchors, y_best, backend=backend)
+        b = acq_score(shuffled, anchors, y_best, backend=backend)
+        np.testing.assert_allclose(np.asarray(a[perm]), np.asarray(b), atol=1e-12)
+        np.testing.assert_allclose(
+            np.asarray(integrate_over_samples(a)),
+            np.asarray(integrate_over_samples(b)),
+            atol=1e-12,
+        )
 
 
 def test_refinement_does_not_hurt():

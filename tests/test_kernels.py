@@ -17,6 +17,8 @@ from repro.kernels.matern52.ref import matern52_cross_ref, matern52_gram_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
 
+pytestmark = pytest.mark.pallas
+
 RNG = np.random.default_rng(42)
 
 
