@@ -1,0 +1,23 @@
+"""Shared I/O for benchmark JSON artifacts."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+
+def merge_bench_json(out_path: str, updates: Dict[str, Any]) -> None:
+    """Read-merge-write top-level sections of a bench artifact, preserving
+    sections written by other suites. A missing or torn file (e.g. from an
+    interrupted earlier run) starts fresh instead of crashing."""
+    merged: Dict[str, Any] = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+    merged.update(updates)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=2)

@@ -1,0 +1,221 @@
+"""Multi-job SelectionService: shared vs per-job decision engines.
+
+Drives N ∈ {2, 4, 8} concurrent tuning jobs on the *same* search space,
+round-robin (the fleet pattern: one AutoML run fanning out many tuning jobs),
+and compares per-decision latency of
+
+  * **per-job** — N independent incremental engines (PR 1 state of the
+    world): each job re-runs slice-sampling MCMC every ``refit_every`` of its
+    *own* observations;
+  * **shared** — one ``SelectionService`` with ``share_gphp=True``: when a
+    job's cadence triggers it adopts the freshest sibling-published draws
+    (an RNG-free refactorization) instead of re-running MCMC, so roughly one
+    MCMC fit happens per ``refit_every`` *group* observations. The GPHP pool
+    hit-rate (fraction of posterior builds served without MCMC) is reported.
+
+Sibling warm-start is disabled in the latency arms so both see identical GP
+dataset sizes; its correctness is checked separately: the service's automatic
+sibling fold must reproduce an explicit ``WarmStartPool``'s suggestions to
+1e-6 (reported as ``warm_start_equivalence_max_abs``).
+
+Merges a ``multi_job`` section into ``BENCH_suggest.json`` (preserving the
+other sections) and returns CSV rows for ``benchmarks/run.py``.
+``--smoke`` runs a 30-second N=2 variant without touching the JSON (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+try:
+    from benchmarks.bench_io import merge_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from bench_io import merge_bench_json
+
+from repro.core import (
+    BOConfig,
+    BOSuggester,
+    Continuous,
+    ObservationStore,
+    SearchSpace,
+    SelectionService,
+    ServiceConfig,
+    WarmStartPool,
+)
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+
+BENCH_SLICE = SliceSamplerConfig(num_samples=12, burn_in=6, thin=2)
+REFIT_EVERY = 5
+SEED_OBS = 12  # observations pre-loaded per job before timing
+_D = 4
+
+
+def _space() -> SearchSpace:
+    return SearchSpace([Continuous(f"x{i}", 0.0, 1.0) for i in range(_D)])
+
+
+def _objective(cfg) -> float:
+    return float(sum((cfg[f"x{i}"] - 0.5 + 0.1 * i) ** 2 for i in range(_D)))
+
+
+def _config() -> BOConfig:
+    return BOConfig(num_init=3, slice_config=BENCH_SLICE,
+                    refit_every=REFIT_EVERY, incremental=True)
+
+
+def _seed_store(store: ObservationStore, space: SearchSpace, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    for c in space.sample(rng, SEED_OBS):
+        store.push(c, _objective(c))
+
+
+def _drive(jobs, space: SearchSpace, rounds: int) -> float:
+    """Round-robin decision loop; returns summed suggest wall time (s).
+    ``jobs`` is a list of (suggest_batch callable, store)."""
+    total = 0.0
+    for _ in range(rounds):
+        for suggest, store in jobs:
+            t0 = time.perf_counter()
+            cfg = suggest(1)[0]
+            total += time.perf_counter() - t0
+            store.push(cfg, _objective(cfg))
+    return total
+
+
+def _run_per_job(space, n_jobs: int, rounds: int) -> float:
+    jobs = []
+    for j in range(n_jobs):
+        store = ObservationStore(space)
+        _seed_store(store, space, seed=j)
+        sugg = BOSuggester(space, _config(), seed=j, store=store)
+        jobs.append((sugg.suggest_batch, store))
+    return _drive(jobs, space, rounds)
+
+
+def _run_shared(space, n_jobs: int, rounds: int):
+    svc = SelectionService(ServiceConfig(
+        share_gphp=True, sibling_warm_start=False,
+        default_bo_config=_config(),
+    ))
+    jobs = []
+    for j in range(n_jobs):
+        handle = svc.register_job(f"job-{j}", space, seed=j)
+        _seed_store(handle.store, space, seed=j)
+        jobs.append((handle.suggest_batch, handle.store))
+    elapsed = _drive(jobs, space, rounds)
+    pool = svc.group_pool("job-0")
+    return elapsed, pool.stats(), svc.arena.stats()
+
+
+def _warm_start_equivalence(space, k: int = 3) -> float:
+    """Max |Δ| (encoded) between service sibling warm-start and an explicit
+    WarmStartPool over k suggestions — the cross-job transfer path must be
+    exactly the §5.3 mechanism, not an approximation of it."""
+    svc = SelectionService(ServiceConfig(share_gphp=False))
+    a = svc.register_job("a", space, bo_config=_config(), seed=0)
+    rng = np.random.default_rng(42)
+    pairs = [(c, _objective(c)) for c in space.sample(rng, 8)]
+    for c, y in pairs:
+        a.store.push(c, y)
+
+    b = svc.register_job("b", space, bo_config=_config(), seed=7)
+    pool = WarmStartPool()
+    pool.add_parent(pairs, name="sibling:a")
+    ref_store = ObservationStore(space, warm_start=pool)
+    ref = BOSuggester(space, _config(), seed=7, store=ref_store)
+
+    worst = 0.0
+    for c in space.sample(np.random.default_rng(1), 4):
+        y = _objective(c)
+        b.store.push(c, y)
+        ref_store.push(c, y)
+    for _ in range(k):
+        got = space.encode(b.suggest_batch(1)[0])
+        want = space.encode(ref.suggest_batch(1)[0])
+        worst = max(worst, float(np.max(np.abs(got - want))))
+        # keep the two stores identical for the next decision
+        nxt = space.decode(want)
+        b.store.push(nxt, _objective(nxt))
+        ref_store.push(nxt, _objective(nxt))
+    return worst
+
+
+def run(
+    n_jobs_list: Tuple[int, ...] = (2, 4, 8),
+    rounds: int = 8,
+    out_path: Optional[str] = "default",
+) -> List[Tuple[str, float, str]]:
+    space = _space()
+    # warm-up: compile every jitted piece for the buckets both arms touch
+    # (SEED_OBS=12 + rounds crosses the 16→32 bucket), so neither arm pays
+    # XLA compile time inside the measured region.
+    _run_per_job(space, 1, max(6, rounds))
+
+    rows: List[Tuple[str, float, str]] = []
+    section = {
+        "config": {
+            "dims": _D,
+            "slice": {"num_samples": BENCH_SLICE.num_samples,
+                      "burn_in": BENCH_SLICE.burn_in, "thin": BENCH_SLICE.thin},
+            "refit_every": REFIT_EVERY,
+            "seed_obs_per_job": SEED_OBS,
+            "rounds_per_job": rounds,
+        },
+        "arms": [],
+    }
+    for n_jobs in n_jobs_list:
+        t_per_job = _run_per_job(space, n_jobs, rounds)
+        t_shared, pool_stats, arena_stats = _run_shared(space, n_jobs, rounds)
+        decisions = n_jobs * rounds
+        per_ms = t_per_job / decisions * 1e3
+        sh_ms = t_shared / decisions * 1e3
+        speedup = t_per_job / t_shared if t_shared > 0 else float("inf")
+        section["arms"].append({
+            "n_jobs": n_jobs,
+            "decisions": decisions,
+            "per_job_ms_per_decision": per_ms,
+            "shared_ms_per_decision": sh_ms,
+            "speedup": speedup,
+            "gphp_pool": pool_stats,
+            "arena": arena_stats,
+        })
+        rows.append((f"multi_job_n{n_jobs}_shared_us", sh_ms * 1e3,
+                     f"{speedup:.2f}x_vs_per_job_hit{pool_stats['hit_rate']:.2f}"))
+
+    worst = _warm_start_equivalence(space)
+    section["warm_start_equivalence_max_abs"] = worst
+    rows.append(("multi_job_warmstart_equiv_maxabs", worst * 1e6,
+                 "x1e-6_vs_explicit_pool"))
+
+    if out_path == "default":
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_suggest.json")
+    if out_path:
+        merge_bench_json(out_path, {"multi_job": section})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=2, few rounds, no JSON write (CI rot check)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(n_jobs_list=(2,), rounds=3, out_path=None)
+    else:
+        rows = run()
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    if args.smoke:
+        equiv = next(r for r in rows if r[0] == "multi_job_warmstart_equiv_maxabs")
+        assert equiv[1] <= 1.0, f"warm-start equivalence degraded: {equiv}"
+        print("smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

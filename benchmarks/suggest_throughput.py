@@ -24,7 +24,6 @@ for ``benchmarks/run.py``.
 
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import List, Tuple
@@ -32,6 +31,11 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from benchmarks.bench_io import merge_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from bench_io import merge_bench_json
 
 from repro.core import BOConfig, BOSuggester, Continuous, ObservationStore, SearchSpace
 from repro.core import acquisition as acqlib
@@ -246,8 +250,7 @@ def run(sizes=SIZES, out_path: str | None = None) -> List[Tuple[str, float, str]
     if out_path is None:
         out_path = os.path.join(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))), "BENCH_suggest.json")
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
+    merge_bench_json(out_path, report)  # preserve other suites' sections
     return rows
 
 

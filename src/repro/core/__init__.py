@@ -7,6 +7,7 @@ Public API:
     WarmStartPool                                      (§5.3)
     ASHARule                                           (beyond-paper, §2.3)
     Tuner / TuningJobConfig                            (§3 workflow engine)
+    SelectionService / ServiceConfig                   (§3 multi-job service)
 
 Note: GP/BO numerics run in float64 — Cholesky factorizations of Matérn gram
 matrices with small noise floors are not reliably PSD in float32. Model
@@ -29,8 +30,15 @@ from repro.core.history import ObservationStore  # noqa: E402
 from repro.core.suggest import (  # noqa: E402
     BOConfig,
     BOSuggester,
+    EngineCache,
     RandomSuggester,
     SobolSuggester,
+)
+from repro.core.service import (  # noqa: E402
+    FactorArena,
+    GPHPSamplePool,
+    SelectionService,
+    ServiceConfig,
 )
 from repro.core.median_rule import MedianRule, MedianRuleConfig  # noqa: E402
 from repro.core.warm_start import WarmStartPool, transferable  # noqa: E402
@@ -50,6 +58,11 @@ __all__ = [
     "ObservationStore",
     "BOConfig",
     "BOSuggester",
+    "EngineCache",
+    "FactorArena",
+    "GPHPSamplePool",
+    "SelectionService",
+    "ServiceConfig",
     "RandomSuggester",
     "SobolSuggester",
     "MedianRule",

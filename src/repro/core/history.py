@@ -198,6 +198,17 @@ class ObservationStore:
             (self.space.decode(self._x[i]), float(y[i])) for i in range(n)
         ]
 
+    def own_pairs(self) -> List[Observation]:
+        """This job's *own* finished observations as decoded (config, raw
+        objective) pairs — parent rows excluded, objectives unscaled. This is
+        the export a ``SelectionService`` feeds to a sibling job's
+        ``WarmStartPool`` (which re-applies the per-task z-scoring itself)."""
+        npar, n = self._num_parents, self.num_observations
+        return [
+            (self.space.decode(self._x[i]), float(self._y[i]))
+            for i in range(npar, n)
+        ]
+
     # ---------------------------------------------------------- persistence
     def state_dict(self) -> Dict[str, Any]:
         """Own rows only: parents are reconstructed from the warm-start pool

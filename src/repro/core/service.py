@@ -1,0 +1,353 @@
+"""Multi-job Hyperparameter Selection Service (paper §3, Fig. 1).
+
+AMT's selection service is *multi-tenant*: one fleet of decision engines
+serves many concurrent tuning jobs, and the fleet-scale story is amortizing
+surrogate work across tenants (the same pattern SageMaker Autopilot leans on
+when one AutoML run fans out many tuning jobs, and that SigOpt's multi-tenant
+successor factors as shared modeling state across requests). PR 1–2 built a
+fast *per-job* engine; ``SelectionService`` multiplexes N jobs over shared
+decision-engine state. Jobs registered on the same search space (identical
+parameter structure ⇒ same encoded dim + warpable dims) form a **space
+group** sharing three things:
+
+  * **GPHP sample pool** (``GPHPSamplePool``) — slice-sampling is the
+    dominant per-decision cost (paper §4.2). When a job's refit cadence
+    triggers, it first checks whether a sibling published fresher draws since
+    it last synced; if so it *adopts* them (a full refactorization, RNG-free)
+    instead of re-running MCMC. Across a group of N jobs roughly one MCMC fit
+    happens per ``refit_every`` *group* observations instead of one per job,
+    and a cold job joining the group skips burn-in entirely (the pool also
+    carries the last chain state, warm-starting the next chain). Adoption is
+    an approximation — draws come from a sibling's posterior on the same
+    space — and is disabled by ``ServiceConfig(share_gphp=False)``, which
+    keeps every job's GPHP chain bit-identical to a standalone engine.
+
+  * **Factor arena** (``FactorArena``) — per-suggester posterior caches were
+    unbounded: each job pins O(S·n²) of Cholesky + L⁻¹ blocks forever. The
+    arena is an LRU bound over every job's resident factors; eviction drops
+    only the factor blocks (``EngineCache.drop_factors``), never the cached
+    GPHP draws, so the next decision rebuilds deterministically without
+    consuming RNG state — suggestions are invariant under eviction.
+
+  * **Automatic sibling warm-start** (paper §5.3) — a job joining the
+    service folds the *completed observations its siblings have so far* into
+    its GP dataset via the existing ``WarmStartPool`` per-task z-scoring.
+    This is live cross-job transfer: siblings registered before this job may
+    still be running; whatever they have finished transfers. With
+    ``share_gphp=False`` the resulting suggestions are exactly those of a
+    standalone engine given an explicit ``WarmStartPool`` of the same
+    histories (the equivalence tests pin this).
+
+``Tuner(..., service=svc)`` routes a tuning job through the service: the
+store, cache, and (optionally) the suggester itself are service-created, and
+slot refill goes through ``JobHandle.suggest_batch`` — the seam where a
+cross-process RPC boundary would sit in a real deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.history import ObservationStore
+from repro.core.search_space import Categorical, Integer, SearchSpace
+from repro.core.suggest import BOConfig, BOSuggester, EngineCache
+from repro.core.warm_start import WarmStartPool
+
+__all__ = [
+    "FactorArena",
+    "GPHPSamplePool",
+    "JobHandle",
+    "SelectionService",
+    "ServiceConfig",
+    "space_signature",
+]
+
+
+def space_signature(space: SearchSpace) -> Tuple[Any, ...]:
+    """Structural identity of a search space: two jobs share decision-engine
+    state iff their spaces agree on every parameter (name, type, bounds,
+    scaling, choices) — which implies identical encoded dim and warpable
+    dims, the two things the GP layer actually consumes."""
+    parts: List[Tuple[Any, ...]] = []
+    for p in space.parameters:
+        if isinstance(p, Categorical):
+            parts.append(("cat", p.name, tuple(repr(c) for c in p.choices)))
+        else:
+            kind = "int" if isinstance(p, Integer) else "float"
+            parts.append((kind, p.name, float(p.low), float(p.high), p.scaling))
+    return (space.encoded_dim, tuple(parts))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of the multi-job service.
+
+    * ``arena_budget_mb`` — total resident Cholesky/L⁻¹ memory across all
+      jobs; least-recently-deciding jobs get their factors dropped first.
+    * ``share_gphp`` — sibling GPHP-draw adoption (see module docstring).
+      False keeps each job's chain bit-identical to a standalone engine.
+    * ``sibling_warm_start`` — fold completed sibling observations into a
+      newly registered job's GP dataset (per-task z-scored, §5.3).
+    * ``min_sibling_obs`` — a sibling contributes only once it has this many
+      finished observations (z-scoring needs ≥ 2 to be meaningful).
+    * ``default_bo_config`` — engine config for jobs registered without a
+      suggester (e.g. ``Tuner(..., suggester=None, service=svc)``).
+    """
+
+    arena_budget_mb: float = 256.0
+    share_gphp: bool = True
+    sibling_warm_start: bool = True
+    min_sibling_obs: int = 2
+    default_bo_config: Optional[BOConfig] = None
+
+
+class GPHPSamplePool:
+    """Latest packed GPHP draws + slice-chain state for one space group.
+
+    ``version`` increments on every publish; an engine adopts iff the pool is
+    ahead of its last sync (``EngineCache.pool_version``), so the job that
+    just published never re-adopts its own draws.
+    """
+
+    def __init__(self) -> None:
+        self.samples: Optional[np.ndarray] = None  # packed (S, 3d+2)
+        self.chain_state: Optional[np.ndarray] = None
+        self.version = 0
+        # stats: decisions = posterior builds served against this pool,
+        # publishes = MCMC fits actually run, adoptions = fits avoided.
+        self.decisions = 0
+        self.publishes = 0
+        self.adoptions = 0
+
+    def publish(self, samples: np.ndarray, chain_state: Optional[np.ndarray]) -> None:
+        self.samples = np.array(samples)
+        if chain_state is not None:
+            self.chain_state = np.array(chain_state)
+        self.version += 1
+        self.publishes += 1
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of posterior builds served without running MCMC."""
+        if self.decisions == 0:
+            return 0.0
+        return 1.0 - self.publishes / self.decisions
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "version": self.version,
+            "decisions": self.decisions,
+            "publishes": self.publishes,
+            "adoptions": self.adoptions,
+            "hit_rate": self.hit_rate,
+        }
+
+
+class FactorArena:
+    """LRU bound on the total resident posterior-factor memory.
+
+    Each ``EngineCache`` registers here on every decision (``touch``). When
+    the summed ``factor_nbytes`` exceeds the budget, least-recently-used
+    caches are asked to ``drop_factors`` — the cached GPHP draws survive, so
+    the evicted job's next decision refactorizes (O(S·n³), RNG-free) instead
+    of re-running MCMC, and its suggestions are unchanged.
+    """
+
+    def __init__(self, budget_bytes: int = 256 << 20):
+        self.budget_bytes = int(budget_bytes)
+        self._entries: "OrderedDict[Any, EngineCache]" = OrderedDict()
+        self.evictions = 0
+
+    def touch(self, key: Any, cache: EngineCache) -> None:
+        self._entries.pop(key, None)
+        self._entries[key] = cache
+        self._enforce(protect=key)
+
+    def remove(self, key: Any) -> None:
+        self._entries.pop(key, None)
+
+    def resident_bytes(self) -> int:
+        return sum(c.factor_nbytes() for c in self._entries.values())
+
+    def _enforce(self, protect: Any) -> None:
+        # evict LRU-first until under budget; never evict the cache that was
+        # just touched (the job currently deciding).
+        while self.resident_bytes() > self.budget_bytes:
+            victim = None
+            for key in self._entries:  # iteration order: LRU → MRU
+                if key != protect and self._entries[key].factor_nbytes() > 0:
+                    victim = key
+                    break
+            if victim is None:
+                return
+            cache = self._entries.pop(victim)
+            cache.drop_factors()
+            self.evictions += 1
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "budget_bytes": self.budget_bytes,
+            "resident_bytes": self.resident_bytes(),
+            "tracked_jobs": len(self._entries),
+            "evictions": self.evictions,
+        }
+
+
+class _SpaceGroup:
+    """All jobs registered on one search-space signature."""
+
+    def __init__(self, space: SearchSpace):
+        self.space = space
+        self.pool = GPHPSamplePool()
+        self.jobs: List[str] = []
+
+
+class JobHandle:
+    """A registered job's view of the service: its store, its suggester, and
+    the ``suggest_batch`` entry point (the future RPC seam)."""
+
+    def __init__(self, name, space, suggester, store, service, warm_pool):
+        self.name = name
+        self.space = space
+        self.suggester = suggester
+        self.store: ObservationStore = store
+        self.service: "SelectionService" = service
+        self.warm_pool: Optional[WarmStartPool] = warm_pool
+        self.stale = False  # set when another registration takes this name
+
+    def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
+        if self.stale:
+            # another job registered under this name since: routing by name
+            # would silently serve decisions from the *new* job's engine.
+            raise RuntimeError(
+                f"JobHandle {self.name!r} is stale: the name was re-registered"
+                " (give concurrent jobs distinct TuningJobConfig.job_name s)"
+            )
+        return self.service.suggest_batch(self.name, k)
+
+    def observe(self, config, y: float) -> bool:
+        """Record a finished observation (direct-drive API; the Tuner pushes
+        through its own store reference instead)."""
+        return self.store.push(config, y)
+
+
+class SelectionService:
+    """Multiplexes N concurrent tuning jobs over shared decision-engine
+    state (GPHP pools, a factor arena, sibling warm-start). See the module
+    docstring for the sharing semantics."""
+
+    def __init__(self, config: ServiceConfig = ServiceConfig()):
+        self.config = config
+        self.arena = FactorArena(int(config.arena_budget_mb * (1 << 20)))
+        self._groups: Dict[Tuple[Any, ...], _SpaceGroup] = {}
+        self._jobs: Dict[str, JobHandle] = {}
+
+    # ------------------------------------------------------------- registry
+    @property
+    def num_jobs(self) -> int:
+        return len(self._jobs)
+
+    def job(self, name: str) -> JobHandle:
+        return self._jobs[name]
+
+    def group_pool(self, name: str) -> GPHPSamplePool:
+        """The GPHP pool of the space group ``name`` belongs to."""
+        sig = space_signature(self._jobs[name].space)
+        return self._groups[sig].pool
+
+    def register_job(
+        self,
+        name: str,
+        space: SearchSpace,
+        *,
+        suggester=None,
+        bo_config: Optional[BOConfig] = None,
+        seed: int = 0,
+        warm_start: Optional[WarmStartPool] = None,
+        fold_siblings: bool = True,
+    ) -> JobHandle:
+        """Register (or re-register, e.g. after a checkpoint restore) a
+        tuning job. Creates the job's observation store (sibling + user
+        warm-start folded in), wires a service-owned ``EngineCache`` into the
+        suggester (creating a ``BOSuggester`` if none is given), and returns
+        the handle decisions are served through.
+
+        ``fold_siblings=False`` skips the automatic sibling fold — used on
+        restore, where the checkpointed warm-start pool already contains the
+        sibling parents captured at original registration.
+        """
+        sig = space_signature(space)
+        group = self._groups.get(sig)
+        if group is None:
+            group = self._groups[sig] = _SpaceGroup(space)
+        if name in self._jobs:  # re-registration replaces the old entry
+            self._unregister(name)
+
+        pools: List[Optional[WarmStartPool]] = [warm_start]
+        if fold_siblings and self.config.sibling_warm_start:
+            sib = WarmStartPool()
+            for sibling_name in group.jobs:
+                pairs = self._jobs[sibling_name].store.own_pairs()
+                if len(pairs) >= self.config.min_sibling_obs:
+                    sib.add_parent(pairs, name=f"sibling:{sibling_name}")
+            pools.append(sib)
+        combined = WarmStartPool.merged(*[p for p in pools if p is not None])
+        warm_pool = combined if combined.num_parents > 0 else None
+
+        store = ObservationStore(space, warm_start=warm_pool)
+        cache = EngineCache(
+            pool=group.pool if self.config.share_gphp else None,
+            arena=self.arena,
+            arena_key=name,
+        )
+        if suggester is None:
+            suggester = BOSuggester(
+                space,
+                bo_config or self.config.default_bo_config or BOConfig(),
+                seed=seed,
+                store=store,
+                cache=cache,
+            )
+        else:
+            if hasattr(suggester, "attach_cache"):
+                suggester.attach_cache(cache)
+            if hasattr(suggester, "bind_store"):
+                suggester.bind_store(store)
+
+        handle = JobHandle(name, space, suggester, store, self, warm_pool)
+        group.jobs.append(name)
+        self._jobs[name] = handle
+        return handle
+
+    def _unregister(self, name: str) -> None:
+        handle = self._jobs.pop(name)
+        handle.stale = True  # loud failure for anyone still holding it
+        sig = space_signature(handle.space)
+        group = self._groups.get(sig)
+        if group is not None and name in group.jobs:
+            group.jobs.remove(name)
+        self.arena.remove(name)
+
+    # ------------------------------------------------------------ decisions
+    def suggest_batch(self, name: str, k: int) -> List[Dict[str, Any]]:
+        """Serve k candidates for ``name`` — the multiplexed decision entry
+        point (arena LRU accounting happens inside the engine's decision)."""
+        handle = self._jobs[name]
+        return handle.suggester.suggest_batch(k)
+
+    # -------------------------------------------------------------- insight
+    def stats(self) -> Dict[str, Any]:
+        groups = []
+        for sig, group in self._groups.items():
+            groups.append(
+                {
+                    "encoded_dim": sig[0],
+                    "jobs": list(group.jobs),
+                    "pool": group.pool.stats(),
+                }
+            )
+        return {"arena": self.arena.stats(), "groups": groups}

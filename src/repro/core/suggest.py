@@ -33,6 +33,13 @@ private store by prefix-diffing the passed history (append-only callers get
 the incremental path for free; anything else falls back to a full rebuild,
 i.e. the seed's stateless behavior).
 
+Both caches live in an ``EngineCache`` object the suggester owns by default;
+in service mode (``repro.core.service``) the ``SelectionService`` owns it
+instead — sibling jobs on the same search space adopt each other's GPHP
+draws through a shared pool, and a factor arena bounds the total resident
+Cholesky memory across jobs (eviction drops factors only; rebuilds are
+RNG-free, so suggestions are invariant under eviction).
+
 Shape bucketing keeps jit recompiles logarithmic in the number of
 observations; growing into a larger bucket pads the cached factors with an
 identity block rather than refactorizing.
@@ -66,7 +73,13 @@ from repro.core.optimize_acq import AcqOptConfig, optimize_acquisition
 from repro.core.search_space import SearchSpace
 from repro.core.sobol import SobolSequence
 
-__all__ = ["BOConfig", "BOSuggester", "RandomSuggester", "SobolSuggester"]
+__all__ = [
+    "BOConfig",
+    "BOSuggester",
+    "EngineCache",
+    "RandomSuggester",
+    "SobolSuggester",
+]
 
 Observation = Tuple[Mapping[str, Any], float]
 
@@ -117,6 +130,67 @@ class BOConfig:
         return dataclasses.replace(self, slice_config=FAST_CONFIG)
 
 
+class EngineCache:
+    """The extractable cache block of the incremental BO engine.
+
+    Holds everything a decision reuses between calls: the packed GPHP draws,
+    the factorized ``GPPosterior`` covering the store prefix ``[0, n)``, and
+    the refit-cadence accounting. A standalone ``BOSuggester`` owns a private
+    instance; a ``SelectionService`` (``repro.core.service``) instead hands
+    out instances wired to a shared **GPHP sample pool** (sibling jobs on the
+    same search space adopt each other's draws instead of re-running MCMC)
+    and registered in a **factor arena** (an LRU bound on total resident
+    Cholesky/L⁻¹ memory — eviction calls ``drop_factors``, which is always
+    safe: the factorization rebuilds from ``samples`` without consuming any
+    RNG state, so suggestions are invariant under eviction).
+    """
+
+    def __init__(self, pool=None, arena=None, arena_key=None):
+        self.samples: Optional[np.ndarray] = None  # packed (S, 3d+2) draws
+        self.post = None  # GPPosterior for store rows [0, n)
+        self.n = 0  # observations folded into the cadence accounting
+        self.obs_since_refit = 0
+        self.token: Optional[int] = None  # id() of the store the cache maps
+        self.pool = pool  # GPHPSamplePool shared by sibling jobs (or None)
+        self.pool_version = -1  # pool.version last adopted/published
+        self.arena = arena  # FactorArena bounding factor residency (or None)
+        self.arena_key = arena_key
+
+    # ------------------------------------------------------------ lifecycle
+    def reset(self) -> None:
+        self.samples = None
+        self.post = None
+        self.n = 0
+        self.obs_since_refit = 0
+        self.token = None
+        self.pool_version = -1
+
+    def invalidate_factors(self) -> None:
+        """Forget the factorization but keep draws + cadence (store rebind)."""
+        self.post = None
+        self.token = None
+
+    def drop_factors(self) -> None:
+        """Arena eviction hook: release the O(S·n²) factor blocks. The next
+        decision rebuilds them from ``samples`` (RNG-free, deterministic)."""
+        self.post = None
+
+    def factor_nbytes(self) -> int:
+        """Resident bytes of the factor blocks (what the arena budgets)."""
+        if self.post is None:
+            return 0
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.post):
+            if hasattr(leaf, "nbytes"):
+                total += int(leaf.nbytes)
+        return total
+
+    def touched(self) -> None:
+        """Mark this cache most-recently-used in its arena (if any)."""
+        if self.arena is not None:
+            self.arena.touch(self.arena_key, self)
+
+
 class BOSuggester:
     """Stateful sequential/asynchronous Bayesian-optimization suggester
     (minimize). Bind an ``ObservationStore`` (``bind_store``) and call
@@ -129,6 +203,7 @@ class BOSuggester:
         config: BOConfig = BOConfig(),
         seed: int = 0,
         store: Optional[ObservationStore] = None,
+        cache: Optional[EngineCache] = None,
     ):
         self.space = space
         self.config = config
@@ -147,11 +222,18 @@ class BOSuggester:
         self._store: Optional[ObservationStore] = store
         self._wrapper_store: Optional[ObservationStore] = None
         self._wrapper_fps: List[Tuple[float, bytes]] = []
-        self._cached_samples: Optional[np.ndarray] = None  # packed (S, 3d+2)
-        self._cached_post = None  # GPPosterior for store rows [0, _cached_n)
-        self._cached_n = 0  # observations folded into the cadence accounting
-        self._obs_since_refit = 0
-        self._cache_token: Optional[int] = None  # id() of the cached store
+        # the cache block is an object of its own so a SelectionService can
+        # own it (shared GPHP pool + arena-bounded factors) and hand it out.
+        self.cache = cache if cache is not None else EngineCache()
+
+    # ------------------------------------------------- cache compat aliases
+    @property
+    def _cached_samples(self):
+        return self.cache.samples
+
+    @property
+    def _cached_post(self):
+        return self.cache.post
 
     # ------------------------------------------------------------------ rng
     def _next_key(self) -> jax.Array:
@@ -165,15 +247,21 @@ class BOSuggester:
         rebind — the cadence state may have been checkpoint-restored — but
         the factorization is rebuilt lazily against the new store."""
         self._store = store
-        self._cached_post = None
-        self._cache_token = None
+        self.cache.invalidate_factors()
+
+    def attach_cache(self, cache: EngineCache) -> None:
+        """Swap in a service-owned cache block (pool/arena wired). Any draws
+        already cached privately carry over so attaching is never a regression
+        for a warm engine."""
+        if cache.samples is None and self.cache.samples is not None:
+            cache.samples = self.cache.samples
+            cache.n = self.cache.n
+            cache.obs_since_refit = self.cache.obs_since_refit
+            cache.token = self.cache.token
+        self.cache = cache
 
     def reset_cache(self) -> None:
-        self._cached_samples = None
-        self._cached_post = None
-        self._cached_n = 0
-        self._obs_since_refit = 0
-        self._cache_token = None
+        self.cache.reset()
 
     def _sync_wrapper_store(self, history: Sequence[Observation]) -> ObservationStore:
         """Mirror a caller-owned history list into a private store. Append-only
@@ -245,7 +333,7 @@ class BOSuggester:
         y_live = np.zeros(size)
         y_live[:n] = y_std
         post = refresh_alpha(post, jnp.asarray(y_live))
-        self._cached_post = post
+        self.cache.post = post
         y_best = jnp.asarray(float(y_std.min()))  # best *real* observation
 
         # --- pending (§4.4) + scratch posterior for fantasies ---------------
@@ -294,6 +382,7 @@ class BOSuggester:
                     pend_buf[n_excl] = vec
                     pend_mask[n_excl] = True
                     n_excl += 1
+        self.cache.touched()  # LRU bump + arena budget enforcement
         return out
 
     # ------------------------------------------------------ posterior cache
@@ -301,9 +390,12 @@ class BOSuggester:
         self, store: ObservationStore, x_all: np.ndarray, y_std: np.ndarray
     ):
         """Return a posterior covering the store's n rows, via (in order of
-        preference) the cached factors + rank-1 appends, a refactorization
-        under cached GPHP samples, or a full GPHP refit."""
+        preference) the cached factors + rank-1 appends, pooled sibling GPHP
+        draws (service mode), a refactorization under cached draws, or a full
+        GPHP refit."""
         cfg = self.config
+        cache = self.cache
+        pool = cache.pool
         n = x_all.shape[0]
         nb = bucket_size(n)
         d = self.space.encoded_dim
@@ -312,16 +404,52 @@ class BOSuggester:
 
         samples_valid = (
             cfg.incremental
-            and self._cached_samples is not None
-            and self._cache_token in (None, token)
-            and self._cached_n <= n
+            and cache.samples is not None
+            and cache.token in (None, token)
+            and cache.n <= n
         )
-        post_valid = samples_valid and self._cached_post is not None
-        acct = self._cached_n if samples_valid else 0
+        post_valid = samples_valid and cache.post is not None
+        acct = cache.n if samples_valid else 0
         new_obs = n - acct
         resample = not samples_valid or (
-            new_obs > 0 and self._obs_since_refit + new_obs >= cfg.refit_every
+            new_obs > 0 and cache.obs_since_refit + new_obs >= cfg.refit_every
         )
+
+        expected_s = (
+            1 if cfg.gphp_method == "map" else cfg.slice_config.num_kept
+        )
+        if (
+            resample
+            and cfg.incremental
+            and pool is not None
+            and pool.samples is not None
+            and pool.version > cache.pool_version
+            # a sibling fitted with a different GPHP budget: its draw count
+            # would silently replace this job's configured fidelity (and
+            # churn jit shape buckets) — only adopt shape-compatible draws.
+            and pool.samples.shape[0] == expected_s
+        ):
+            # A sibling job published fresher draws since our last sync:
+            # adopt them instead of re-running MCMC. This is the pool-level
+            # cadence — across a group of N sibling jobs roughly one MCMC fit
+            # happens per ``refit_every`` *group* observations instead of one
+            # per job, and a cold job joining the group skips burn-in
+            # entirely. Draws are hyperparameter posteriors of a sibling's
+            # data on the same space (typically overlapping via sibling
+            # warm-start), so this is an approximation; disable with
+            # ``ServiceConfig(share_gphp=False)`` for bit-faithful chains.
+            cache.samples = np.array(pool.samples)
+            cache.pool_version = pool.version
+            cache.obs_since_refit = 0
+            if self._chain_state is None and pool.chain_state is not None:
+                self._chain_state = np.array(pool.chain_state)
+            pool.adoptions += 1
+            resample = False
+            post_valid = False  # factors (if any) describe the old draws
+            new_obs = 0  # the adopted draws cover all current rows
+
+        if pool is not None:
+            pool.decisions += 1
 
         if resample or not post_valid:
             x_pad = np.zeros((nb, d))
@@ -332,14 +460,18 @@ class BOSuggester:
             xj, yj, mj = jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
             if resample:
                 samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
-                self._cached_samples = np.asarray(samples)
-                self._obs_since_refit = 0
+                cache.samples = np.asarray(samples)
+                cache.obs_since_refit = 0
+                if pool is not None:
+                    pool.publish(cache.samples, self._chain_state)
+                    cache.pool_version = pool.version
             else:
-                # cached draws (e.g. restored from a checkpoint) but no live
-                # factorization: rebuild without consuming RNG state.
-                self._obs_since_refit += new_obs
+                # cached draws (restored from a checkpoint, adopted from the
+                # pool, or arena-evicted factors) but no live factorization:
+                # rebuild without consuming RNG state.
+                cache.obs_since_refit += new_obs
             params_batch = gpparams.GPHyperParams.unpack(
-                jnp.asarray(self._cached_samples), d
+                jnp.asarray(cache.samples), d
             )
             # pallas anchor scoring consumes L⁻¹; build it at refit time so
             # every decision (and fantasy append) reuses the cached inverse.
@@ -348,17 +480,17 @@ class BOSuggester:
                 with_inverse=cfg.acq.backend == "pallas",
             )
         else:
-            post = self._cached_post
+            post = cache.post
             if post.x_train.shape[0] < nb:
                 post = grow_posterior(post, nb)
             for i in range(acct, n):
                 post = posterior_append(
                     post, jnp.asarray(store.x_rows(i, i + 1)[0]), backend=backend
                 )
-            self._obs_since_refit += new_obs
+            cache.obs_since_refit += new_obs
 
-        self._cached_n = n
-        self._cache_token = token
+        cache.n = n
+        cache.token = token
         return post
 
     def _fantasy_append(self, work, y_work: List[float], x_vec: np.ndarray):
@@ -441,14 +573,19 @@ class BOSuggester:
             if self._chain_state is None
             else self._chain_state.tolist(),
             "sobol_count": self._sobol_init._count,
+            # numpy bit-generator state: the ``_quasi_random`` dedupe fallback
+            # draws from ``_rng``, so omitting it would make a restored job
+            # diverge from an uninterrupted one the first time the fallback
+            # fires (the checkpoint contract is bit-identical GP state).
+            "rng_state": self._rng.bit_generator.state,
             "key": np.asarray(self._key).tolist(),
             # incremental-engine cadence: cached GPHP draws persist so a
             # restored job resumes the exact refit schedule (and RNG stream).
             "cached_samples": None
-            if self._cached_samples is None
-            else np.asarray(self._cached_samples).tolist(),
-            "cached_n": self._cached_n,
-            "obs_since_refit": self._obs_since_refit,
+            if self.cache.samples is None
+            else np.asarray(self.cache.samples).tolist(),
+            "cached_n": self.cache.n,
+            "obs_since_refit": self.cache.obs_since_refit,
         }
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
@@ -457,13 +594,15 @@ class BOSuggester:
         self._sobol_init.reset()
         if state.get("sobol_count", 0):
             self._sobol_init.next(int(state["sobol_count"]))
+        if state.get("rng_state") is not None:
+            self._rng.bit_generator.state = state["rng_state"]
         self._key = jnp.asarray(np.asarray(state["key"], dtype=np.uint32))
         samples = state.get("cached_samples")
-        self._cached_samples = None if samples is None else np.asarray(samples)
-        self._cached_n = int(state.get("cached_n", 0))
-        self._obs_since_refit = int(state.get("obs_since_refit", 0))
-        self._cached_post = None  # refactorized lazily from cached_samples
-        self._cache_token = None
+        self.cache.samples = None if samples is None else np.asarray(samples)
+        self.cache.n = int(state.get("cached_n", 0))
+        self.cache.obs_since_refit = int(state.get("obs_since_refit", 0))
+        self.cache.post = None  # refactorized lazily from cached samples
+        self.cache.token = None
         self._wrapper_store = None
         self._wrapper_fps = []
 

@@ -51,7 +51,20 @@ class Trial:
 
     @property
     def objective(self) -> float:
-        """Best observed objective (min over the curve / final), or +inf."""
+        """Best observed objective (min over the curve / final), or +inf.
+
+        A COMPLETED trial *must* carry a finite final value: it ran to the
+        end, so a NaN/inf terminal metric means the objective itself is
+        invalid (diverged loss, broken eval) and the curve minimum is not a
+        substitute — such a trial must neither seed the GP nor win the job.
+        The curve fallback is reserved for early-STOPPED trials, where the
+        best-so-far curve value is the intended objective.
+        """
+        if self.state == TrialState.COMPLETED and (
+            self.final_objective is None
+            or not math.isfinite(self.final_objective)
+        ):
+            return float("inf")
         cands = []
         if self.final_objective is not None and math.isfinite(self.final_objective):
             cands.append(self.final_objective)

@@ -106,6 +106,7 @@ class Tuner:
         stopping_rule=None,
         warm_start: Optional[WarmStartPool] = None,
         callbacks: Sequence[Callable[["Tuner", Trial], None]] = (),
+        service=None,
     ):
         self.space = space
         self.objective = objective
@@ -115,12 +116,21 @@ class Tuner:
         self.stopping_rule = stopping_rule
         self.warm_start = warm_start
         self.callbacks = list(callbacks)
+        # service mode (paper §3 Fig. 1): decisions route through a shared
+        # SelectionService — store/cache are service-owned, siblings on the
+        # same space pool GPHP samples and warm-start each other.
+        self.service = service
+        self._service_handle = None
+        self._warm_start_restored = False
 
         self.trials: Dict[int, Trial] = {}
         self._next_id = 0
         self._submitted = 0  # counts unique configs tried (retries excluded)
         self._stop_requested: set[int] = set()
-        self._retry_queue: List[Tuple[float, Trial]] = []  # (not-before time, trial)
+        # (not-before time, trial, counts_attempt): counts_attempt is False for
+        # crash-restore re-runs of in-flight trials — re-executing work the
+        # job lost must not consume the failure retry budget (§3.3).
+        self._retry_queue: List[Tuple[float, Trial, bool]] = []
         self._timeline: List[Tuple[float, float]] = []
         self._num_failed_attempts = 0
         self.max_parallel = job_config.max_parallel
@@ -129,7 +139,25 @@ class Tuner:
     # ------------------------------------------------------------- history
     def _new_store(self) -> ObservationStore:
         """Fresh observation store (warm-start parents folded in once); bind
-        it to the suggester so decisions are served incrementally."""
+        it to the suggester so decisions are served incrementally. In service
+        mode the store (sibling warm-start folded in) and the engine cache
+        are created by the service; the combined warm-start pool becomes this
+        tuner's ``warm_start`` so checkpoints capture the sibling parents
+        exactly as registered (restore must not re-fold a moved target)."""
+        if self.service is not None:
+            handle = self.service.register_job(
+                self.config.job_name,
+                self.space,
+                suggester=self.suggester,
+                seed=self.config.seed,
+                warm_start=self.warm_start,
+                fold_siblings=not self._warm_start_restored,
+            )
+            self._service_handle = handle
+            self.suggester = handle.suggester
+            if handle.warm_pool is not None:
+                self.warm_start = handle.warm_pool
+            return handle.store
         store = ObservationStore(self.space, warm_start=self.warm_start)
         if hasattr(self.suggester, "bind_store"):
             self.suggester.bind_store(store)
@@ -169,7 +197,7 @@ class Tuner:
                     # liveness: the only remaining work sits behind retry
                     # backoffs — on a virtual-clock backend time only moves
                     # with events, so fast-forward to the earliest deadline.
-                    earliest = min(t for t, _ in self._retry_queue)
+                    earliest = min(t for t, _, _ in self._retry_queue)
                     if hasattr(self.backend, "advance_clock"):
                         self.backend.advance_clock(earliest)
                     continue
@@ -206,7 +234,12 @@ class Tuner:
         )
         if free <= 0:
             return
-        if hasattr(self.suggester, "suggest_batch"):
+        if self._service_handle is not None:
+            # service mode: decisions go through the SelectionService (the
+            # seam where a cross-process RPC boundary would sit).
+            for config in self._service_handle.suggest_batch(free):
+                self._launch(config)
+        elif hasattr(self.suggester, "suggest_batch"):
             for config in self.suggester.suggest_batch(free):
                 self._launch(config)
         else:
@@ -234,15 +267,18 @@ class Tuner:
     def _requeue_retries(self) -> None:
         now = self.backend.now()
         still_waiting = []
-        for not_before, trial in self._retry_queue:
+        for not_before, trial, counts_attempt in self._retry_queue:
             if now >= not_before and self.backend.active_count() < self.max_parallel:
                 trial.state = TrialState.RUNNING
-                trial.attempts += 1
+                if counts_attempt:
+                    trial.attempts += 1
+                else:  # crash-restore re-run: same attempt, re-executed
+                    trial.attempts = max(trial.attempts, 1)
                 trial.error = None
                 trial.curve = []
                 self.backend.submit(trial, self.objective)
             else:
-                still_waiting.append((not_before, trial))
+                still_waiting.append((not_before, trial, counts_attempt))
         self._retry_queue = still_waiting
 
     def _handle_event(self, ev) -> None:
@@ -283,7 +319,7 @@ class Tuner:
                 backoff = self.config.retry_backoff * (2 ** (trial.attempts - 1))
                 trial.state = TrialState.PENDING
                 trial.error = ev.error
-                self._retry_queue.append((ev.time + backoff, trial))
+                self._retry_queue.append((ev.time + backoff, trial, True))
             else:
                 trial.state = TrialState.FAILED
                 trial.end_time = ev.time
@@ -406,15 +442,31 @@ class Tuner:
                 # job died while this trial ran: re-run it (same config;
                 # already counted in ``submitted``). The re-run starts from a
                 # fresh curve, so any stop requested against the *old* attempt
-                # must not suppress (or mislabel) the new one.
+                # must not suppress (or mislabel) the new one. A trial that
+                # was RUNNING at the crash re-runs *without* consuming the
+                # retry budget (it never failed); one that was PENDING *with
+                # a recorded error* was awaiting a genuine failure retry and
+                # still counts. (A crash-restore re-queue is also PENDING but
+                # carries no error — attempts alone cannot distinguish the
+                # two after a second crash.)
+                was_retry_wait = t.state == TrialState.PENDING and t.error is not None
                 t.state = TrialState.PENDING
                 t.curve = []
-                self._retry_queue.append((0.0, t))
+                self._retry_queue.append((0.0, t, was_retry_wait))
                 self._stop_requested.discard(t.trial_id)
             self.trials[t.trial_id] = t
         if state.get("warm_start_state"):
             self.warm_start = self.warm_start or WarmStartPool()
             self.warm_start.load_state_dict(state["warm_start_state"])
+        elif self.service is not None:
+            # checkpointed with *no* warm pool: discard whatever this
+            # instance's __init__ registration folded from siblings' current
+            # histories — the checkpoint is authoritative.
+            self.warm_start = None
+        # service mode: re-registering must not fold the siblings' *current*
+        # histories on top of the restored pool (the GP dataset would shift
+        # and break bit-identical restore).
+        self._warm_start_restored = True
         # rebuild the observation store: parents from the (possibly restored)
         # warm-start pool, own rows from the checkpointed blob in push order,
         # pending slots from the re-queued trial table.
@@ -425,7 +477,7 @@ class Tuner:
             for t in sorted(self.trials.values(), key=lambda tr: tr.trial_id):
                 if t.state in (TrialState.COMPLETED, TrialState.STOPPED) and math.isfinite(t.objective):
                     self.store.push(t.config, t.objective)
-        for _, t in self._retry_queue:
+        for _, t, _ in self._retry_queue:
             self.store.mark_pending(t.trial_id, t.config)
         if state.get("suggester_state") and hasattr(self.suggester, "load_state_dict"):
             self.suggester.load_state_dict(state["suggester_state"])

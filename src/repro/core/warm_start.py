@@ -84,6 +84,24 @@ class WarmStartPool:
     def num_parents(self) -> int:
         return len(self._parents)
 
+    @property
+    def parent_names(self) -> List[str]:
+        return [p.name for p in self._parents]
+
+    @classmethod
+    def merged(cls, *pools: "WarmStartPool") -> "WarmStartPool":
+        """Union of pools, preserving per-parent task identity (the per-task
+        z-scoring is what makes pooling jobs with different objective scales
+        sound — paper §5.3). A ``SelectionService`` uses this to combine a
+        user-supplied pool with live sibling-job histories."""
+        out = cls()
+        for pool in pools:
+            if pool is None:
+                continue
+            for p in pool._parents:
+                out.add_parent(p.history, name=p.name)
+        return out
+
     def export(
         self, child_space: SearchSpace
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:

@@ -1,0 +1,326 @@
+"""Multi-job SelectionService: sibling warm-start equivalence, GPHP pool
+adoption, factor-arena eviction invariance, group isolation, Tuner service
+mode (paper §3 Fig. 1 multi-tenancy + §5.3 cross-job transfer)."""
+
+import math
+
+import numpy as np
+
+from repro.core import (
+    BOConfig,
+    BOSuggester,
+    Continuous,
+    ObservationStore,
+    SearchSpace,
+    SelectionService,
+    ServiceConfig,
+    Tuner,
+    TuningJobConfig,
+    WarmStartPool,
+)
+from repro.core.scheduler import SimBackend
+from repro.core.service import space_signature
+from repro.core.trial import TrialState
+
+
+def _space():
+    return SearchSpace([
+        Continuous("lr", 1e-4, 1.0, scaling="log"),
+        Continuous("wd", 1e-5, 1e-1, scaling="log"),
+    ])
+
+
+def _other_space():
+    return SearchSpace([
+        Continuous("alpha", 0.0, 1.0),
+        Continuous("beta", 0.0, 1.0),
+        Continuous("gamma", 0.0, 1.0),
+    ])
+
+
+def _obj(cfg):
+    return (math.log10(cfg["lr"]) + 2) ** 2 + (math.log10(cfg["wd"]) + 3) ** 2
+
+
+def _fill(handle_or_store, space, n, seed=0):
+    """Push n finished observations; returns the (config, y) pairs pushed."""
+    store = getattr(handle_or_store, "store", handle_or_store)
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for c in space.sample(rng, n):
+        y = _obj(c)
+        store.push(c, y)
+        pairs.append((c, y))
+    return pairs
+
+
+_CFG = BOConfig(num_init=2).fast()
+
+
+class TestSpaceSignature:
+    def test_equal_iff_structurally_identical(self):
+        assert space_signature(_space()) == space_signature(_space())
+        assert space_signature(_space()) != space_signature(_other_space())
+        # same dim, different bounds: still a different group
+        a = SearchSpace([Continuous("x", 0.0, 1.0)])
+        b = SearchSpace([Continuous("x", 0.0, 2.0)])
+        assert space_signature(a) != space_signature(b)
+
+
+class TestSiblingWarmStart:
+    def test_equivalent_to_explicit_pool(self):
+        """A job joining the service folds sibling observations exactly as an
+        explicit WarmStartPool would (share_gphp off ⇒ identical chains)."""
+        space = _space()
+        svc = SelectionService(ServiceConfig(share_gphp=False))
+        a = svc.register_job("job-a", space, bo_config=_CFG, seed=0)
+        pairs = _fill(a, space, 6, seed=1)
+
+        b = svc.register_job("job-b", space, bo_config=_CFG, seed=7)
+        assert b.store.num_parents == 6  # sibling rows folded in
+
+        # explicit arm: same parent history via a user-built pool
+        pool = WarmStartPool()
+        pool.add_parent(pairs, name="sibling:job-a")
+        store = ObservationStore(space, warm_start=pool)
+        ref = BOSuggester(space, _CFG, seed=7, store=store)
+
+        own = _fill(b, space, 3, seed=2)
+        for c, y in own:
+            store.push(c, y)
+
+        got = space.encode(b.suggest_batch(1)[0])
+        want = space.encode(ref.suggest_batch(1)[0])
+        np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_short_sibling_histories_not_folded(self):
+        space = _space()
+        svc = SelectionService(ServiceConfig(share_gphp=False))
+        a = svc.register_job("a", space, bo_config=_CFG)
+        _fill(a, space, 1)  # below min_sibling_obs: can't z-score one point
+        b = svc.register_job("b", space, bo_config=_CFG)
+        assert b.store.num_parents == 0
+
+
+class TestGPHPPool:
+    def test_sibling_adopts_published_draws(self):
+        space = _space()
+        svc = SelectionService(ServiceConfig(sibling_warm_start=False))
+        a = svc.register_job("a", space, bo_config=_CFG, seed=0)
+        _fill(a, space, 5, seed=1)
+        a.suggest_batch(1)  # first GP decision: MCMC fit + publish
+        pool = svc.group_pool("a")
+        assert pool.publishes == 1 and pool.samples is not None
+
+        b = svc.register_job("b", space, bo_config=_CFG, seed=9)
+        _fill(b, space, 5, seed=2)
+        b.suggest_batch(1)  # cold job: adopts the sibling's draws, no MCMC
+        assert pool.adoptions == 1
+        assert pool.publishes == 1  # b did not fit
+        assert pool.hit_rate > 0.0
+        np.testing.assert_allclose(
+            np.asarray(b.suggester.cache.samples), np.asarray(pool.samples)
+        )
+
+    def test_adoption_requires_matching_sample_count(self):
+        """A sibling fitted with a different GPHP budget must not silently
+        replace this job's configured draw count."""
+        from repro.core.gp.slice_sampler import SliceSamplerConfig
+
+        space = _space()
+        svc = SelectionService(ServiceConfig(sibling_warm_start=False))
+        a = svc.register_job("a", space, bo_config=_CFG, seed=0)
+        _fill(a, space, 5, seed=1)
+        a.suggest_batch(1)
+        pool = svc.group_pool("a")
+        assert pool.publishes == 1
+
+        hi_fidelity = BOConfig(
+            num_init=2,  # num_kept=12 vs FAST_CONFIG's 10
+            slice_config=SliceSamplerConfig(num_samples=44, burn_in=20, thin=2),
+        )
+        b = svc.register_job("b", space, bo_config=hi_fidelity, seed=9)
+        _fill(b, space, 5, seed=2)
+        b.suggest_batch(1)
+        assert pool.adoptions == 0  # shape-incompatible: fit its own
+        assert pool.publishes == 2
+        assert b.suggester.cache.samples.shape[0] == hi_fidelity.slice_config.num_kept
+
+    def test_stale_handle_raises_after_name_reuse(self):
+        """Re-registering a name must not silently reroute the old handle's
+        decisions to the new job's engine."""
+        import pytest
+
+        space = _space()
+        svc = SelectionService(ServiceConfig())
+        a1 = svc.register_job("dup", space, bo_config=_CFG, seed=0)
+        a2 = svc.register_job("dup", space, bo_config=_CFG, seed=1)
+        with pytest.raises(RuntimeError, match="stale"):
+            a1.suggest_batch(1)
+        assert a2.suggest_batch(1)  # the live registration still serves
+
+    def test_share_disabled_keeps_chains_standalone(self):
+        """share_gphp=False: the service job's draws are bit-identical to a
+        standalone suggester with the same seed and history."""
+        space = _space()
+        svc = SelectionService(
+            ServiceConfig(share_gphp=False, sibling_warm_start=False)
+        )
+        a = svc.register_job("a", space, bo_config=_CFG, seed=0)
+        pairs = _fill(a, space, 5, seed=1)
+        got = space.encode(a.suggest_batch(1)[0])
+
+        store = ObservationStore(space)
+        for c, y in pairs:
+            store.push(c, y)
+        ref = BOSuggester(space, _CFG, seed=0, store=store)
+        want = space.encode(ref.suggest_batch(1)[0])
+        np.testing.assert_array_equal(got, want)
+
+
+class TestFactorArena:
+    def test_eviction_under_small_budget_keeps_suggestions_invariant(self):
+        """Evicting a job's factors (tiny arena) must not change what it
+        suggests: the rebuild from cached draws is RNG-free."""
+
+        def run(budget_mb):
+            svc = SelectionService(ServiceConfig(
+                arena_budget_mb=budget_mb,
+                share_gphp=False,
+                sibling_warm_start=False,
+            ))
+            a = svc.register_job("a", _space(), bo_config=_CFG, seed=0)
+            b = svc.register_job("b", _space(), bo_config=_CFG, seed=1)
+            _fill(a, _space(), 5, seed=1)
+            _fill(b, _space(), 5, seed=2)
+            out = [a.suggest_batch(1)[0]]  # a resident
+            out.append(b.suggest_batch(1)[0])  # tiny arena: evicts a
+            out.append(a.suggest_batch(1)[0])  # a rebuilds from its draws
+            return out, svc.arena
+
+        tight, arena_t = run(budget_mb=1e-6)
+        roomy, arena_r = run(budget_mb=1024.0)
+        assert arena_t.evictions > 0
+        assert arena_r.evictions == 0
+        for s_t, s_r in zip(tight, roomy):
+            np.testing.assert_array_equal(
+                _space().encode(s_t), _space().encode(s_r)
+            )
+
+    def test_arena_tracks_resident_bytes(self):
+        svc = SelectionService(ServiceConfig(sibling_warm_start=False))
+        a = svc.register_job("a", _space(), bo_config=_CFG, seed=0)
+        _fill(a, _space(), 5, seed=1)
+        assert svc.arena.resident_bytes() == 0
+        a.suggest_batch(1)
+        assert svc.arena.resident_bytes() > 0
+        assert svc.stats()["arena"]["tracked_jobs"] == 1
+
+
+class TestGroupIsolation:
+    def test_different_spaces_never_share_state(self):
+        svc = SelectionService(ServiceConfig())
+        a = svc.register_job("a", _space(), bo_config=_CFG, seed=0)
+        _fill(a, _space(), 6, seed=1)
+        a.suggest_batch(1)
+        pool_a = svc.group_pool("a")
+
+        c = svc.register_job("c", _other_space(), bo_config=_CFG, seed=0)
+        assert c.store.num_parents == 0  # no cross-space warm start
+        assert svc.group_pool("c") is not pool_a
+        version_before = pool_a.version
+        rng = np.random.default_rng(0)
+        for cfg in _other_space().sample(rng, 5):
+            c.store.push(cfg, float(sum(cfg.values())))
+        c.suggest_batch(1)
+        assert pool_a.version == version_before  # untouched by group c
+        assert svc.group_pool("c").samples is not None
+
+
+class TestTunerServiceMode:
+    def test_two_jobs_share_service(self):
+        space = _space()
+        svc = SelectionService(
+            ServiceConfig(share_gphp=True, default_bo_config=_CFG)
+        )
+
+        def curve(cfg):
+            return _obj(cfg) + 2.0 * np.exp(-np.arange(1, 7)), 1.0
+
+        t1 = Tuner(space, curve, None, SimBackend(),
+                   TuningJobConfig(max_trials=5, job_name="fleet-1"),
+                   service=svc)
+        r1 = t1.run()
+        assert all(t.state == TrialState.COMPLETED for t in r1.trials)
+
+        t2 = Tuner(space, curve, None, SimBackend(),
+                   TuningJobConfig(max_trials=5, job_name="fleet-2"),
+                   service=svc)
+        assert t2.store.num_parents == 5  # sibling rows transferred
+        r2 = t2.run()
+        assert all(t.state == TrialState.COMPLETED for t in r2.trials)
+        stats = svc.stats()
+        assert len(stats["groups"]) == 1
+        assert stats["groups"][0]["jobs"] == ["fleet-1", "fleet-2"]
+
+    def test_service_mode_checkpoint_restore(self, tmp_path):
+        """Service-mode restore: the combined warm-start pool is checkpointed
+        so re-registration does not re-fold siblings' moved histories."""
+        space = _space()
+        svc = SelectionService(
+            ServiceConfig(share_gphp=False, default_bo_config=_CFG)
+        )
+        seed_job = svc.register_job("seed-job", space, bo_config=_CFG)
+        _fill(seed_job, space, 4, seed=3)
+
+        def curve(cfg):
+            return _obj(cfg) + 2.0 * np.exp(-np.arange(1, 7)), 1.0
+
+        path = str(tmp_path / "svc_tuner.json")
+        t1 = Tuner(space, curve, None, SimBackend(),
+                   TuningJobConfig(max_trials=4, job_name="svc-restore",
+                                   checkpoint_path=path),
+                   service=svc)
+        r1 = t1.run()
+
+        # siblings move on after the checkpoint
+        _fill(seed_job, space, 4, seed=4)
+
+        t2 = Tuner(space, curve, None, SimBackend(),
+                   TuningJobConfig(max_trials=4, job_name="svc-restore",
+                                   checkpoint_path=path),
+                   service=svc)
+        t2.restore()
+        assert t2.store.num_parents == 4  # as registered, not re-folded (8)
+        r2 = t2.run()
+        assert r2.best_objective == r1.best_objective
+
+    def test_restore_without_warm_pool_does_not_fold_siblings(self, tmp_path):
+        """A job checkpointed with *no* warm pool (siblings were too short at
+        registration) must restore with no warm pool, even though siblings
+        have accumulated history since."""
+        space = _space()
+        svc = SelectionService(
+            ServiceConfig(share_gphp=False, default_bo_config=_CFG)
+        )
+        seed_job = svc.register_job("seed", space, bo_config=_CFG)
+        _fill(seed_job, space, 1, seed=3)  # below min_sibling_obs
+
+        def curve(cfg):
+            return _obj(cfg) + 2.0 * np.exp(-np.arange(1, 7)), 1.0
+
+        path = str(tmp_path / "late.json")
+        t1 = Tuner(space, curve, None, SimBackend(),
+                   TuningJobConfig(max_trials=3, job_name="late",
+                                   checkpoint_path=path),
+                   service=svc)
+        assert t1.store.num_parents == 0
+        t1.run()
+
+        _fill(seed_job, space, 6, seed=4)  # sibling moves on post-checkpoint
+        t2 = Tuner(space, curve, None, SimBackend(),
+                   TuningJobConfig(max_trials=3, job_name="late",
+                                   checkpoint_path=path),
+                   service=svc)
+        t2.restore()
+        assert t2.store.num_parents == 0  # not re-folded from moved sibling
