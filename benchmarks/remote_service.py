@@ -1,0 +1,177 @@
+"""Cross-process SelectionService: what the wire costs.
+
+Drives N ∈ {2, 4, 8} concurrent tuning jobs round-robin (the fleet pattern
+of ``benchmarks/multi_job.py``) through
+
+  * **in-process** — a ``SelectionService`` called directly (PR 3 state of
+    the world: the RPC seam exists but nothing crosses it);
+  * **socket** — the *same* service hosted by an ``EngineServer`` replica,
+    driven through ``RemoteService``: every decision and every store
+    transition crosses a TCP socket as framed JSON with exact base64 array
+    images (``repro.core.rpc``).
+
+Both arms run identical engine configs, so the difference per decision is
+pure boundary cost: framing + base64 + one request/reply round trip per
+suggest, plus one per store event. The suggestion streams themselves are
+*identical* (the wire protocol is exact); the benchmark asserts this while
+timing, so the JSON never reports a speed number for a diverged engine.
+
+Merges a ``remote_service`` section into ``BENCH_suggest.json`` (preserving
+other sections) and returns CSV rows for ``benchmarks/run.py``.
+``--smoke`` runs a short N=2 variant without touching the JSON (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+try:
+    from benchmarks.bench_io import merge_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from bench_io import merge_bench_json
+
+from repro.core import (
+    BOConfig,
+    Continuous,
+    SearchSpace,
+    SelectionService,
+    ServiceConfig,
+)
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+
+BENCH_SLICE = SliceSamplerConfig(num_samples=12, burn_in=6, thin=2)
+REFIT_EVERY = 5
+SEED_OBS = 12  # observations pre-loaded per job before timing
+_D = 4
+
+
+def _space() -> SearchSpace:
+    return SearchSpace([Continuous(f"x{i}", 0.0, 1.0) for i in range(_D)])
+
+
+def _objective(cfg) -> float:
+    return float(sum((cfg[f"x{i}"] - 0.5 + 0.1 * i) ** 2 for i in range(_D)))
+
+
+def _service_config() -> ServiceConfig:
+    return ServiceConfig(
+        share_gphp=True,
+        sibling_warm_start=False,  # identical GP dataset sizes in both arms
+        default_bo_config=BOConfig(num_init=3, slice_config=BENCH_SLICE,
+                                   refit_every=REFIT_EVERY, incremental=True),
+    )
+
+
+def _seed_store(store, space: SearchSpace, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    for c in space.sample(rng, SEED_OBS):
+        store.push(c, _objective(c))
+
+
+def _drive(handles, rounds: int):
+    """Round-robin decision loop; returns (suggest seconds, stream)."""
+    total, stream = 0.0, []
+    for _ in range(rounds):
+        for h in handles:
+            t0 = time.perf_counter()
+            cfg = h.suggest_batch(1)[0]
+            total += time.perf_counter() - t0
+            stream.append(cfg)
+            h.store.push(cfg, _objective(cfg))
+    return total, stream
+
+
+def _run_in_process(space, n_jobs: int, rounds: int):
+    svc = SelectionService(_service_config())
+    handles = [svc.register_job(f"job-{j}", space, seed=j)
+               for j in range(n_jobs)]
+    for j, h in enumerate(handles):
+        _seed_store(h.store, space, seed=j)
+    return _drive(handles, rounds)
+
+
+def _run_socket(space, n_jobs: int, rounds: int):
+    from repro.distributed import EngineServer, RemoteService
+
+    with EngineServer(service_config=_service_config()) as server:
+        rsvc = RemoteService([server.address])
+        handles = [rsvc.register_job(f"job-{j}", space, seed=j)
+                   for j in range(n_jobs)]
+        for j, h in enumerate(handles):
+            _seed_store(h.store, space, seed=j)
+        return _drive(handles, rounds)
+
+
+def run(
+    n_jobs_list: Tuple[int, ...] = (2, 4, 8),
+    rounds: int = 8,
+    out_path: Optional[str] = "default",
+) -> List[Tuple[str, float, str]]:
+    space = _space()
+    _run_in_process(space, 1, max(6, rounds))  # jit warm-up for both arms
+
+    rows: List[Tuple[str, float, str]] = []
+    section = {
+        "config": {
+            "dims": _D,
+            "slice": {"num_samples": BENCH_SLICE.num_samples,
+                      "burn_in": BENCH_SLICE.burn_in, "thin": BENCH_SLICE.thin},
+            "refit_every": REFIT_EVERY,
+            "seed_obs_per_job": SEED_OBS,
+            "rounds_per_job": rounds,
+            "transport": "tcp-localhost, newline-framed json",
+        },
+        "arms": [],
+    }
+    for n_jobs in n_jobs_list:
+        t_local, s_local = _run_in_process(space, n_jobs, rounds)
+        t_sock, s_sock = _run_socket(space, n_jobs, rounds)
+        assert s_local == s_sock, (
+            f"socket arm diverged from in-process at N={n_jobs}: "
+            "refusing to report latency for a non-equivalent engine"
+        )
+        decisions = n_jobs * rounds
+        local_ms = t_local / decisions * 1e3
+        sock_ms = t_sock / decisions * 1e3
+        section["arms"].append({
+            "n_jobs": n_jobs,
+            "decisions": decisions,
+            "in_process_ms_per_decision": local_ms,
+            "socket_ms_per_decision": sock_ms,
+            "wire_overhead_ms": sock_ms - local_ms,
+            "overhead_ratio": sock_ms / local_ms if local_ms > 0 else float("inf"),
+            "streams_identical": True,
+        })
+        rows.append((f"remote_service_n{n_jobs}_socket_us", sock_ms * 1e3,
+                     f"{sock_ms / local_ms:.2f}x_in_process_exact_stream"))
+
+    if out_path == "default":
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_suggest.json")
+    if out_path:
+        merge_bench_json(out_path, {"remote_service": section})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=2, few rounds, no JSON write (CI rot check)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(n_jobs_list=(2,), rounds=3, out_path=None)
+    else:
+        rows = run()
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    if args.smoke:
+        print("smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Exact wire encoding of GP engine arrays and factorized posteriors.
+
+The cross-process SelectionService (``repro.core.rpc`` +
+``repro.distributed.engine_server``) promises *bit-equivalent* suggestions
+across the process boundary, so every array that crosses it must round-trip
+exactly. Arrays are shipped as little-endian raw bytes (base64) plus dtype
+and shape — not as decimal text — because the byte image of a float64 is its
+identity; no repr/parse step can be allowed to enter the contract.
+
+Factor blocks (the O(S·n²) Cholesky / L⁻¹ / alpha arrays of a
+``GPPosterior``) are *optional* on the wire: they are a pure function of the
+GPHP draws and the observation rows, so a replica adopting a snapshot can
+rehydrate them locally (an RNG-free refactorization on its next decision, the
+same path arena eviction already exercises) instead of paying O(n²) wire
+bytes. ``posterior_to_wire`` / ``posterior_from_wire`` exist for the cases
+where shipping them is worth it (large n, hot hand-off).
+"""
+
+from __future__ import annotations
+
+import base64
+import hashlib
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp.gp import GPPosterior
+from repro.core.gp.params import GPHyperParams
+
+__all__ = [
+    "array_to_wire",
+    "array_from_wire",
+    "array_fingerprint",
+    "posterior_to_wire",
+    "posterior_from_wire",
+]
+
+
+def array_to_wire(arr: Optional[np.ndarray]) -> Optional[Dict[str, Any]]:
+    """Encode an array as ``{"dtype", "shape", "data"}`` with base64 raw
+    little-endian bytes. Returns None for None (optional fields).
+
+    The encoding is exact for every dtype: the payload is the array's byte
+    image, so ``array_from_wire(array_to_wire(a))`` equals ``a`` bitwise.
+    """
+    if arr is None:
+        return None
+    a = np.ascontiguousarray(np.asarray(arr))
+    le = a.astype(a.dtype.newbyteorder("<"), copy=False)
+    return {
+        "dtype": le.dtype.str,
+        "shape": list(a.shape),
+        "data": base64.b64encode(le.tobytes()).decode("ascii"),
+    }
+
+
+def array_from_wire(blob: Optional[Dict[str, Any]]) -> Optional[np.ndarray]:
+    """Inverse of ``array_to_wire``. Returns None for None."""
+    if blob is None:
+        return None
+    raw = base64.b64decode(blob["data"])
+    a = np.frombuffer(raw, dtype=np.dtype(blob["dtype"]))
+    return a.reshape(tuple(blob["shape"])).copy()
+
+
+def array_fingerprint(arr: Optional[np.ndarray]) -> Optional[str]:
+    """Short content hash of an array's byte image — the draw-identity check
+    a replica runs before adopting pooled GPHP samples (two pools at the same
+    version number on different replicas are not necessarily the same draws;
+    the fingerprint is what actually discriminates them)."""
+    if arr is None:
+        return None
+    a = np.ascontiguousarray(np.asarray(arr))
+    le = a.astype(a.dtype.newbyteorder("<"), copy=False)
+    return hashlib.sha256(le.tobytes()).hexdigest()[:16]
+
+
+def posterior_to_wire(post: GPPosterior) -> Dict[str, Any]:
+    """Serialize a factorized ``GPPosterior`` (optionally batched over S MCMC
+    samples). GPHPs travel in packed form; ``chol_inv`` is included iff
+    cached."""
+    return {
+        "x_train": array_to_wire(np.asarray(post.x_train)),
+        "mask": array_to_wire(np.asarray(post.mask)),
+        "chol": array_to_wire(np.asarray(post.chol)),
+        "alpha": array_to_wire(np.asarray(post.alpha)),
+        "params_packed": array_to_wire(np.asarray(post.params.pack())),
+        "chol_inv": array_to_wire(
+            None if post.chol_inv is None else np.asarray(post.chol_inv)
+        ),
+    }
+
+
+def posterior_from_wire(blob: Dict[str, Any]) -> GPPosterior:
+    """Inverse of ``posterior_to_wire``; arrays land as jax arrays ready for
+    the incremental-update path (rank-1 appends, ``refresh_alpha``)."""
+    x_train = jnp.asarray(array_from_wire(blob["x_train"]))
+    packed = jnp.asarray(array_from_wire(blob["params_packed"]))
+    linv = array_from_wire(blob.get("chol_inv"))
+    return GPPosterior(
+        x_train=x_train,
+        mask=jnp.asarray(array_from_wire(blob["mask"])),
+        chol=jnp.asarray(array_from_wire(blob["chol"])),
+        alpha=jnp.asarray(array_from_wire(blob["alpha"])),
+        params=GPHyperParams.unpack(packed, x_train.shape[-1]),
+        chol_inv=None if linv is None else jnp.asarray(linv),
+    )

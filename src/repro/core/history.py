@@ -209,6 +209,20 @@ class ObservationStore:
             for i in range(npar, n)
         ]
 
+    def fingerprint(self) -> str:
+        """Content hash of the live rows (parents + own, byte-exact) plus
+        the parent/pending counts. Two stores with equal fingerprints hold
+        bitwise-identical observation data — the check a re-adopting client
+        runs against a replica's resident store before trusting it (see
+        ``repro.core.rpc.RegisterReply.store_fingerprint``)."""
+        from repro.core.gp.serialize import array_fingerprint
+
+        n = self.num_observations
+        return (
+            f"{self._num_parents}:{self.num_pending}:"
+            f"{array_fingerprint(self._x[:n])}:{array_fingerprint(self._y[:n])}"
+        )
+
     # ---------------------------------------------------------- persistence
     def state_dict(self) -> Dict[str, Any]:
         """Own rows only: parents are reconstructed from the warm-start pool
@@ -218,6 +232,56 @@ class ObservationStore:
             "own_x": self._x[npar:n].tolist(),
             "own_y": self._y[npar:n].tolist(),
         }
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Complete, self-contained wire image of the store: parent rows
+        (already encoded + per-task z-scored), own rows, and the pending set.
+
+        Unlike ``state_dict`` (the Tuner checkpoint blob, which leans on the
+        warm-start pool and trial table to rebuild parents/pending), a
+        snapshot must let a *fresh process with nothing but the bytes*
+        reproduce the store exactly — that is the contract the cross-process
+        engine replicas (``repro.distributed``) rely on for bit-equivalent
+        suggestions. Arrays travel as exact base64 byte images
+        (``repro.core.gp.serialize``); pending keys must be JSON-safe
+        scalars (the Tuner uses integer trial ids).
+        """
+        from repro.core.gp.serialize import array_to_wire
+
+        npar, n = self._num_parents, self.num_observations
+        return {
+            "parent_x": array_to_wire(self._x[:npar]),
+            "parent_y": array_to_wire(self._y[:npar]),
+            "own_x": array_to_wire(self._x[npar:n]),
+            "own_y": array_to_wire(self._y[npar:n]),
+            "pending": [
+                [key, dict(cfg), array_to_wire(x)]
+                for key, (cfg, x) in self._pending.items()
+            ],
+        }
+
+    def load_snapshot(self, snap: Mapping[str, Any]) -> None:
+        """Replace the store's entire contents with ``snapshot()`` output —
+        parent rows, own rows (in push order), and the pending set."""
+        from repro.core.gp.serialize import array_from_wire
+
+        px = array_from_wire(snap["parent_x"])
+        pz = array_from_wire(snap["parent_y"])
+        d = self.space.encoded_dim
+        self._num_parents = int(px.shape[0])
+        cap = bucket_size(max(8, self._num_parents))
+        self._x = np.zeros((cap, d), dtype=np.float64)
+        self._y = np.zeros((cap,), dtype=np.float64)
+        self._x[: self._num_parents] = px.reshape(-1, d)
+        self._y[: self._num_parents] = pz
+        self._n_own = 0
+        self._pending = {}
+        own_x = array_from_wire(snap["own_x"]).reshape(-1, d)
+        own_y = array_from_wire(snap["own_y"])
+        for x, y in zip(own_x, own_y):
+            self.push_encoded(x, float(y))
+        for key, cfg, x in snap["pending"]:
+            self._pending[key] = (dict(cfg), array_from_wire(x))
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
         self._n_own = 0

@@ -1,0 +1,430 @@
+"""Wire protocol of the cross-process SelectionService.
+
+The paper's AMT is a managed service: tuning jobs talk to a fleet of
+stateless API workers that lease work against durable state (PAPER.md §3-4),
+not to an in-process object. This module is the transport-agnostic half of
+that boundary: typed request/reply dataclasses plus an exact JSON-line codec.
+The transport itself (TCP sockets, leases, failover) lives in
+``repro.distributed.engine_server`` / ``engine_client``; anything that can
+move framed bytes can carry these messages.
+
+Versioning, and why there are *three* version-shaped checks:
+
+* ``PROTOCOL_VERSION`` — the message schema. A peer speaking another version
+  is refused at decode time (``ErrorCode.PROTOCOL_MISMATCH``) before any
+  payload is interpreted.
+* ``ENGINE_SNAPSHOT_VERSION`` — the engine-snapshot schema
+  (``SelectionService.snapshot_job``). A replica refuses to adopt a snapshot
+  it cannot reproduce bit-exactly (``ErrorCode.SNAPSHOT_MISMATCH``).
+* **state/draw versions** — runtime monotonic counters, not schema versions.
+  ``SuggestBatchRequest`` carries the client's view of the store
+  (``store_version`` = observations pushed, plus the pending count) and the
+  server refuses on mismatch (``ErrorCode.STALE_STATE``); snapshots carry the
+  GPHP pool's ``version`` *and* a content fingerprint, and a replica whose
+  resident pool disagrees refuses adoption (``ErrorCode.STALE_DRAWS``). In
+  every case the failure mode is a loud refusal the client can route around,
+  never a silently diverging suggestion stream.
+
+All payloads are JSON-safe; arrays travel as exact base64 byte images
+(``repro.core.gp.serialize``), so the protocol preserves the engine's
+bit-equivalence contract end to end. See ``docs/wire_protocol.md`` for the
+full schema and the lease/heartbeat state machine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Type, Union
+
+from repro.core.gp.empirical_bayes import EmpiricalBayesConfig
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+from repro.core.optimize_acq import AcqOptConfig
+from repro.core.suggest import BOConfig
+
+__all__ = [
+    "PROTOCOL_VERSION",
+    "ENGINE_SNAPSHOT_VERSION",
+    "ErrorCode",
+    "ProtocolError",
+    "RegisterRequest",
+    "RegisterReply",
+    "SuggestBatchRequest",
+    "SuggestBatchReply",
+    "ObserveRequest",
+    "ObserveReply",
+    "HeartbeatRequest",
+    "HeartbeatReply",
+    "SnapshotRequest",
+    "SnapshotReply",
+    "EngineStateRequest",
+    "EngineStateReply",
+    "EngineRestoreRequest",
+    "EngineRestoreReply",
+    "ErrorReply",
+    "encode_message",
+    "decode_message",
+    "bo_config_to_wire",
+    "bo_config_from_wire",
+]
+
+#: Message-schema version. Bumped on any incompatible change to the
+#: dataclasses below; peers at different versions refuse each other.
+PROTOCOL_VERSION = 1
+
+#: Engine-snapshot schema version (``SelectionService.snapshot_job`` output).
+ENGINE_SNAPSHOT_VERSION = 1
+
+
+class ErrorCode:
+    """Refusal codes carried by ``ErrorReply``. Matching on these (not on
+    message strings) is the supported way for a client to react."""
+
+    PROTOCOL_MISMATCH = "protocol-mismatch"  # peer speaks another schema
+    SNAPSHOT_MISMATCH = "snapshot-version-mismatch"  # unadoptable snapshot
+    UNKNOWN_JOB = "unknown-job"  # request for a job this replica never saw
+    LEASE_EXPIRED = "lease-expired"  # lease TTL elapsed; re-register to adopt
+    LEASE_HELD = "lease-held"  # another live lease owns the job
+    STALE_STATE = "stale-state"  # client/server store versions disagree
+    STALE_DRAWS = "stale-draws"  # resident GPHP pool conflicts with snapshot
+    BAD_REQUEST = "bad-request"  # malformed or unknown message
+
+
+class ProtocolError(RuntimeError):
+    """Raised on decode failure or when a peer replies with ``ErrorReply``.
+
+    ``code`` is one of ``ErrorCode``; ``message`` is human-readable detail.
+    ``retry_after`` (seconds) is set on refusals that resolve by waiting —
+    currently ``LEASE_HELD``, where it is the held lease's remaining TTL.
+    """
+
+    def __init__(self, code: str, message: str,
+                 retry_after: Optional[float] = None):
+        super().__init__(f"[{code}] {message}")
+        self.code = code
+        self.message = message
+        self.retry_after = retry_after
+
+
+# --------------------------------------------------------------------------
+# message dataclasses
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisterRequest:
+    """Register (or adopt) a tuning job on an engine replica.
+
+    Exactly one of two modes:
+      * fresh registration — ``space_spec`` (``SearchSpace.to_spec``), the
+        engine config (``bo_config_to_wire``), ``seed`` and optional
+        warm-start pool state;
+      * snapshot adoption — ``snapshot`` (``SelectionService.snapshot_job``
+        output) carrying the complete engine state; the other fields are
+        ignored in favour of the snapshot's own record of them.
+
+    ``takeover_lease`` lets the *current lease holder* re-register its own
+    job (checkpoint restore re-runs registration); without it, a register
+    attempt against a live lease is refused with ``LEASE_HELD``.
+    """
+
+    TYPE = "register"
+    job_name: str
+    space_spec: Optional[List[Dict[str, Any]]] = None
+    seed: int = 0
+    bo_config: Optional[Dict[str, Any]] = None
+    warm_start_state: Optional[Dict[str, Any]] = None
+    fold_siblings: bool = True
+    snapshot: Optional[Dict[str, Any]] = None
+    takeover_lease: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisterReply:
+    """Grant: an opaque ``lease`` token (present on every subsequent request
+    for the job) with a sliding ``lease_ttl`` (seconds), plus what the client
+    mirror needs: the folded parent count and — when the service combined
+    sibling histories in — the resulting warm-pool state.
+
+    ``adopted_resident=True`` means a snapshot-register found the job still
+    live on this replica (its lease had merely expired) and the lease was
+    granted on the *resident* state instead of restoring the snapshot —
+    ``store_version``/``num_pending``/``store_fingerprint`` describe that
+    resident store so the client can verify it matches its mirror exactly
+    (and skip the oplog replay)."""
+
+    TYPE = "register_reply"
+    lease: str
+    lease_ttl: float
+    num_parents: int
+    pool_version: int
+    warm_pool_state: Optional[Dict[str, Any]] = None
+    adopted_resident: bool = False
+    store_version: int = 0
+    num_pending: int = 0
+    store_fingerprint: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SuggestBatchRequest:
+    """One batched decision (fill ``k`` freed slots). ``store_version`` and
+    ``num_pending`` are the client's view of the job store; the server
+    refuses with ``STALE_STATE`` if its own store disagrees — a replica that
+    missed an observation must never serve suggestions from stale data."""
+
+    TYPE = "suggest_batch"
+    job_name: str
+    lease: str
+    k: int
+    store_version: int
+    num_pending: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SuggestBatchReply:
+    TYPE = "suggest_batch_reply"
+    configs: List[Dict[str, Any]]
+    pool_version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ObserveRequest:
+    """A store transition, mirrored to the replica in event order.
+
+    ``kind`` selects the transition:
+      * ``"push"`` — finished observation: encoded row ``x`` (exact byte
+        image) + objective ``y``;
+      * ``"pending"`` — candidate submitted: ``key`` + decoded ``config``;
+      * ``"clear"`` — candidate reached terminality: ``key``.
+    """
+
+    TYPE = "observe"
+    job_name: str
+    lease: str
+    kind: str
+    x: Optional[Dict[str, Any]] = None
+    y: Optional[float] = None
+    key: Any = None
+    config: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ObserveReply:
+    TYPE = "observe_reply"
+    accepted: bool
+    store_version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HeartbeatRequest:
+    """Lease renewal for an idle job (any other request also renews)."""
+
+    TYPE = "heartbeat"
+    job_name: str
+    lease: str
+
+
+@dataclasses.dataclass(frozen=True)
+class HeartbeatReply:
+    TYPE = "heartbeat_reply"
+    lease_ttl: float
+    pool_version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotRequest:
+    """Fetch the job's engine snapshot (``SelectionService.snapshot_job``).
+    ``include_factors`` additionally ships the O(S·n²) posterior factor
+    blocks; by default a restoring replica rehydrates them locally."""
+
+    TYPE = "snapshot"
+    job_name: str
+    lease: str
+    include_factors: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotReply:
+    TYPE = "snapshot_reply"
+    snapshot: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStateRequest:
+    """Fetch just the job's ``BOSuggester.state_dict`` — the constant-size
+    blob Tuner checkpoints need after every event. (A full ``snapshot``
+    would carry the whole store as O(n) wire bytes.)"""
+
+    TYPE = "engine_state"
+    job_name: str
+    lease: str
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStateReply:
+    TYPE = "engine_state_reply"
+    state: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRestoreRequest:
+    """Install a checkpointed suggester state (``BOSuggester.state_dict``)
+    into the registered job — the Tuner checkpoint-restore path in remote
+    mode."""
+
+    TYPE = "engine_restore"
+    job_name: str
+    lease: str
+    suggester_state: Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRestoreReply:
+    TYPE = "engine_restore_reply"
+    ok: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorReply:
+    """Loud refusal: ``code`` is an ``ErrorCode`` the client matches on.
+    ``retry_after`` (seconds) accompanies refusals that resolve by waiting
+    (``LEASE_HELD``: the held lease's remaining TTL — a crashed holder's job
+    becomes adoptable exactly then; a live holder will have renewed)."""
+
+    TYPE = "error"
+    code: str
+    message: str
+    retry_after: Optional[float] = None
+
+
+Message = Union[
+    RegisterRequest,
+    RegisterReply,
+    SuggestBatchRequest,
+    SuggestBatchReply,
+    ObserveRequest,
+    ObserveReply,
+    HeartbeatRequest,
+    HeartbeatReply,
+    SnapshotRequest,
+    SnapshotReply,
+    EngineStateRequest,
+    EngineStateReply,
+    EngineRestoreRequest,
+    EngineRestoreReply,
+    ErrorReply,
+]
+
+_REGISTRY: Dict[str, Type[Any]] = {
+    cls.TYPE: cls
+    for cls in (
+        RegisterRequest,
+        RegisterReply,
+        SuggestBatchRequest,
+        SuggestBatchReply,
+        ObserveRequest,
+        ObserveReply,
+        HeartbeatRequest,
+        HeartbeatReply,
+        SnapshotRequest,
+        SnapshotReply,
+        EngineStateRequest,
+        EngineStateReply,
+        EngineRestoreRequest,
+        EngineRestoreReply,
+        ErrorReply,
+    )
+}
+
+
+# --------------------------------------------------------------------------
+# codec
+# --------------------------------------------------------------------------
+
+
+def encode_message(msg: Message) -> bytes:
+    """Frame a message as one JSON line (newline-terminated UTF-8)."""
+    obj = {
+        "protocol": PROTOCOL_VERSION,
+        "type": msg.TYPE,
+        "body": dataclasses.asdict(msg),
+    }
+    return (json.dumps(obj, separators=(",", ":")) + "\n").encode("utf-8")
+
+
+def decode_message(line: Union[bytes, str]) -> Message:
+    """Parse one framed line back into its dataclass.
+
+    Raises ``ProtocolError``:
+      * ``PROTOCOL_MISMATCH`` if the peer speaks another schema version
+        (checked before the body is interpreted; ``ErrorReply`` is exempt so
+        a mismatch refusal itself stays readable);
+      * ``BAD_REQUEST`` for malformed JSON or an unknown message type.
+    """
+    try:
+        obj = json.loads(line)
+        mtype = obj["type"]
+    except (ValueError, KeyError, TypeError) as e:
+        raise ProtocolError(ErrorCode.BAD_REQUEST, f"unparseable message: {e}")
+    if mtype == ErrorReply.TYPE:
+        try:
+            return ErrorReply(**obj.get("body", {}))
+        except TypeError as e:
+            raise ProtocolError(ErrorCode.BAD_REQUEST, f"bad error body: {e}")
+    version = obj.get("protocol")
+    if version != PROTOCOL_VERSION:
+        raise ProtocolError(
+            ErrorCode.PROTOCOL_MISMATCH,
+            f"peer speaks protocol v{version}, this process speaks "
+            f"v{PROTOCOL_VERSION}",
+        )
+    cls = _REGISTRY.get(mtype)
+    if cls is None:
+        raise ProtocolError(ErrorCode.BAD_REQUEST, f"unknown message type {mtype!r}")
+    try:
+        return cls(**obj["body"])
+    except (TypeError, KeyError) as e:
+        raise ProtocolError(ErrorCode.BAD_REQUEST, f"bad {mtype} body: {e}")
+
+
+# --------------------------------------------------------------------------
+# config wire images
+# --------------------------------------------------------------------------
+
+
+def bo_config_to_wire(cfg: BOConfig) -> Dict[str, Any]:
+    """JSON-safe image of a ``BOConfig`` (nested NamedTuple configs flattened
+    to field dicts). Round-trips through ``bo_config_from_wire`` to an equal
+    config — the engine a replica builds from it walks the same GPHP chain."""
+    return {
+        "num_init": cfg.num_init,
+        "gphp_method": cfg.gphp_method,
+        "slice_config": cfg.slice_config._asdict(),
+        "eb_config": cfg.eb_config._asdict(),
+        "acq": cfg.acq._asdict(),
+        "pending_strategy": cfg.pending_strategy,
+        "liar_value": cfg.liar_value,
+        "dedupe_tol": cfg.dedupe_tol,
+        "max_pending": cfg.max_pending,
+        "refit_every": cfg.refit_every,
+        "incremental": cfg.incremental,
+        "fit_backend": cfg.fit_backend,
+    }
+
+
+def bo_config_from_wire(blob: Dict[str, Any]) -> BOConfig:
+    """Inverse of ``bo_config_to_wire``."""
+    return BOConfig(
+        num_init=int(blob["num_init"]),
+        gphp_method=blob["gphp_method"],
+        slice_config=SliceSamplerConfig(**blob["slice_config"]),
+        eb_config=EmpiricalBayesConfig(**blob["eb_config"]),
+        acq=AcqOptConfig(**blob["acq"]),
+        pending_strategy=blob["pending_strategy"],
+        liar_value=float(blob["liar_value"]),
+        dedupe_tol=float(blob["dedupe_tol"]),
+        max_pending=int(blob["max_pending"]),
+        refit_every=int(blob["refit_every"]),
+        incremental=bool(blob["incremental"]),
+        fit_backend=blob["fit_backend"],
+    )

@@ -260,6 +260,54 @@ class SearchSpace:
                 mask[off] = True
         return mask
 
+    # Wire representation (cross-process service) -------------------------
+    def to_spec(self) -> List[Dict[str, Any]]:
+        """JSON-safe structural description of this space — what a tuning job
+        sends to a remote decision-engine replica at registration
+        (``repro.core.rpc.RegisterRequest.space_spec``). Round-trips through
+        ``SearchSpace.from_spec`` to a space with an identical
+        ``space_signature`` (and therefore identical encoding)."""
+        spec: List[Dict[str, Any]] = []
+        for p in self.parameters:
+            if isinstance(p, Categorical):
+                spec.append(
+                    {"kind": "categorical", "name": p.name,
+                     "choices": list(p.choices)}
+                )
+            else:
+                spec.append(
+                    {
+                        "kind": "int" if isinstance(p, Integer) else "float",
+                        "name": p.name,
+                        "low": p.low,
+                        "high": p.high,
+                        "scaling": p.scaling,
+                    }
+                )
+        return spec
+
+    @classmethod
+    def from_spec(cls, spec: Sequence[Mapping[str, Any]]) -> "SearchSpace":
+        """Reconstruct a space from ``to_spec`` output (see there)."""
+        params: List[Parameter] = []
+        for s in spec:
+            kind = s["kind"]
+            if kind == "categorical":
+                params.append(Categorical(s["name"], s["choices"]))
+            elif kind == "int":
+                params.append(
+                    Integer(s["name"], int(s["low"]), int(s["high"]),
+                            scaling=s.get("scaling", ScalingType.LINEAR))
+                )
+            elif kind == "float":
+                params.append(
+                    Continuous(s["name"], float(s["low"]), float(s["high"]),
+                               scaling=s.get("scaling", ScalingType.LINEAR))
+                )
+            else:
+                raise ValueError(f"unknown parameter kind {kind!r}")
+        return cls(params)
+
     def describe(self) -> str:
         rows = []
         for p in self.parameters:

@@ -40,8 +40,14 @@ group** sharing three things:
 
 ``Tuner(..., service=svc)`` routes a tuning job through the service: the
 store, cache, and (optionally) the suggester itself are service-created, and
-slot refill goes through ``JobHandle.suggest_batch`` — the seam where a
-cross-process RPC boundary would sit in a real deployment.
+slot refill goes through ``JobHandle.suggest_batch`` — the RPC seam. The
+cross-process deployment of that seam lives in ``repro.core.rpc`` (versioned
+wire protocol) and ``repro.distributed.engine_server`` / ``engine_client``
+(socket replicas with leases); its state-transfer substrate is here:
+``SelectionService.snapshot_job`` / ``restore_job`` produce and adopt exact,
+versioned engine snapshots (store + GPHP draws + cadence + pool, with the
+O(S·n²) factor blocks optional because a replica can rehydrate them
+locally — see ``docs/wire_protocol.md``).
 """
 
 from __future__ import annotations
@@ -61,10 +67,31 @@ __all__ = [
     "FactorArena",
     "GPHPSamplePool",
     "JobHandle",
+    "PoolConflictError",
     "SelectionService",
     "ServiceConfig",
+    "SnapshotError",
+    "SnapshotVersionError",
     "space_signature",
 ]
+
+
+class SnapshotError(ValueError):
+    """An engine snapshot cannot be produced or adopted."""
+
+
+class SnapshotVersionError(SnapshotError):
+    """Snapshot schema version differs from this process's
+    ``ENGINE_SNAPSHOT_VERSION`` — the replica refuses rather than guessing at
+    a schema it cannot reproduce bit-exactly."""
+
+
+class PoolConflictError(SnapshotError):
+    """The restoring service already holds GPHP pool draws for this space
+    group that disagree (version or content fingerprint) with the snapshot's.
+    Adopting the job anyway would splice it onto draws it has never seen —
+    a silent divergence — so the replica refuses (``stale-draws`` on the
+    wire) and the client routes to another replica."""
 
 
 def space_signature(space: SearchSpace) -> Tuple[Any, ...]:
@@ -138,6 +165,7 @@ class GPHPSamplePool:
         return 1.0 - self.publishes / self.decisions
 
     def stats(self) -> Dict[str, Any]:
+        """Pool counters as a JSON-safe dict (see attribute comments)."""
         return {
             "version": self.version,
             "decisions": self.decisions,
@@ -145,6 +173,31 @@ class GPHPSamplePool:
             "adoptions": self.adoptions,
             "hit_rate": self.hit_rate,
         }
+
+    # ----------------------------------------------------------- wire image
+    def snapshot(self) -> Dict[str, Any]:
+        """Exact wire image of the pool: draws + chain state + version, plus
+        a content ``fingerprint`` of the draws. Version numbers are
+        per-replica counters, so the fingerprint — not the version alone — is
+        what lets an adopting replica decide whether its resident pool *is*
+        these draws (keep) or conflicts with them (refuse). Replica-local
+        stats counters are deliberately not shipped."""
+        from repro.core.gp.serialize import array_fingerprint, array_to_wire
+
+        return {
+            "version": self.version,
+            "samples": array_to_wire(self.samples),
+            "chain_state": array_to_wire(self.chain_state),
+            "fingerprint": array_fingerprint(self.samples),
+        }
+
+    def load_snapshot(self, snap: Dict[str, Any]) -> None:
+        """Install ``snapshot()`` output (draws, chain state, version)."""
+        from repro.core.gp.serialize import array_from_wire
+
+        self.samples = array_from_wire(snap["samples"])
+        self.chain_state = array_from_wire(snap["chain_state"])
+        self.version = int(snap["version"])
 
 
 class FactorArena:
@@ -208,7 +261,24 @@ class _SpaceGroup:
 
 class JobHandle:
     """A registered job's view of the service: its store, its suggester, and
-    the ``suggest_batch`` entry point (the future RPC seam)."""
+    the ``suggest_batch`` entry point — the RPC seam. In-process callers hold
+    this object directly; in remote mode the same surface is served by
+    ``repro.distributed.engine_client.RemoteJobHandle``, which speaks
+    ``repro.core.rpc`` to an engine replica hosting the real ``JobHandle``.
+
+    Attributes:
+        name: the job's registered name (``TuningJobConfig.job_name``).
+        space: the job's ``SearchSpace``.
+        suggester: the decision engine serving this job (usually a
+            ``BOSuggester`` wired to a service-owned ``EngineCache``).
+        store: the job's ``ObservationStore`` (sibling/user warm-start rows
+            folded in as parents).
+        warm_pool: the combined ``WarmStartPool`` the store's parents came
+            from, or None — the Tuner checkpoints this so restore does not
+            re-fold siblings' moved histories.
+        stale: set when another registration takes this name; a stale handle
+            raises instead of silently serving the new job's engine.
+    """
 
     def __init__(self, name, space, suggester, store, service, warm_pool):
         self.name = name
@@ -220,6 +290,9 @@ class JobHandle:
         self.stale = False  # set when another registration takes this name
 
     def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
+        """Serve ``k`` candidate configs (decoded dicts) for this job —
+        one batched engine pass. Raises ``RuntimeError`` if the handle went
+        stale (its name was re-registered)."""
         if self.stale:
             # another job registered under this name since: routing by name
             # would silently serve decisions from the *new* job's engine.
@@ -338,6 +411,125 @@ class SelectionService:
         point (arena LRU accounting happens inside the engine's decision)."""
         handle = self._jobs[name]
         return handle.suggester.suggest_batch(k)
+
+    # ------------------------------------------------------------ snapshots
+    def snapshot_job(self, name: str, include_factors: bool = False) -> Dict[str, Any]:
+        """Produce the complete, versioned, JSON-safe wire image of one job's
+        engine state — everything a fresh process needs to continue the job's
+        suggestion stream *bit-exactly*: search space spec, engine config,
+        construction seed, warm pool, observation store (parents + own rows +
+        pending set), suggester RNG/cadence state, the cached GPHP draws, and
+        the group pool (draws + chain + version + content fingerprint).
+
+        ``include_factors=True`` additionally ships the O(S·n²) posterior
+        factor blocks; by default the adopting replica rehydrates them
+        locally (RNG-free, suggestion-invariant — the same rebuild arena
+        eviction exercises).
+
+        Raises ``SnapshotError`` for suggesters that are not snapshot-capable
+        (anything without the ``BOSuggester`` state surface).
+        """
+        from repro.core.rpc import ENGINE_SNAPSHOT_VERSION, bo_config_to_wire
+
+        handle = self._jobs[name]
+        sugg = handle.suggester
+        for attr in ("state_dict", "cache", "config", "seed"):
+            if not hasattr(sugg, attr):
+                raise SnapshotError(
+                    f"suggester {type(sugg).__name__} lacks {attr!r}; engine "
+                    "snapshots require the BOSuggester state surface"
+                )
+        cache = sugg.cache
+        return {
+            "snapshot_version": ENGINE_SNAPSHOT_VERSION,
+            "job_name": name,
+            "space": handle.space.to_spec(),
+            "bo_config": bo_config_to_wire(sugg.config),
+            "seed": sugg.seed,
+            "service": {
+                "share_gphp": self.config.share_gphp,
+                "sibling_warm_start": self.config.sibling_warm_start,
+            },
+            "warm_pool": None
+            if handle.warm_pool is None
+            else handle.warm_pool.state_dict(),
+            "store": handle.store.snapshot(),
+            "suggester": sugg.state_dict(),
+            "cache": cache.snapshot(include_factors=include_factors),
+            "pool": None if cache.pool is None else cache.pool.snapshot(),
+        }
+
+    def restore_job(self, snap: Dict[str, Any]) -> JobHandle:
+        """Adopt a ``snapshot_job`` image into this service (typically a
+        different process) and return the live handle. The restored job's
+        next-k suggestions are bit-identical to what the snapshotted engine
+        would have produced.
+
+        Refusals (checked before any state is mutated):
+          * ``SnapshotVersionError`` — snapshot schema this process does not
+            speak (``ENGINE_SNAPSHOT_VERSION`` mismatch);
+          * ``PoolConflictError`` — this service already holds GPHP draws for
+            the job's space group that disagree with the snapshot's pool
+            (version or fingerprint): splicing the job onto draws it has
+            never seen would diverge silently, so the caller must pick
+            another replica instead.
+
+        Replicas are expected to run the same ``ServiceConfig`` (the snapshot
+        records ``share_gphp``/``sibling_warm_start`` for debuggability, but
+        mixed fleets are a deployment error, not a guarded path).
+        """
+        from repro.core.gp.serialize import array_fingerprint
+        from repro.core.rpc import ENGINE_SNAPSHOT_VERSION, bo_config_from_wire
+
+        version = snap.get("snapshot_version")
+        if version != ENGINE_SNAPSHOT_VERSION:
+            raise SnapshotVersionError(
+                f"snapshot schema v{version}, this process speaks "
+                f"v{ENGINE_SNAPSHOT_VERSION}"
+            )
+        space = SearchSpace.from_spec(snap["space"])
+        pool_snap = snap.get("pool")
+        # a snapshot with no pool draws (taken before the job's first refit)
+        # has nothing to conflict with — resident sibling draws are then no
+        # more foreign than they would be to a freshly registered job.
+        if (
+            pool_snap is not None
+            and pool_snap.get("samples") is not None
+            and self.config.share_gphp
+        ):
+            group = self._groups.get(space_signature(space))
+            if group is not None and group.pool.samples is not None:
+                same = (
+                    group.pool.version == pool_snap["version"]
+                    and array_fingerprint(group.pool.samples)
+                    == pool_snap["fingerprint"]
+                )
+                if not same:
+                    raise PoolConflictError(
+                        "resident GPHP pool (version "
+                        f"{group.pool.version}) conflicts with snapshot pool "
+                        f"(version {pool_snap['version']})"
+                    )
+        warm_pool = None
+        if snap.get("warm_pool"):
+            warm_pool = WarmStartPool()
+            warm_pool.load_state_dict(snap["warm_pool"])
+        handle = self.register_job(
+            snap["job_name"],
+            space,
+            bo_config=bo_config_from_wire(snap["bo_config"]),
+            seed=int(snap["seed"]),
+            warm_start=warm_pool,
+            fold_siblings=False,  # the snapshot's parent rows are authoritative
+        )
+        handle.store.load_snapshot(snap["store"])
+        handle.suggester.load_state_dict(snap["suggester"])
+        cache = handle.suggester.cache
+        cache.load_snapshot(snap["cache"])
+        if cache.pool is not None and pool_snap is not None:
+            if cache.pool.samples is None and pool_snap["samples"] is not None:
+                cache.pool.load_snapshot(pool_snap)
+        return handle
 
     # -------------------------------------------------------------- insight
     def stats(self) -> Dict[str, Any]:

@@ -190,12 +190,70 @@ class EngineCache:
         if self.arena is not None:
             self.arena.touch(self.arena_key, self)
 
+    # ----------------------------------------------------------- wire image
+    def snapshot(self, include_factors: bool = False) -> Dict[str, Any]:
+        """Exact wire image of the cache block (versioned by the enclosing
+        engine snapshot — see ``SelectionService.snapshot_job``).
+
+        ``include_factors=False`` (default) ships only the GPHP draws and the
+        cadence counters: the factor blocks are a deterministic function of
+        draws + observation rows, so a restoring replica rehydrates them
+        locally (the same RNG-free rebuild arena eviction uses) instead of
+        paying O(S·n²) wire bytes. ``include_factors=True`` additionally
+        ships the factorized posterior for hot hand-offs.
+        """
+        from repro.core.gp.serialize import array_to_wire, posterior_to_wire
+
+        return {
+            "samples": array_to_wire(self.samples),
+            "n": self.n,
+            "obs_since_refit": self.obs_since_refit,
+            "pool_version": self.pool_version,
+            "factors": posterior_to_wire(self.post)
+            if include_factors and self.post is not None
+            else None,
+        }
+
+    def load_snapshot(self, snap: Mapping[str, Any]) -> None:
+        """Install ``snapshot()`` output. Pool/arena wiring is left untouched
+        (those belong to the hosting service, not the wire image); factors
+        rehydrate lazily on the next decision unless the snapshot shipped
+        them."""
+        from repro.core.gp.serialize import array_from_wire, posterior_from_wire
+
+        self.samples = array_from_wire(snap["samples"])
+        self.n = int(snap["n"])
+        self.obs_since_refit = int(snap["obs_since_refit"])
+        self.pool_version = int(snap["pool_version"])
+        factors = snap.get("factors")
+        self.post = None if factors is None else posterior_from_wire(factors)
+        self.token = None  # factors (if any) bind to whatever store comes next
+
 
 class BOSuggester:
     """Stateful sequential/asynchronous Bayesian-optimization suggester
     (minimize). Bind an ``ObservationStore`` (``bind_store``) and call
     ``suggest_batch(k)``; or use the stateless ``suggest(history, pending)``
-    compatibility API."""
+    compatibility API.
+
+    Args:
+        space: the ``SearchSpace`` candidates are drawn from.
+        config: engine knobs (``BOConfig``; defaults are the paper's).
+        seed: drives every random element — numpy RNG, JAX key, and the
+            Sobol shift scramble. Recorded on the instance so an engine
+            snapshot (``SelectionService.snapshot_job``) can reconstruct the
+            suggester in a fresh process; two suggesters built with the same
+            (space, config, seed) walk identical decision streams.
+        store: optional ``ObservationStore`` to bind now (else ``bind_store``).
+        cache: optional service-owned ``EngineCache`` (else a private one).
+
+    ``state_dict()``/``load_state_dict()`` capture everything *drawn since
+    construction* (chain state, RNG streams, cached GPHP draws, cadence), so
+    construction-from-seed + ``load_state_dict`` reproduces a live engine
+    exactly — the contract both Tuner checkpoints and engine snapshots rest
+    on. Factors are never part of the state: they rehydrate via an RNG-free
+    replay of the incremental construction (see ``_posterior_for``).
+    """
 
     def __init__(
         self,
@@ -207,6 +265,10 @@ class BOSuggester:
     ):
         self.space = space
         self.config = config
+        # construction seed: recorded so an engine snapshot can rebuild this
+        # suggester in a fresh process (the Sobol shift scramble is drawn at
+        # construction and is not part of state_dict).
+        self.seed = seed
         self._rng = np.random.default_rng(seed)
         self._key = jax.random.PRNGKey(seed)
         self._sobol_init = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))
@@ -447,50 +509,81 @@ class BOSuggester:
             resample = False
             post_valid = False  # factors (if any) describe the old draws
             new_obs = 0  # the adopted draws cover all current rows
+            acct = n  # adoption refactorizes at n: the new factor boundary
 
         if pool is not None:
             pool.decisions += 1
 
-        if resample or not post_valid:
+        if resample:
             x_pad = np.zeros((nb, d))
             y_pad = np.zeros((nb,))
             x_pad[:n], y_pad[:n] = x_all, y_std
             mask = np.zeros(nb, dtype=bool)
             mask[:n] = True
             xj, yj, mj = jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
-            if resample:
-                samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
-                cache.samples = np.asarray(samples)
-                cache.obs_since_refit = 0
-                if pool is not None:
-                    pool.publish(cache.samples, self._chain_state)
-                    cache.pool_version = pool.version
-            else:
-                # cached draws (restored from a checkpoint, adopted from the
-                # pool, or arena-evicted factors) but no live factorization:
-                # rebuild without consuming RNG state.
-                cache.obs_since_refit += new_obs
-            params_batch = gpparams.GPHyperParams.unpack(
-                jnp.asarray(cache.samples), d
+            samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
+            cache.samples = np.asarray(samples)
+            cache.obs_since_refit = 0
+            if pool is not None:
+                pool.publish(cache.samples, self._chain_state)
+                cache.pool_version = pool.version
+            post = self._factorize(xj, yj, mj)
+        elif not post_valid:
+            # Cached draws (restored from a checkpoint/snapshot, adopted from
+            # the pool, or arena-evicted factors) but no live factorization.
+            # The factors the uninterrupted engine holds were built by a full
+            # factorization at its last refit/adoption boundary followed by
+            # rank-1 appends — so the rebuild must *replay* that exact op
+            # sequence, not refactorize at n: a size-n Cholesky differs from
+            # factorize(r)+appends in the last bits, which would silently
+            # break the bit-equivalence contract of engine snapshots
+            # (``SelectionService.restore_job``) and arena eviction. RNG-free.
+            r = min(n, max(2, acct - cache.obs_since_refit))
+            cache.obs_since_refit += new_obs
+            rb = bucket_size(r)
+            x_pad = np.zeros((rb, d))
+            y_pad = np.zeros((rb,))
+            x_pad[:r], y_pad[:r] = x_all[:r], y_std[:r]
+            mask = np.zeros(rb, dtype=bool)
+            mask[:r] = True
+            post = self._factorize(
+                jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
             )
-            # pallas anchor scoring consumes L⁻¹; build it at refit time so
-            # every decision (and fantasy append) reuses the cached inverse.
-            post = gplib.fit_posterior_batch(
-                xj, yj, params_batch, mj, backend=backend,
-                with_inverse=cfg.acq.backend == "pallas",
-            )
+            post = self._append_rows(post, store, r, n)
         else:
-            post = cache.post
-            if post.x_train.shape[0] < nb:
-                post = grow_posterior(post, nb)
-            for i in range(acct, n):
-                post = posterior_append(
-                    post, jnp.asarray(store.x_rows(i, i + 1)[0]), backend=backend
-                )
+            post = self._append_rows(cache.post, store, acct, n)
             cache.obs_since_refit += new_obs
 
         cache.n = n
         cache.token = token
+        return post
+
+    def _factorize(self, xj, yj, mj):
+        """Factorize the masked rows under the cached GPHP draws. The Pallas
+        anchor-scoring path consumes L⁻¹; build it at factorization time so
+        every decision (and fantasy append) reuses the cached inverse."""
+        params_batch = gpparams.GPHyperParams.unpack(
+            jnp.asarray(self.cache.samples), self.space.encoded_dim
+        )
+        return gplib.fit_posterior_batch(
+            xj, yj, params_batch, mj, backend=self.config.fit_backend,
+            with_inverse=self.config.acq.backend == "pallas",
+        )
+
+    def _append_rows(self, post, store: ObservationStore, start: int, stop: int):
+        """Rank-1-append store rows [start, stop), growing the shape bucket
+        per row. Growth points depend only on the row index — never on how
+        many rows one decision happened to fold — so the factor state is a
+        path-independent function of (draws, rows, refit boundary); rebuilds
+        (eviction, snapshot restore) replay it bit-exactly."""
+        backend = self.config.fit_backend
+        for i in range(start, stop):
+            nb_i = bucket_size(i + 1)
+            if post.x_train.shape[0] < nb_i:
+                post = grow_posterior(post, nb_i)
+            post = posterior_append(
+                post, jnp.asarray(store.x_rows(i, i + 1)[0]), backend=backend
+            )
         return post
 
     def _fantasy_append(self, work, y_work: List[float], x_vec: np.ndarray):
@@ -568,6 +661,10 @@ class BOSuggester:
 
     # ------------------------------------------------------------ state i/o
     def state_dict(self) -> Dict[str, Any]:
+        """JSON-safe image of everything drawn since construction: slice-chain
+        state, numpy/JAX RNG streams, Sobol position, cached GPHP draws and
+        refit-cadence counters. Pair with the construction ``seed`` to rebuild
+        this engine exactly (factors rehydrate RNG-free)."""
         return {
             "chain_state": None
             if self._chain_state is None
@@ -589,6 +686,9 @@ class BOSuggester:
         }
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
+        """Install ``state_dict()`` output into a suggester constructed with
+        the same (space, config, seed); the next decision continues the
+        original stream bit-exactly."""
         cs = state.get("chain_state")
         self._chain_state = None if cs is None else np.asarray(cs)
         self._sobol_init.reset()

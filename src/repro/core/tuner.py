@@ -56,6 +56,29 @@ __all__ = ["TuningJobConfig", "TuningResult", "Tuner"]
 
 @dataclasses.dataclass
 class TuningJobConfig:
+    """Per-job knobs of the tuning workflow (paper §3).
+
+    Args:
+        max_trials: total unique configurations to evaluate (retries of a
+            failed attempt do not count).
+        max_parallel: concurrent evaluation slots; may be changed on a live
+            ``Tuner`` (elasticity) without invalidating engine state.
+        max_retries: failed-attempt retries per trial before it is marked
+            FAILED (§3.3). Crash-restore re-runs do not consume this budget.
+        retry_backoff: base of the exponential retry backoff, in backend
+            seconds (virtual for ``SimBackend``).
+        trial_timeout: straggler budget per trial, in backend seconds; an
+            over-budget trial is stopped (keeping its best-so-far) instead of
+            blocking its slot. None disables.
+        checkpoint_path: JSON checkpoint target for ``Tuner.save`` /
+            ``Tuner.restore``; checkpointing happens after every event when
+            set. None disables.
+        seed: seed for the service-created suggester (service mode) and any
+            seeded suggester construction.
+        job_name: registry key in service mode — concurrent jobs on one
+            ``SelectionService``/``RemoteService`` need distinct names.
+    """
+
     max_trials: int = 20
     max_parallel: int = 1
     max_retries: int = 2
@@ -68,6 +91,24 @@ class TuningJobConfig:
 
 @dataclasses.dataclass
 class TuningResult:
+    """Outcome of one ``Tuner.run``.
+
+    Attributes:
+        trials: every trial, sorted by ``trial_id`` (terminal and otherwise).
+        best_trial: lowest-objective COMPLETED/STOPPED trial, or None.
+        timeline: (backend time, best objective so far) after each terminal
+            event — the anytime-performance curve of paper Fig. 3.
+        total_time: backend clock at the end of the run (virtual seconds for
+            ``SimBackend``).
+        total_iterations: training resource actually consumed across all
+            trials (sum of per-trial iterations reported).
+        num_early_stopped: trials stopped by the stopping rule (§5.2) or the
+            straggler budget.
+        num_failed_attempts: failed executions including retried attempts
+            (infrastructure failures like a dead engine replica do not count;
+            see ``tests/test_remote_service.py``).
+    """
+
     trials: List[Trial]
     best_trial: Optional[Trial]
     timeline: List[Tuple[float, float]]  # (time, best objective so far)
@@ -94,7 +135,36 @@ class TuningResult:
 
 
 class Tuner:
-    """Orchestrates one hyperparameter tuning job (minimization)."""
+    """Orchestrates one hyperparameter tuning job (minimization).
+
+    Args:
+        space: the job's ``SearchSpace``.
+        objective: evaluation callable handed to the backend. For
+            ``SimBackend`` it maps a config dict to ``(learning curve, cost
+            per iteration)``; for ``ThreadBackend`` it runs the real training.
+        suggester: decision engine (``BOSuggester``, ``RandomSuggester``, …).
+            In service mode pass None to let the service create one from its
+            ``default_bo_config`` (required for ``RemoteService`` — a local
+            suggester object cannot cross the process boundary).
+        backend: execution backend (``SimBackend`` / ``ThreadBackend``).
+        job_config: the ``TuningJobConfig`` knobs.
+        stopping_rule: optional early-stopping rule watched on every report
+            (median rule, ASHA — §5.2).
+        warm_start: optional ``WarmStartPool`` of parent-job observations,
+            folded into the GP dataset once (§5.3).
+        callbacks: ``f(tuner, trial)`` hooks invoked at each trial's
+            terminal event.
+        service: optional ``SelectionService`` (in-process) or
+            ``repro.distributed.RemoteService`` (engine-replica fleet over
+            sockets). When set, the store and engine cache are service-owned,
+            registration folds sibling warm-start in, and slot refill routes
+            through ``JobHandle.suggest_batch`` — the RPC seam. Both service
+            types produce identical trial tables for identical inputs (the
+            wire protocol is exact; see ``docs/wire_protocol.md``).
+
+    ``run()`` returns a ``TuningResult``; ``save()``/``restore()`` checkpoint
+    and resume a job bit-identically (including in remote service mode).
+    """
 
     def __init__(
         self,
@@ -235,8 +305,9 @@ class Tuner:
         if free <= 0:
             return
         if self._service_handle is not None:
-            # service mode: decisions go through the SelectionService (the
-            # seam where a cross-process RPC boundary would sit).
+            # service mode: decisions go through the selection service — in
+            # process via JobHandle, or over the wire via RemoteJobHandle
+            # (repro.distributed), which serves the same surface.
             for config in self._service_handle.suggest_batch(free):
                 self._launch(config)
         elif hasattr(self.suggester, "suggest_batch"):

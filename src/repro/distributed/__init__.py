@@ -1,3 +1,11 @@
+"""Distributed runtime: model sharding helpers and the cross-process
+selection-service harness (engine replicas + leasing client).
+
+The engine server/client are exported lazily so importing the sharding
+helpers (pure JAX, used by training code) does not pull in ``repro.core``
+and its global x64 configuration.
+"""
+
 from repro.distributed.sharding import (
     ShardingRules,
     DEFAULT_RULES,
@@ -10,4 +18,30 @@ __all__ = [
     "DEFAULT_RULES",
     "logical_to_spec",
     "tree_specs_to_shardings",
+    "EngineServer",
+    "MirroredStore",
+    "RemoteJobHandle",
+    "RemoteService",
+    "RemoteServiceError",
+    "RemoteSuggester",
+    "ReplicaDivergenceError",
 ]
+
+_LAZY = {
+    "EngineServer": "repro.distributed.engine_server",
+    "MirroredStore": "repro.distributed.engine_client",
+    "RemoteJobHandle": "repro.distributed.engine_client",
+    "RemoteService": "repro.distributed.engine_client",
+    "RemoteServiceError": "repro.distributed.engine_client",
+    "RemoteSuggester": "repro.distributed.engine_client",
+    "ReplicaDivergenceError": "repro.distributed.engine_client",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

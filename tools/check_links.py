@@ -1,0 +1,71 @@
+"""Markdown link check: every relative link/anchor in the repo's *.md files
+must resolve. Stdlib only, so it runs anywhere:
+
+    python tools/check_links.py
+
+Checks ``[text](target)`` links in tracked markdown files: relative paths
+must exist on disk, and ``file#anchor`` / ``#anchor`` fragments must match a
+GitHub-slugified heading in the target file. External (http/mailto) links
+are not fetched — CI must not rot because someone else's server is down.
+Exits non-zero listing every broken link.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv"}
+
+
+def slugify(heading: str) -> str:
+    """GitHub's markdown heading → anchor id rule (close enough: lowercase,
+    drop everything but word chars/spaces/hyphens, spaces → hyphens)."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(md_path.read_text())}
+
+
+def check(root: Path) -> list:
+    errors = []
+    md_files = [
+        p for p in root.rglob("*.md")
+        if not any(part in SKIP_DIRS for part in p.parts)
+    ]
+    for md in md_files:
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = md if not path_part else (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if slugify(anchor) not in anchors_of(dest):
+                    errors.append(
+                        f"{md.relative_to(root)}: missing anchor -> {target}"
+                    )
+    return errors
+
+
+def main() -> None:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(e)
+    n = len(list(root.rglob("*.md")))
+    if errors:
+        sys.exit(f"{len(errors)} broken markdown link(s)")
+    print(f"markdown link check: OK ({n} files scanned)")
+
+
+if __name__ == "__main__":
+    main()
