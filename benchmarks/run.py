@@ -17,13 +17,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale seed counts (slow on CPU)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig3,fig2,fig4,fig5,async,gp,suggest,multijob,remote,roofline")
+                    help="comma-separated subset: fig3,fig2,fig4,fig5,async,gp,"
+                         "suggest,multijob,remote,multimetric,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import async_strategies, bo_vs_random, early_stopping
     from benchmarks import gp_perf, log_scaling, roofline_report, warm_start
-    from benchmarks import multi_job, remote_service, suggest_throughput
+    from benchmarks import multi_job, multimetric, remote_service
+    from benchmarks import suggest_throughput
 
     suites = []
     if only is None or "fig3" in only:
@@ -49,6 +51,8 @@ def main() -> None:
         suites.append(("multijob", multi_job.run))
     if only is None or "remote" in only:
         suites.append(("remote", remote_service.run))
+    if only is None or "multimetric" in only:
+        suites.append(("multimetric", multimetric.run))
     if only is None or "roofline" in only:
         suites.append(("roofline", roofline_report.run))
 

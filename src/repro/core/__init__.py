@@ -40,6 +40,12 @@ from repro.core.service import (  # noqa: E402
     SelectionService,
     ServiceConfig,
 )
+from repro.core.multimetric import (  # noqa: E402
+    MetricSet,
+    MetricSpec,
+    hypervolume,
+    pareto_mask,
+)
 from repro.core.median_rule import MedianRule, MedianRuleConfig  # noqa: E402
 from repro.core.warm_start import WarmStartPool, transferable  # noqa: E402
 from repro.core.asha import ASHAConfig, ASHARule  # noqa: E402
@@ -67,6 +73,10 @@ __all__ = [
     "SobolSuggester",
     "MedianRule",
     "MedianRuleConfig",
+    "MetricSet",
+    "MetricSpec",
+    "hypervolume",
+    "pareto_mask",
     "WarmStartPool",
     "transferable",
     "ASHAConfig",

@@ -33,12 +33,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.gp.gp import _JITTER, GPPosterior
-from repro.core.gp.kernels import gram_cross
+from repro.core.gp.kernels import gram, gram_cross
 
 __all__ = [
     "cholesky_append_row",
+    "cholesky_append_block",
+    "cholesky_delete_row",
     "posterior_append",
+    "posterior_append_block",
+    "posterior_delete",
     "refresh_alpha",
     "grow_posterior",
 ]
@@ -142,6 +148,246 @@ def refresh_alpha(post: GPPosterior, y: jax.Array) -> GPPosterior:
 
     alpha = jax.vmap(one)(post.chol) if post.chol.ndim == 3 else one(post.chol)
     return post._replace(alpha=alpha)
+
+
+def cholesky_append_block(
+    chol: jax.Array,  # (n, n) lower factor, identity on masked rows
+    k_rows: jax.Array,  # (k, n) cross-covariances vs live rows, 0 at masked cols
+    k_block: jax.Array,  # (k, k) gram among the new rows incl. noise diagonal
+    idx: jax.Array,  # () index of the first appended row (= current n_live)
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank-k border append: one *blocked* triangular solve instead of k
+    rank-1 borders. Returns ``(chol', W, L22)`` where the bordered factor is
+
+        [[L, 0], [Wᵀ, L22]],  L·W = K_crossᵀ,  L22·L22ᵀ = K_new − WᵀW
+
+    — the ``suggest_batch(k)`` fantasy fold drops from k sequential O(n²)
+    solves to one O(k·n²) blocked solve (§ ROADMAP "batched fantasy
+    appends"). W/L22 are returned so the cached L⁻¹ can be bordered too."""
+    k = k_rows.shape[0]
+    n = chol.shape[0]
+    w = jax.scipy.linalg.solve_triangular(chol, k_rows.T, lower=True)  # (n, k)
+    s22 = k_block - w.T @ w
+    # ``k_block``'s diagonal already carries noise + jitter (same as the
+    # rank-1 border's k_diag), so no extra regularization is added here.
+    l22 = jnp.linalg.cholesky(s22)
+    cols = jnp.arange(n)
+    rows = jnp.arange(k)
+    # live-border part: Wᵀ entries on columns < idx (W vanishes elsewhere)
+    live = jnp.where(cols[None, :] < idx, w.T, 0.0)  # (k, n)
+    # intra-block part: L22[r, c − idx] on columns idx..idx+r
+    block = jnp.where(
+        (cols[None, :] >= idx) & (cols[None, :] <= idx + rows[:, None]),
+        l22[:, jnp.clip(cols - idx, 0, k - 1)],
+        0.0,
+    )
+    chol = chol.at[idx + rows, :].set(live + block)
+    return chol, w, l22
+
+
+def _inverse_append_block(
+    linv: jax.Array,  # (n, n) cached L⁻¹
+    w: jax.Array,  # (n, k) blocked border solve
+    l22: jax.Array,  # (k, k) new diagonal block of the factor
+    idx: jax.Array,  # () index of the first appended row
+) -> jax.Array:
+    """Blockwise border of the inverse:
+
+        [[L, 0], [Wᵀ, L22]]⁻¹ = [[L⁻¹, 0], [−L22⁻¹WᵀL⁻¹, L22⁻¹]]
+    """
+    k = l22.shape[0]
+    n = linv.shape[0]
+    bottom_left = -jax.scipy.linalg.solve_triangular(
+        l22, w.T @ linv, lower=True
+    )  # (k, n); vanishes on columns ≥ idx (identity rows solve through W=0)
+    l22_inv = jax.scipy.linalg.solve_triangular(
+        l22, jnp.eye(k, dtype=l22.dtype), lower=True
+    )
+    cols = jnp.arange(n)
+    rows = jnp.arange(k)
+    live = jnp.where(cols[None, :] < idx, bottom_left, 0.0)
+    block = jnp.where(
+        (cols[None, :] >= idx) & (cols[None, :] <= idx + rows[:, None]),
+        l22_inv[:, jnp.clip(cols - idx, 0, k - 1)],
+        0.0,
+    )
+    return linv.at[idx + rows, :].set(live + block)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def posterior_append_block(
+    post: GPPosterior,
+    x_new: jax.Array,  # (k, d) encoded new observations
+    *,
+    backend: str = "xla",
+) -> GPPosterior:
+    """Fold k observations' inputs into the factorization with one blocked
+    solve per GPHP sample (the rank-k analogue of ``posterior_append``).
+    ``alpha`` is left stale — call ``refresh_alpha`` with the new targets.
+    The caller must have grown the bucket to hold the k extra rows."""
+    idx = jnp.sum(post.mask)
+    k = x_new.shape[0]
+    batched = post.chol.ndim == 3
+
+    def one(chol, params, linv):
+        crosses = jax.vmap(
+            lambda xr: gram_cross(xr, post.x_train, params, backend=backend)
+        )(x_new)  # (k, n)
+        k_rows = jnp.where(post.mask[None, :], crosses, 0.0)
+        noise = jnp.exp(2.0 * params.log_noise) + _JITTER
+        k_block = gram(x_new, x_new, params, backend=backend) + noise * jnp.eye(
+            k, dtype=crosses.dtype
+        )
+        chol, w, l22 = cholesky_append_block(chol, k_rows, k_block, idx)
+        if linv is None:
+            return chol, None
+        return chol, _inverse_append_block(linv, w, l22, idx)
+
+    if batched and post.chol_inv is not None:
+        chol, linv = jax.vmap(one)(post.chol, post.params, post.chol_inv)
+    elif batched:
+        chol = jax.vmap(lambda c, p: one(c, p, None)[0])(post.chol, post.params)
+        linv = None
+    else:
+        chol, linv = one(post.chol, post.params, post.chol_inv)
+    rows = jnp.arange(post.x_train.shape[0])
+    in_block = (rows >= idx) & (rows < idx + k)
+    x_train = jax.lax.dynamic_update_slice(
+        post.x_train, x_new.astype(post.x_train.dtype), (idx, 0)
+    )
+    return GPPosterior(
+        x_train=x_train,
+        mask=post.mask | in_block,
+        chol=chol,
+        alpha=post.alpha,
+        params=post.params,
+        chol_inv=linv,
+    )
+
+
+def _chol_rank1_update_np(f: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Classic rank-1 Cholesky *update*: returns F' with F'F'ᵀ = FFᵀ + vvᵀ
+    (numpy, O(k²)). Identity rows with v = 0 stay identity, preserving the
+    masked-padding convention."""
+    f = f.copy()
+    v = v.copy()
+    k = f.shape[0]
+    for i in range(k):
+        r = float(np.hypot(f[i, i], v[i]))
+        c, s = r / f[i, i], v[i] / f[i, i]
+        f[i, i] = r
+        if i + 1 < k:
+            f[i + 1 :, i] = (f[i + 1 :, i] + s * v[i + 1 :]) / c
+            v[i + 1 :] = c * v[i + 1 :] - s * f[i + 1 :, i]
+    return f
+
+
+def cholesky_delete_row(
+    chol: np.ndarray,  # (n, n) lower factor, identity on masked rows
+    idx: int,  # row/col being deleted (< n_live)
+    n_live: int,  # live rows before the deletion
+    linv: "np.ndarray | None" = None,  # cached L⁻¹ to maintain alongside
+) -> tuple[np.ndarray, "np.ndarray | None"]:
+    """Rank-1 Cholesky *downdate*: the factor of K with row/col ``idx``
+    deleted, live rows re-packed as a prefix and row ``n_live−1`` reset to
+    identity padding. With L partitioned at ``idx``
+
+        L = [[A, 0, 0], [bᵀ, d, 0], [C, e, F]]
+
+    the deleted row only affects the trailing block: F'F'ᵀ = FFᵀ + eeᵀ, one
+    O(k²) rank-1 update (k = n_live − idx − 1). The cached inverse is
+    rebuilt blockwise: [[A,0],[C,F']]⁻¹ = [[A⁻¹,0],[−F'⁻¹CA⁻¹,F'⁻¹]] — A⁻¹
+    is the untouched top-left of the old L⁻¹, so the extra cost is O(k²·n),
+    cheap for the recent-history corrections deletions exist for.
+
+    Numpy in, numpy out (deletions are rare and happen outside jit)."""
+    if not 0 <= idx < n_live:
+        raise IndexError(f"idx {idx} out of live range [0, {n_live})")
+    l = np.asarray(chol, dtype=np.float64)
+    n = l.shape[0]
+    k = n_live - idx - 1
+    out = l.copy()
+    fp = None
+    if k > 0:
+        f = l[idx + 1 : n_live, idx + 1 : n_live]
+        e = l[idx + 1 : n_live, idx]
+        fp = _chol_rank1_update_np(f, e)
+        out[idx : n_live - 1, :idx] = l[idx + 1 : n_live, :idx]
+        out[idx : n_live - 1, idx:] = 0.0
+        out[idx : n_live - 1, idx : n_live - 1] = fp
+    out[n_live - 1, :] = 0.0
+    out[:, n_live - 1] = 0.0
+    out[n_live - 1, n_live - 1] = 1.0
+
+    new_linv = None
+    if linv is not None:
+        li = np.asarray(linv, dtype=np.float64)
+        new_linv = li.copy()
+        if k > 0:
+            a_inv = li[:idx, :idx]
+            c = l[idx + 1 : n_live, :idx]
+            fp_inv = _tri_inv_np(fp)
+            new_linv[idx : n_live - 1, :idx] = -fp_inv @ (c @ a_inv)
+            new_linv[idx : n_live - 1, idx:] = 0.0
+            new_linv[idx : n_live - 1, idx : n_live - 1] = fp_inv
+        new_linv[n_live - 1, :] = 0.0
+        new_linv[:, n_live - 1] = 0.0
+        new_linv[n_live - 1, n_live - 1] = 1.0
+    return out, new_linv
+
+
+def _tri_inv_np(l: np.ndarray) -> np.ndarray:
+    """Inverse of a lower-triangular matrix by forward substitution (numpy)."""
+    k = l.shape[0]
+    inv = np.zeros_like(l)
+    for j in range(k):
+        inv[j, j] = 1.0 / l[j, j]
+        for i in range(j + 1, k):
+            inv[i, j] = -np.dot(l[i, j:i], inv[j:i, j]) / l[i, i]
+    return inv
+
+
+def posterior_delete(post: GPPosterior, row: int) -> GPPosterior:
+    """Remove live row ``row`` from a factorized posterior via the rank-1
+    downdate (per GPHP sample), shifting the suffix up so live rows stay a
+    prefix. ``alpha`` is left stale — call ``refresh_alpha`` with the new
+    targets. Runs in numpy outside jit (deletions are rare corrections)."""
+    mask = np.asarray(post.mask)
+    n_live = int(mask.sum())
+    if not 0 <= row < n_live:
+        raise IndexError(f"row {row} out of live range [0, {n_live})")
+    x = np.asarray(post.x_train).copy()
+    x[row : n_live - 1] = x[row + 1 : n_live]
+    x[n_live - 1] = 0.0
+    mask = mask.copy()
+    mask[n_live - 1] = False
+
+    batched = post.chol.ndim == 3
+    chols = np.asarray(post.chol)
+    linvs = None if post.chol_inv is None else np.asarray(post.chol_inv)
+    if not batched:
+        chols = chols[None]
+        linvs = None if linvs is None else linvs[None]
+    new_chols = np.empty_like(chols)
+    new_linvs = None if linvs is None else np.empty_like(linvs)
+    for s in range(chols.shape[0]):
+        c, li = cholesky_delete_row(
+            chols[s], row, n_live, None if linvs is None else linvs[s]
+        )
+        new_chols[s] = c
+        if new_linvs is not None:
+            new_linvs[s] = li
+    if not batched:
+        new_chols = new_chols[0]
+        new_linvs = None if new_linvs is None else new_linvs[0]
+    return GPPosterior(
+        x_train=jnp.asarray(x),
+        mask=jnp.asarray(mask),
+        chol=jnp.asarray(new_chols),
+        alpha=post.alpha,
+        params=post.params,
+        chol_inv=None if new_linvs is None else jnp.asarray(new_linvs),
+    )
 
 
 def grow_posterior(post: GPPosterior, new_size: int) -> GPPosterior:

@@ -1,0 +1,97 @@
+"""Shared-factor multi-output GP posterior (multi-metric decision engine).
+
+Every metric of a tuning job observes the *same* configurations, so M
+independent per-metric GPs over a shared X (the syne-tune
+``independent/posterior_state.py`` pattern) collapse onto **one** Cholesky
+factor when the heads share hyperparameters: K̃ depends only on X and the
+GPHPs, never on the targets. A multi-output posterior is therefore the
+existing single-output ``GPPosterior`` (factor, mask, cached L⁻¹, GPHP
+draws — everything the incremental rank-1 machinery of
+``repro.core.gp.incremental`` maintains) plus one extra alpha vector per
+metric head:
+
+    factorize once          O(S·n³)  — unchanged, objective path
+    alpha_j = K̃⁻¹ y_j       O(S·n²)  per head — M cheap triangular solves
+    predict: shared k*/V    O(S·m·n²) once; each extra head adds one
+                            (m×n)·(n,) matvec for its mean
+
+The predictive *variance* is identical across heads (shared amplitude and
+factor), which is what the constrained/scalarized acquisition functions in
+``repro.core.multimetric.acquisition`` exploit.
+
+Head 0 is always the primary objective and its alpha duplicates
+``base.alpha`` — the M=1 degenerate case never touches this module, and
+the M>1 engine path still drives the base posterior through the exact
+single-metric append/refit/snapshot machinery (bit-identical factors).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp.gp import GPPosterior
+from repro.core.gp.kernels import gram
+
+__all__ = ["MultiOutputPosterior", "solve_head_alphas", "predict_heads"]
+
+
+class MultiOutputPosterior(NamedTuple):
+    """A ``GPPosterior`` extended with per-metric alpha vectors.
+
+    ``base`` carries the shared factor (and the objective alpha used by the
+    single-metric code paths); ``alphas`` holds K̃⁻¹y_j for every head —
+    shape (S, M, n) with head 0 equal to ``base.alpha``. A pure pytree."""
+
+    base: GPPosterior
+    alphas: jax.Array  # (S, M, n)
+
+    @property
+    def num_heads(self) -> int:
+        return self.alphas.shape[1]
+
+
+@jax.jit
+def solve_head_alphas(base: GPPosterior, y_heads: jax.Array) -> jax.Array:
+    """alpha_j = K̃⁻¹ y_j for all heads from the shared cached factor:
+    ``y_heads`` (M, n_pad) → (S, M, n_pad). O(S·M·n²) — the "M cheap alpha
+    solves" that make multi-metric nearly free next to refactorization.
+    Masked rows are zeroed, like ``refresh_alpha``."""
+    y = jnp.where(base.mask[None, :], y_heads, 0.0)  # (M, n)
+
+    def per_sample(chol):
+        return jax.vmap(lambda yj: jax.scipy.linalg.cho_solve((chol, True), yj))(y)
+
+    if base.chol.ndim == 3:
+        return jax.vmap(per_sample)(base.chol)
+    return per_sample(base.chol)[None]
+
+
+def predict_heads(
+    mp: MultiOutputPosterior, x_star: jax.Array, *, backend: str = "xla"
+) -> tuple[jax.Array, jax.Array]:
+    """Posterior marginals of every head at ``x_star``: (mu, var) with
+    ``mu`` (S, M, m) and ``var`` (S, m) — variance shared across heads
+    (common factor + amplitude). The expensive pieces (cross-gram and the
+    triangular solve) are computed once and amortized over the M heads."""
+    base = mp.base
+    batched = base.chol.ndim == 3
+    chol = base.chol if batched else base.chol[None]
+    params = (
+        base.params
+        if batched
+        else jax.tree.map(lambda p: p[None], base.params)
+    )
+
+    def one(chol_s, alphas_s, params_s):
+        k_star = gram(base.x_train, x_star, params_s, backend=backend)  # (n, m)
+        k_star = k_star * base.mask[:, None].astype(k_star.dtype)
+        mu = alphas_s @ k_star  # (M, m)
+        v = jax.scipy.linalg.solve_triangular(chol_s, k_star, lower=True)
+        amp2 = jnp.exp(2.0 * params_s.log_amplitude)
+        var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0), 1e-12)
+        return mu, var
+
+    return jax.vmap(one)(chol, mp.alphas, params)

@@ -23,7 +23,18 @@ history, so per-decision cost grew with the job instead of being amortized.
     (see ``repro.core.gp.incremental``) instead of refactorizing.
 
 Rows are append-only and live rows always form a prefix, which is the
-invariant the rank-1 Cholesky append relies on.
+invariant the rank-1 Cholesky append relies on. (The one sanctioned
+exception is ``delete_own`` — an explicit history correction — which shifts
+the suffix up so the prefix invariant holds again immediately; the GP layer
+mirrors it with a rank-1 Cholesky *downdate*.)
+
+Multi-metric jobs (``repro.core.multimetric``): constructed with a
+``MetricSet`` of M metrics, the store grows an (n × M) Y block — column 0
+(the primary objective) lives in the same ``_y`` array the single-metric
+engine reads, so the M=1 case is byte-for-byte today's store; columns
+1..M−1 live in a parallel ``_yx`` block with per-metric running
+standardization. Warm-start parents carry objective values only, so parent
+folding is refused for M > 1 (constraint heads cannot impute parent rows).
 """
 
 from __future__ import annotations
@@ -66,10 +77,19 @@ class ObservationStore:
         space: SearchSpace,
         warm_start=None,
         capacity_floor: int = 8,
+        metrics=None,
     ):
         self.space = space
+        self.metrics = metrics  # Optional[MetricSet]; None ⇒ single metric
+        m_extra = 0 if metrics is None else metrics.num_metrics - 1
         d = space.encoded_dim
         if warm_start is not None and getattr(warm_start, "num_parents", 0) > 0:
+            if m_extra > 0:
+                raise ValueError(
+                    "warm-start parents carry objective values only; a "
+                    "multi-metric store (M > 1) cannot fold them (no data "
+                    "for the constraint/extra-objective heads)"
+                )
             px, pz, _, _ = warm_start.export(space)
         else:
             px = np.zeros((0, d))
@@ -78,6 +98,8 @@ class ObservationStore:
         cap = bucket_size(max(capacity_floor, self._num_parents))
         self._x = np.zeros((cap, d), dtype=np.float64)
         self._y = np.zeros((cap,), dtype=np.float64)
+        # metric columns 1..M−1 (column 0 *is* ``_y``): own rows only.
+        self._yx = np.zeros((cap, m_extra), dtype=np.float64)
         self._x[: self._num_parents] = px
         self._y[: self._num_parents] = pz
         self._n_own = 0
@@ -106,6 +128,10 @@ class ObservationStore:
     def num_pending(self) -> int:
         return len(self._pending)
 
+    @property
+    def num_metrics(self) -> int:
+        return 1 if self.metrics is None else self.metrics.num_metrics
+
     # ------------------------------------------------------------ mutation
     def push(self, config: Mapping[str, Any], y: float) -> bool:
         """Append one finished observation. Non-finite objectives are dropped
@@ -113,6 +139,11 @@ class ObservationStore:
         return self.push_encoded(self.space.encode(config), y)
 
     def push_encoded(self, x: np.ndarray, y: float) -> bool:
+        if self.num_metrics > 1:
+            raise ValueError(
+                "multi-metric store: push the full metric vector "
+                "(push_metrics / push_vector_encoded), not a bare objective"
+            )
         y = float(y)
         if not math.isfinite(y):
             return False
@@ -124,13 +155,76 @@ class ObservationStore:
         self._n_own += 1
         return True
 
+    def push_metrics(self, config: Mapping[str, Any], values: Mapping[str, float]) -> bool:
+        """Append one finished observation from a named metric dict (signed
+        through the ``MetricSet`` into the engine's minimize convention).
+        Raises ``KeyError`` on a missing metric name; any non-finite metric
+        value drops the whole row (a partial row would shift one head's
+        standardization against the others)."""
+        if self.metrics is None:
+            raise ValueError("store has no MetricSet; use push(config, y)")
+        return self.push_vector_encoded(
+            self.space.encode(config), self.metrics.signed_vector(values)
+        )
+
+    def push_vector_encoded(self, x: np.ndarray, yvec: np.ndarray) -> bool:
+        """Append one encoded row with its full signed metric vector (M,)."""
+        yvec = np.asarray(yvec, dtype=np.float64).reshape(-1)
+        if yvec.shape[0] != self.num_metrics:
+            raise ValueError(
+                f"expected {self.num_metrics} metric values, got {yvec.shape[0]}"
+            )
+        if self.num_metrics == 1:
+            return self.push_encoded(x, float(yvec[0]))
+        if not np.all(np.isfinite(yvec)):
+            return False
+        n = self.num_observations
+        if n >= self._x.shape[0]:
+            self._grow(bucket_size(n + 1))
+        self._x[n] = x
+        self._y[n] = yvec[0]
+        self._yx[n] = yvec[1:]
+        self._n_own += 1
+        return True
+
+    def rewrite_own_y(self, own_index: int, y: float) -> None:
+        """Objective-value correction of an own row (x unchanged). No GP
+        factor update is needed: the factorization depends only on X, and
+        targets re-standardize + alpha-refresh on every decision anyway."""
+        y = float(y)
+        if not math.isfinite(y):
+            raise ValueError("corrected objective must be finite")
+        if not 0 <= own_index < self._n_own:
+            raise IndexError(f"own row {own_index} out of range [0, {self._n_own})")
+        self._y[self._num_parents + own_index] = y
+
+    def delete_own(self, own_index: int) -> np.ndarray:
+        """Remove this job's own row ``own_index`` (0-based among own rows) —
+        an explicit history correction. The suffix shifts up so live rows
+        stay a prefix; returns the encoded x of the removed row (what the GP
+        layer needs to mirror the deletion with a rank-1 downdate)."""
+        if not 0 <= own_index < self._n_own:
+            raise IndexError(f"own row {own_index} out of range [0, {self._n_own})")
+        row = self._num_parents + own_index
+        n = self.num_observations
+        removed = self._x[row].copy()
+        self._x[row : n - 1] = self._x[row + 1 : n]
+        self._y[row : n - 1] = self._y[row + 1 : n]
+        self._yx[row : n - 1] = self._yx[row + 1 : n]
+        self._x[n - 1] = 0.0
+        self._y[n - 1] = 0.0
+        self._yx[n - 1] = 0.0
+        self._n_own -= 1
+        return removed
+
     def _grow(self, cap: int) -> None:
         d = self._x.shape[1]
         x = np.zeros((cap, d), dtype=np.float64)
         y = np.zeros((cap,), dtype=np.float64)
+        yx = np.zeros((cap, self._yx.shape[1]), dtype=np.float64)
         n = self.num_observations
-        x[:n], y[:n] = self._x[:n], self._y[:n]
-        self._x, self._y = x, y
+        x[:n], y[:n], yx[:n] = self._x[:n], self._y[:n], self._yx[:n]
+        self._x, self._y, self._yx = x, y, yx
 
     def mark_pending(self, key: Hashable, config: Mapping[str, Any]) -> None:
         self._pending[key] = (dict(config), self.space.encode(config))
@@ -188,6 +282,43 @@ class ObservationStore:
         scale = std if std > _STD_FLOOR else 1.0
         return self._x[:n], (y - mean) / scale, mean, scale
 
+    def metric_matrix(self) -> np.ndarray:
+        """Signed (minimize-convention) raw metric values of the own rows:
+        (n_own, M). Column 0 is the objective. Copy, safe to mutate."""
+        npar, n = self._num_parents, self.num_observations
+        out = np.empty((self._n_own, self.num_metrics), dtype=np.float64)
+        out[:, 0] = self._y[npar:n]
+        if self.num_metrics > 1:
+            out[:, 1:] = self._yx[npar:n]
+        return out
+
+    def standardized_metrics(
+        self,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(X_view, Y_std, means, scales) for the multi-metric engine:
+        Y_std is (n, M) with every column independently z-scored over the
+        own rows. Column 0 is numerically identical to ``standardized()``'s
+        vector (multi-metric stores hold no parent rows, so the combined
+        standardization degenerates to the own-row z-score)."""
+        n = self.num_observations
+        m = self.num_metrics
+        means = np.zeros(m)
+        scales = np.ones(m)
+        x_view, y0, means[0], scales[0] = self.standardized()
+        ystd = np.empty((n, m), dtype=np.float64)
+        ystd[:, 0] = y0
+        for j in range(1, m):
+            col = np.ascontiguousarray(self._yx[self._num_parents : n, j - 1])
+            if len(col):
+                mean = float(col.mean())
+                std = float(col.std())
+                scale = std if std > _STD_FLOOR else 1.0
+            else:
+                mean, scale = 0.0, 1.0
+            means[j], scales[j] = mean, scale
+            ystd[:, j] = (col - mean) / scale
+        return x_view, ystd, means, scales
+
     # -------------------------------------------------------------- export
     def history_pairs(self) -> List[Observation]:
         """Decoded (config, objective) pairs in the seed suggester-history
@@ -218,20 +349,26 @@ class ObservationStore:
         from repro.core.gp.serialize import array_fingerprint
 
         n = self.num_observations
-        return (
+        fp = (
             f"{self._num_parents}:{self.num_pending}:"
             f"{array_fingerprint(self._x[:n])}:{array_fingerprint(self._y[:n])}"
         )
+        if self.num_metrics > 1:
+            fp += f":{array_fingerprint(self._yx[:n])}"
+        return fp
 
     # ---------------------------------------------------------- persistence
     def state_dict(self) -> Dict[str, Any]:
         """Own rows only: parents are reconstructed from the warm-start pool
         (which checkpoints separately), pending from the trial table."""
         npar, n = self._num_parents, self.num_observations
-        return {
+        state = {
             "own_x": self._x[npar:n].tolist(),
             "own_y": self._y[npar:n].tolist(),
         }
+        if self.num_metrics > 1:
+            state["own_yx"] = self._yx[npar:n].tolist()
+        return state
 
     def snapshot(self) -> Dict[str, Any]:
         """Complete, self-contained wire image of the store: parent rows
@@ -249,7 +386,7 @@ class ObservationStore:
         from repro.core.gp.serialize import array_to_wire
 
         npar, n = self._num_parents, self.num_observations
-        return {
+        snap = {
             "parent_x": array_to_wire(self._x[:npar]),
             "parent_y": array_to_wire(self._y[:npar]),
             "own_x": array_to_wire(self._x[npar:n]),
@@ -259,6 +396,9 @@ class ObservationStore:
                 for key, (cfg, x) in self._pending.items()
             ],
         }
+        if self.num_metrics > 1:
+            snap["own_yx"] = array_to_wire(self._yx[npar:n])
+        return snap
 
     def load_snapshot(self, snap: Mapping[str, Any]) -> None:
         """Replace the store's entire contents with ``snapshot()`` output —
@@ -268,23 +408,37 @@ class ObservationStore:
         px = array_from_wire(snap["parent_x"])
         pz = array_from_wire(snap["parent_y"])
         d = self.space.encoded_dim
+        m_extra = self.num_metrics - 1
         self._num_parents = int(px.shape[0])
         cap = bucket_size(max(8, self._num_parents))
         self._x = np.zeros((cap, d), dtype=np.float64)
         self._y = np.zeros((cap,), dtype=np.float64)
+        self._yx = np.zeros((cap, m_extra), dtype=np.float64)
         self._x[: self._num_parents] = px.reshape(-1, d)
         self._y[: self._num_parents] = pz
         self._n_own = 0
         self._pending = {}
         own_x = array_from_wire(snap["own_x"]).reshape(-1, d)
         own_y = array_from_wire(snap["own_y"])
-        for x, y in zip(own_x, own_y):
-            self.push_encoded(x, float(y))
+        if m_extra > 0:
+            own_yx = array_from_wire(snap["own_yx"]).reshape(-1, m_extra)
+            for x, y, yx in zip(own_x, own_y, own_yx):
+                self.push_vector_encoded(x, np.concatenate(([y], yx)))
+        else:
+            for x, y in zip(own_x, own_y):
+                self.push_encoded(x, float(y))
         for key, cfg, x in snap["pending"]:
             self._pending[key] = (dict(cfg), array_from_wire(x))
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
         self._n_own = 0
         self._pending.clear()
+        if self.num_metrics > 1:
+            for x, y, yx in zip(state["own_x"], state["own_y"], state["own_yx"]):
+                self.push_vector_encoded(
+                    np.asarray(x, dtype=np.float64),
+                    np.concatenate(([float(y)], np.asarray(yx, dtype=np.float64))),
+                )
+            return
         for x, y in zip(state["own_x"], state["own_y"]):
             self.push_encoded(np.asarray(x, dtype=np.float64), float(y))

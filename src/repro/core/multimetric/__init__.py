@@ -1,0 +1,32 @@
+"""Multi-metric decision subsystem: constrained + Pareto tuning on
+shared-factor multi-output GPs.
+
+Public surface:
+    MetricSpec / MetricSet           — declaring a job's named metrics
+    constrained_ei / scalarized_ei /
+    feasibility_weight               — closed-form multi-head acquisitions
+    pareto_mask / hypervolume        — front tracking + scoring
+
+The GP layer lives in ``repro.core.gp.multi`` (``MultiOutputPosterior``);
+the engine integration in ``repro.core.suggest`` (M>1 decision path); the
+workflow surface in ``repro.core.tuner`` (``TuningJobConfig.metrics``,
+``TuningResult.pareto_front``). See ``docs/multimetric.md``.
+"""
+
+from repro.core.multimetric.spec import MetricSet, MetricSpec
+from repro.core.multimetric.acquisition import (
+    constrained_ei,
+    feasibility_weight,
+    scalarized_ei,
+)
+from repro.core.multimetric.pareto import hypervolume, pareto_mask
+
+__all__ = [
+    "MetricSpec",
+    "MetricSet",
+    "constrained_ei",
+    "feasibility_weight",
+    "scalarized_ei",
+    "pareto_mask",
+    "hypervolume",
+]

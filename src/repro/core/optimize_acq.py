@@ -36,7 +36,13 @@ import jax.numpy as jnp
 from repro.core import acquisition as A
 from repro.core.gp.gp import GPPosterior, predict
 
-__all__ = ["AcqOptConfig", "optimize_acquisition"]
+__all__ = [
+    "AcqOptConfig",
+    "MultiAcqSpec",
+    "MultiMetricHead",
+    "optimize_acquisition",
+    "optimize_acquisition_multi",
+]
 
 
 class AcqOptConfig(NamedTuple):
@@ -85,33 +91,14 @@ def _acq_values(
     return A.integrate_over_samples(vals)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def optimize_acquisition(
-    post: GPPosterior,
-    anchors: jax.Array,  # (num_anchors, d) Sobol points in the unit cube
-    y_best: jax.Array,  # scalar: best standardized observation
-    pending: jax.Array,  # (p, d) encoded pending candidates (may be padding)
-    pending_mask: jax.Array,  # (p,) bool
-    key: jax.Array,
-    cfg: AcqOptConfig = AcqOptConfig(),
+def _refine_and_rank(
+    masked_acq,
+    anchors: jax.Array,
+    cfg: AcqOptConfig,
 ) -> tuple[jax.Array, jax.Array]:
-    """Return (candidates, acq_values): (num_refine, d) refined points sorted
-    best-first, with pending-exclusion applied."""
-    k_ts, _ = jax.random.split(key)
-
-    def masked_acq(x: jax.Array, differentiable: bool = False) -> jax.Array:
-        vals = _acq_values(post, x, y_best, cfg, k_ts, differentiable=differentiable)
-        if pending.shape[0] > 0:
-            # L∞ distance to every pending point
-            dists = jnp.max(
-                jnp.abs(x[:, None, :] - pending[None, :, :]), axis=-1
-            )  # (m, p)
-            near = jnp.any(
-                (dists < cfg.exclusion_radius) & pending_mask[None, :], axis=-1
-            )
-            vals = jnp.where(near, -jnp.inf, vals)
-        return vals
-
+    """Shared stage 2–4 of the pipeline: top-k anchors → projected-Adam
+    ascent on the (masked) acquisition → re-rank. ``masked_acq(x,
+    differentiable)`` scores (m, d) → (m,), larger is better."""
     anchor_vals = masked_acq(anchors)  # (num_anchors,)
     top_idx = jax.lax.top_k(anchor_vals, cfg.num_refine)[1]
     x0 = anchors[top_idx]  # (num_refine, d)
@@ -149,3 +136,127 @@ def optimize_acquisition(
     final_v = jnp.where(use_ref, ref_vals, anchor_vals[top_idx])
     order = jnp.argsort(-final_v)
     return final_x[order], final_v[order]
+
+
+def _pending_masked(score, pending: jax.Array, pending_mask: jax.Array,
+                    cfg: AcqOptConfig):
+    """Wrap a scorer with the §4.4 pending-exclusion mask (L∞ radius)."""
+
+    def masked_acq(x: jax.Array, differentiable: bool = False) -> jax.Array:
+        vals = score(x, differentiable)
+        if pending.shape[0] > 0:
+            # L∞ distance to every pending point
+            dists = jnp.max(
+                jnp.abs(x[:, None, :] - pending[None, :, :]), axis=-1
+            )  # (m, p)
+            near = jnp.any(
+                (dists < cfg.exclusion_radius) & pending_mask[None, :], axis=-1
+            )
+            vals = jnp.where(near, -jnp.inf, vals)
+        return vals
+
+    return masked_acq
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def optimize_acquisition(
+    post: GPPosterior,
+    anchors: jax.Array,  # (num_anchors, d) Sobol points in the unit cube
+    y_best: jax.Array,  # scalar: best standardized observation
+    pending: jax.Array,  # (p, d) encoded pending candidates (may be padding)
+    pending_mask: jax.Array,  # (p,) bool
+    key: jax.Array,
+    cfg: AcqOptConfig = AcqOptConfig(),
+) -> tuple[jax.Array, jax.Array]:
+    """Return (candidates, acq_values): (num_refine, d) refined points sorted
+    best-first, with pending-exclusion applied."""
+    k_ts, _ = jax.random.split(key)
+
+    def score(x: jax.Array, differentiable: bool) -> jax.Array:
+        return _acq_values(post, x, y_best, cfg, k_ts,
+                           differentiable=differentiable)
+
+    masked_acq = _pending_masked(score, pending, pending_mask, cfg)
+    return _refine_and_rank(masked_acq, anchors, cfg)
+
+
+class MultiAcqSpec(NamedTuple):
+    """Static (hashable) shape of a multi-metric acquisition problem —
+    jointly with ``AcqOptConfig`` this keys the jit cache."""
+
+    mode: str  # "constrained" | "pareto"
+    num_objectives: int
+    num_constraints: int
+
+
+class MultiMetricHead(NamedTuple):
+    """Per-decision array state of the multi-metric acquisition (a pytree,
+    traced): everything beyond the shared-factor posterior that the scorer
+    needs. Objectives lead, constraints trail (the ``MetricSet`` order).
+
+    ``weights``/``y_best_w`` are the random-scalarization draws of Pareto
+    mode and are empty (W=0) in constrained mode; ``y_best``/``has_feasible``
+    drive constrained EI and are ignored in Pareto mode."""
+
+    alphas: jax.Array  # (S, M, n) all-head K̃⁻¹y (head 0 = objective)
+    t_std: jax.Array  # (C,) standardized signed constraint thresholds
+    y_best: jax.Array  # () best *feasible* standardized objective
+    has_feasible: jax.Array  # () bool: feasible incumbent exists
+    weights: jax.Array  # (W, K) simplex scalarization draws
+    y_best_w: jax.Array  # (W,) best observed scalarized value per draw
+
+
+def _acq_values_multi(
+    post: GPPosterior,
+    head: MultiMetricHead,
+    x: jax.Array,
+    cfg: AcqOptConfig,
+    spec: MultiAcqSpec,
+    *,
+    differentiable: bool = False,
+) -> jax.Array:
+    """Integrated multi-metric acquisition at x: (m, d) → (m,). The fused
+    Pallas multi-head scorer serves the dense anchor sweep; gradient
+    refinement always goes through the jnp composition (jax.grad)."""
+    from repro.core.gp.multi import MultiOutputPosterior, predict_heads
+    from repro.core.multimetric.acquisition import constrained_ei, scalarized_ei
+
+    if cfg.backend == "pallas" and not differentiable:
+        from repro.kernels.acq_score.ops import acq_score_multi
+
+        vals = acq_score_multi(post, head, x, mode=spec.mode, backend="pallas")
+        return A.integrate_over_samples(vals)
+    mp = MultiOutputPosterior(post, head.alphas)
+    mu, var = predict_heads(
+        mp, x, backend="xla" if differentiable else cfg.backend
+    )
+    if spec.mode == "constrained":
+        vals = constrained_ei(mu, var, head.y_best, head.t_std, head.has_feasible)
+    else:
+        vals = scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
+    return A.integrate_over_samples(vals)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec"))
+def optimize_acquisition_multi(
+    post: GPPosterior,  # shared-factor posterior (objective head resident)
+    head: MultiMetricHead,
+    anchors: jax.Array,  # (num_anchors, d) Sobol points in the unit cube
+    pending: jax.Array,  # (p, d) encoded pending candidates (may be padding)
+    pending_mask: jax.Array,  # (p,) bool
+    key: jax.Array,
+    cfg: AcqOptConfig,
+    spec: MultiAcqSpec,
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-metric analogue of ``optimize_acquisition``: same Sobol-anchor
+    → top-k → projected-Adam pipeline, scored by constrained EI or
+    random-scalarization EI over the shared-factor multi-output posterior."""
+    del key  # multi-metric modes are EI-based; no Thompson draws
+
+    def score(x: jax.Array, differentiable: bool) -> jax.Array:
+        return _acq_values_multi(
+            post, head, x, cfg, spec, differentiable=differentiable
+        )
+
+    masked_acq = _pending_masked(score, pending, pending_mask, cfg)
+    return _refine_and_rank(masked_acq, anchors, cfg)

@@ -29,12 +29,29 @@ All payloads are JSON-safe; arrays travel as exact base64 byte images
 (``repro.core.gp.serialize``), so the protocol preserves the engine's
 bit-equivalence contract end to end. See ``docs/wire_protocol.md`` for the
 full schema and the lease/heartbeat state machine.
+
+**Snapshot compression** (negotiated, never assumed): engine snapshots grow
+O(n) with the observation count, and the client baseline-refresh path
+fetches one every ``snapshot_every`` requests. ``SnapshotRequest`` carries
+``accept_codecs`` — the frame codecs the *client* can decode — and the
+server replies with the best codec both sides support (server preference:
+zstd, then zlib, then none), tagging the reply with ``codec``. A client
+that advertises nothing gets the plain JSON object. Note what this
+negotiation is and is not: it is a *capability* negotiation between
+same-protocol-version peers — one side missing the optional ``zstandard``
+module (gated; this container lacks it) still interoperates, falling back
+to zlib or plain JSON — not cross-version compatibility; peers at a
+different ``PROTOCOL_VERSION`` are still refused at decode time like any
+other message. Compression wraps the *already exact* JSON bytes, so the
+bit-equivalence contract is untouched.
 """
 
 from __future__ import annotations
 
+import base64
 import dataclasses
 import json
+import zlib
 from typing import Any, Dict, List, Optional, Type, Union
 
 from repro.core.gp.empirical_bayes import EmpiricalBayesConfig
@@ -66,14 +83,74 @@ __all__ = [
     "decode_message",
     "bo_config_to_wire",
     "bo_config_from_wire",
+    "available_snapshot_codecs",
+    "encode_snapshot_frame",
+    "decode_snapshot_frame",
 ]
 
 #: Message-schema version. Bumped on any incompatible change to the
 #: dataclasses below; peers at different versions refuse each other.
-PROTOCOL_VERSION = 1
+#: v2: multi-metric fields (``RegisterRequest.metric_specs``,
+#: ``ObserveRequest.ys``) + snapshot-compression negotiation
+#: (``SnapshotRequest.accept_codecs`` / ``SnapshotReply.codec``).
+PROTOCOL_VERSION = 2
 
 #: Engine-snapshot schema version (``SelectionService.snapshot_job`` output).
-ENGINE_SNAPSHOT_VERSION = 1
+#: v2: ``metrics`` (the job's MetricSpec list) + the store's ``own_yx``
+#: metric block.
+ENGINE_SNAPSHOT_VERSION = 2
+
+
+# --------------------------------------------------------------------------
+# snapshot frame compression (capability-negotiated)
+# --------------------------------------------------------------------------
+
+try:  # optional dependency — gated, never required
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - environment-dependent
+    _zstd = None
+
+
+def available_snapshot_codecs() -> List[str]:
+    """Frame codecs this process can encode *and* decode, in server
+    preference order. ``zstd`` appears only when the optional ``zstandard``
+    module is importable; ``zlib`` (stdlib) is always available."""
+    codecs = []
+    if _zstd is not None:
+        codecs.append("zstd")
+    codecs.append("zlib")
+    return codecs
+
+
+def encode_snapshot_frame(snapshot: Dict[str, Any], codec: str) -> str:
+    """Compress a snapshot object into a base64 frame with ``codec``
+    (``"zstd"`` | ``"zlib"``). The JSON bytes inside the frame are the same
+    exact encoding the plain path ships, so decompress→parse is
+    bit-equivalent to never compressing."""
+    raw = json.dumps(snapshot, separators=(",", ":")).encode("utf-8")
+    if codec == "zstd":
+        if _zstd is None:
+            raise ValueError("zstd codec unavailable in this process")
+        comp = _zstd.ZstdCompressor().compress(raw)
+    elif codec == "zlib":
+        comp = zlib.compress(raw, level=6)
+    else:
+        raise ValueError(f"unknown snapshot codec {codec!r}")
+    return base64.b64encode(comp).decode("ascii")
+
+
+def decode_snapshot_frame(frame: str, codec: str) -> Dict[str, Any]:
+    """Inverse of ``encode_snapshot_frame``."""
+    comp = base64.b64decode(frame)
+    if codec == "zstd":
+        if _zstd is None:
+            raise ValueError("zstd codec unavailable in this process")
+        raw = _zstd.ZstdDecompressor().decompress(comp)
+    elif codec == "zlib":
+        raw = zlib.decompress(comp)
+    else:
+        raise ValueError(f"unknown snapshot codec {codec!r}")
+    return json.loads(raw)
 
 
 class ErrorCode:
@@ -126,6 +203,11 @@ class RegisterRequest:
     ``takeover_lease`` lets the *current lease holder* re-register its own
     job (checkpoint restore re-runs registration); without it, a register
     attempt against a live lease is refused with ``LEASE_HELD``.
+
+    ``metric_specs`` (``MetricSet.to_wire``) declares a multi-metric job;
+    ``capabilities`` advertises optional client features — currently
+    ``"snapshot-zstd"`` / ``"snapshot-zlib"`` (the compressed-snapshot
+    codecs this client decodes; see the module docstring).
     """
 
     TYPE = "register"
@@ -137,6 +219,8 @@ class RegisterRequest:
     fold_siblings: bool = True
     snapshot: Optional[Dict[str, Any]] = None
     takeover_lease: Optional[str] = None
+    metric_specs: Optional[List[Dict[str, Any]]] = None
+    capabilities: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -163,6 +247,9 @@ class RegisterReply:
     store_version: int = 0
     num_pending: int = 0
     store_fingerprint: Optional[str] = None
+    # server-side optional features (snapshot codecs etc.) — the client
+    # intersects these with its own to pick what to request.
+    capabilities: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,7 +280,8 @@ class ObserveRequest:
 
     ``kind`` selects the transition:
       * ``"push"`` — finished observation: encoded row ``x`` (exact byte
-        image) + objective ``y``;
+        image) + objective ``y``, or the full signed metric vector ``ys``
+        (wire image of (M,) float64) for multi-metric jobs;
       * ``"pending"`` — candidate submitted: ``key`` + decoded ``config``;
       * ``"clear"`` — candidate reached terminality: ``key``.
     """
@@ -206,6 +294,7 @@ class ObserveRequest:
     y: Optional[float] = None
     key: Any = None
     config: Optional[Dict[str, Any]] = None
+    ys: Optional[Dict[str, Any]] = None  # exact (M,) byte image, multi-metric
 
 
 @dataclasses.dataclass(frozen=True)
@@ -235,18 +324,27 @@ class HeartbeatReply:
 class SnapshotRequest:
     """Fetch the job's engine snapshot (``SelectionService.snapshot_job``).
     ``include_factors`` additionally ships the O(S·n²) posterior factor
-    blocks; by default a restoring replica rehydrates them locally."""
+    blocks; by default a restoring replica rehydrates them locally.
+    ``accept_codecs`` lists the frame codecs the client decodes (e.g.
+    ``["zstd", "zlib"]``); empty means "plain JSON only" — the server never
+    compresses toward a client that did not ask."""
 
     TYPE = "snapshot"
     job_name: str
     lease: str
     include_factors: bool = False
+    accept_codecs: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
 class SnapshotReply:
+    """``codec=None``: ``snapshot`` is the plain JSON object. Otherwise
+    ``snapshot`` is ``{"frame": <base64>}`` compressed with ``codec`` —
+    decode with ``decode_snapshot_frame``."""
+
     TYPE = "snapshot_reply"
     snapshot: Dict[str, Any]
+    codec: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -409,6 +507,8 @@ def bo_config_to_wire(cfg: BOConfig) -> Dict[str, Any]:
         "refit_every": cfg.refit_every,
         "incremental": cfg.incremental,
         "fit_backend": cfg.fit_backend,
+        "num_scalarizations": cfg.num_scalarizations,
+        "fantasy_block": cfg.fantasy_block,
     }
 
 
@@ -427,4 +527,6 @@ def bo_config_from_wire(blob: Dict[str, Any]) -> BOConfig:
         refit_every=int(blob["refit_every"]),
         incremental=bool(blob["incremental"]),
         fit_backend=blob["fit_backend"],
+        num_scalarizations=int(blob.get("num_scalarizations", 16)),
+        fantasy_block=bool(blob.get("fantasy_block", False)),
     )

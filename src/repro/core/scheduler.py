@@ -47,6 +47,9 @@ class TrialEvent(NamedTuple):
     iteration: int = 0
     value: float = float("nan")
     error: str = ""
+    # named metric dict attached to "completed" events of multi-metric jobs
+    # (objective + constraint metrics, raw per-goal values)
+    metrics: Optional[Dict[str, float]] = None
 
 
 class TrialStopRequested(Exception):
@@ -92,11 +95,23 @@ class ThreadBackend:
 
             try:
                 final = objective(dict(trial.config), report)
-                self._events.put(
-                    TrialEvent(
-                        "completed", trial.trial_id, self.now(), value=float(final)
+                if isinstance(final, dict):
+                    # multi-metric objective: a named metric dict. The tuner
+                    # resolves the objective via its MetricSet; the scalar
+                    # ``value`` channel stays NaN (there is no single value).
+                    self._events.put(
+                        TrialEvent(
+                            "completed", trial.trial_id, self.now(),
+                            metrics={k: float(v) for k, v in final.items()},
+                        )
                     )
-                )
+                else:
+                    self._events.put(
+                        TrialEvent(
+                            "completed", trial.trial_id, self.now(),
+                            value=float(final),
+                        )
+                    )
             except TrialStopRequested:
                 self._events.put(
                     TrialEvent("completed", trial.trial_id, self.now(), value=float("nan"))
@@ -138,15 +153,19 @@ class ThreadBackend:
 # Discrete-event simulator: deterministic virtual time
 # --------------------------------------------------------------------------
 class _SimTrial:
-    __slots__ = ("trial", "values", "costs", "next_iter", "stop", "fail_after")
+    __slots__ = (
+        "trial", "values", "costs", "next_iter", "stop", "fail_after",
+        "metrics",
+    )
 
-    def __init__(self, trial, values, costs, fail_after):
+    def __init__(self, trial, values, costs, fail_after, metrics=None):
         self.trial = trial
         self.values = values
         self.costs = costs
         self.next_iter = 0  # 0-based index of the next report
         self.stop = False
         self.fail_after = fail_after  # iteration index after which node dies
+        self.metrics = metrics  # named metric dict for the completion event
 
 
 class SimBackend:
@@ -185,7 +204,15 @@ class SimBackend:
         return len(self._sim)
 
     def submit(self, trial: Trial, objective: Callable) -> None:
-        values, costs = objective(dict(trial.config))
+        result = objective(dict(trial.config))
+        # 2-tuple: (curve, costs); 3-tuple additionally carries the named
+        # metric dict attached to the completion event (multi-metric jobs).
+        metrics = None
+        if len(result) == 3:
+            values, costs, metrics = result
+            metrics = {k: float(v) for k, v in metrics.items()}
+        else:
+            values, costs = result
         values = np.asarray(list(values), dtype=np.float64)
         costs = np.broadcast_to(
             np.asarray(costs, dtype=np.float64), values.shape
@@ -195,7 +222,7 @@ class SimBackend:
             frac = self.failure_fn(trial, trial.attempts)
             if frac is not None:
                 fail_after = max(0, int(np.floor(frac * len(values))))
-        st = _SimTrial(trial, values, costs, fail_after)
+        st = _SimTrial(trial, values, costs, fail_after, metrics)
         self._sim[trial.trial_id] = st
         self._pending_events.append(
             TrialEvent("started", trial.trial_id, self._clock)
@@ -234,7 +261,10 @@ class SimBackend:
             if kind == "complete":
                 del self._sim[tid]
                 final = float(st.values[-1]) if len(st.values) else float("nan")
-                return TrialEvent("completed", tid, self._clock, value=final)
+                return TrialEvent(
+                    "completed", tid, self._clock, value=final,
+                    metrics=st.metrics,
+                )
             # kind == "report"
             i = st.next_iter
             value = float(st.values[i])

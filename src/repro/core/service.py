@@ -307,6 +307,11 @@ class JobHandle:
         through its own store reference instead)."""
         return self.store.push(config, y)
 
+    def observe_metrics(self, config, values) -> bool:
+        """Record a finished observation of a multi-metric job from its
+        named metric dict (direct-drive API)."""
+        return self.store.push_metrics(config, values)
+
 
 class SelectionService:
     """Multiplexes N concurrent tuning jobs over shared decision-engine
@@ -342,6 +347,7 @@ class SelectionService:
         seed: int = 0,
         warm_start: Optional[WarmStartPool] = None,
         fold_siblings: bool = True,
+        metrics=None,
     ) -> JobHandle:
         """Register (or re-register, e.g. after a checkpoint restore) a
         tuning job. Creates the job's observation store (sibling + user
@@ -352,6 +358,12 @@ class SelectionService:
         ``fold_siblings=False`` skips the automatic sibling fold — used on
         restore, where the checkpointed warm-start pool already contains the
         sibling parents captured at original registration.
+
+        ``metrics`` (a ``repro.core.multimetric.MetricSet``) declares a
+        multi-metric job. M > 1 jobs take no warm-start parents (parents
+        carry objective values only — there is nothing to fold into the
+        constraint heads), but their *objective* column still feeds sibling
+        warm-start of single-metric jobs in the group.
         """
         sig = space_signature(space)
         group = self._groups.get(sig)
@@ -360,8 +372,14 @@ class SelectionService:
         if name in self._jobs:  # re-registration replaces the old entry
             self._unregister(name)
 
+        multi = metrics is not None and metrics.num_metrics > 1
+        if multi and warm_start is not None and warm_start.num_parents > 0:
+            raise ValueError(
+                "multi-metric jobs cannot take warm-start parents (parent "
+                "histories carry objective values only)"
+            )
         pools: List[Optional[WarmStartPool]] = [warm_start]
-        if fold_siblings and self.config.sibling_warm_start:
+        if fold_siblings and self.config.sibling_warm_start and not multi:
             sib = WarmStartPool()
             for sibling_name in group.jobs:
                 pairs = self._jobs[sibling_name].store.own_pairs()
@@ -370,8 +388,10 @@ class SelectionService:
             pools.append(sib)
         combined = WarmStartPool.merged(*[p for p in pools if p is not None])
         warm_pool = combined if combined.num_parents > 0 else None
+        if multi:
+            warm_pool = None
 
-        store = ObservationStore(space, warm_start=warm_pool)
+        store = ObservationStore(space, warm_start=warm_pool, metrics=metrics)
         cache = EngineCache(
             pool=group.pool if self.config.share_gphp else None,
             arena=self.arena,
@@ -440,12 +460,14 @@ class SelectionService:
                     "snapshots require the BOSuggester state surface"
                 )
         cache = sugg.cache
+        metrics = getattr(handle.store, "metrics", None)
         return {
             "snapshot_version": ENGINE_SNAPSHOT_VERSION,
             "job_name": name,
             "space": handle.space.to_spec(),
             "bo_config": bo_config_to_wire(sugg.config),
             "seed": sugg.seed,
+            "metrics": None if metrics is None else metrics.to_wire(),
             "service": {
                 "share_gphp": self.config.share_gphp,
                 "sibling_warm_start": self.config.sibling_warm_start,
@@ -514,6 +536,8 @@ class SelectionService:
         if snap.get("warm_pool"):
             warm_pool = WarmStartPool()
             warm_pool.load_state_dict(snap["warm_pool"])
+        from repro.core.multimetric import MetricSet
+
         handle = self.register_job(
             snap["job_name"],
             space,
@@ -521,6 +545,7 @@ class SelectionService:
             seed=int(snap["seed"]),
             warm_start=warm_pool,
             fold_siblings=False,  # the snapshot's parent rows are authoritative
+            metrics=MetricSet.from_wire(snap.get("metrics")),
         )
         handle.store.load_snapshot(snap["store"])
         handle.suggester.load_state_dict(snap["suggester"])

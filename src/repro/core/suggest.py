@@ -61,6 +61,8 @@ from repro.core.gp.fit import map_gphps, mcmc_gphps
 from repro.core.gp.incremental import (
     grow_posterior,
     posterior_append,
+    posterior_append_block,
+    posterior_delete,
     refresh_alpha,
 )
 from repro.core.gp.slice_sampler import (
@@ -69,7 +71,13 @@ from repro.core.gp.slice_sampler import (
     SliceSamplerConfig,
 )
 from repro.core.history import ObservationStore, bucket_size
-from repro.core.optimize_acq import AcqOptConfig, optimize_acquisition
+from repro.core.optimize_acq import (
+    AcqOptConfig,
+    MultiAcqSpec,
+    MultiMetricHead,
+    optimize_acquisition,
+    optimize_acquisition_multi,
+)
 from repro.core.search_space import SearchSpace
 from repro.core.sobol import SobolSequence
 
@@ -116,6 +124,10 @@ class BOConfig:
     # acq.backend and reset to None, so a later dataclasses.replace(acq=...)
     # is never stomped by a stale shorthand
     fit_backend: str = "xla"  # gram backend for GPHP fitting/factorization
+    num_scalarizations: int = 16  # Pareto mode: simplex weight draws/decision
+    fantasy_block: bool = False  # fold the pending set with one rank-k
+    # blocked append instead of k rank-1 borders ("liar" strategy only);
+    # off by default to keep the fantasy fold bit-identical to PR 1
 
     def __post_init__(self):
         if self.backend is not None:
@@ -282,6 +294,8 @@ class BOSuggester:
         self._chain_state: Optional[np.ndarray] = None
         # --- incremental-engine caches -----------------------------------
         self._store: Optional[ObservationStore] = store
+        if store is not None:
+            self._check_multimetric_config(store)
         self._wrapper_store: Optional[ObservationStore] = None
         self._wrapper_fps: List[Tuple[float, bytes]] = []
         # the cache block is an object of its own so a SelectionService can
@@ -303,11 +317,23 @@ class BOSuggester:
         return sub
 
     # ----------------------------------------------------------- store glue
+    def _check_multimetric_config(self, store: ObservationStore) -> None:
+        """Reject config/store combinations the multi-metric decision path
+        cannot serve — at bind time, not after the cold-start trials have
+        already spent their budget."""
+        ms = getattr(store, "metrics", None)
+        if ms is not None and ms.num_metrics > 1 and self.config.acq.acq != "ei":
+            raise ValueError(
+                "multi-metric jobs support acq='ei' only (constrained EI / "
+                f"random-scalarization EI), got {self.config.acq.acq!r}"
+            )
+
     def bind_store(self, store: ObservationStore) -> None:
         """Attach the engine to a live observation store (the Tuner does this
         at construction and after restore). Cached GPHP samples survive a
         rebind — the cadence state may have been checkpoint-restored — but
         the factorization is rebuilt lazily against the new store."""
+        self._check_multimetric_config(store)
         self._store = store
         self.cache.invalidate_factors()
 
@@ -327,8 +353,19 @@ class BOSuggester:
 
     def _sync_wrapper_store(self, history: Sequence[Observation]) -> ObservationStore:
         """Mirror a caller-owned history list into a private store. Append-only
-        callers hit the incremental path; any rewrite of already-seen entries
-        falls back to a fresh store + full refit (stateless semantics)."""
+        callers hit the incremental path. Two rewrite shapes stay incremental
+        too (history *corrections*, the ROADMAP rank-1-downdate item):
+
+          * objective values rewritten at unchanged inputs — the Cholesky
+            factor depends only on X, so the cached factorization survives
+            and only the store targets are rewritten (alpha refreshes every
+            decision anyway);
+          * exactly one entry deleted — the store drops the row and the
+            cached factor takes a rank-1 *downdate* (``posterior_delete``,
+            O(S·n²)) instead of a from-scratch refit.
+
+        Anything else falls back to a fresh store + full refit (the seed's
+        stateless semantics)."""
         fps: List[Tuple[float, bytes]] = []
         entries: List[Tuple[np.ndarray, float]] = []
         for cfg_, y in history:
@@ -339,14 +376,57 @@ class BOSuggester:
         if not fresh and fps[: len(self._wrapper_fps)] == self._wrapper_fps:
             tail = entries[len(self._wrapper_fps):]
         else:
-            if not fresh:  # prefix rewritten: cached state describes stale data
-                self.reset_cache()
-            self._wrapper_store = ObservationStore(self.space)
-            tail = entries
+            tail = None if fresh else self._try_incremental_rewrite(fps, entries)
+            if tail is None:
+                if not fresh:  # unrecognized rewrite: cached state is stale
+                    self.reset_cache()
+                self._wrapper_store = ObservationStore(self.space)
+                tail = entries
         for x, y in tail:
             self._wrapper_store.push_encoded(x, y)
         self._wrapper_fps = fps
         return self._wrapper_store
+
+    def _try_incremental_rewrite(
+        self,
+        fps: List[Tuple[float, bytes]],
+        entries: List[Tuple[np.ndarray, float]],
+    ) -> Optional[List[Tuple[np.ndarray, float]]]:
+        """Recognize a correction-shaped history rewrite (see
+        ``_sync_wrapper_store``); returns the append tail on success, None to
+        fall back to the stateless rebuild. Only histories whose rows all
+        reached the store (every objective finite) are eligible — dropped
+        rows would desynchronize fps indices from store rows."""
+        import math
+
+        old = self._wrapper_fps
+        if any(not math.isfinite(y) for y, _ in old) or any(
+            not math.isfinite(y) for y, _ in fps
+        ):
+            return None
+        # --- objective-only rewrite: same inputs, some targets changed ------
+        if len(fps) >= len(old) and all(
+            fps[i][1] == old[i][1] for i in range(len(old))
+        ):
+            for i in range(len(old)):
+                if fps[i][0] != old[i][0]:
+                    self._wrapper_store.rewrite_own_y(i, fps[i][0])
+            return entries[len(old):]
+        # --- single deletion: old == new with one row removed ---------------
+        cache = self.cache
+        if (
+            len(fps) >= len(old) - 1
+            and cache.post is not None
+            and cache.token in (None, id(self._wrapper_store))
+            and cache.n == len(old)
+        ):
+            for i in range(len(old)):
+                if old[:i] == fps[:i] and old[i + 1 :] == fps[i : len(old) - 1]:
+                    self._wrapper_store.delete_own(i)
+                    cache.post = posterior_delete(cache.post, i)
+                    cache.n -= 1
+                    return entries[len(old) - 1 :]
+        return None
 
     # ------------------------------------------------------------- main api
     def suggest(
@@ -389,6 +469,12 @@ class BOSuggester:
                 out.append(config)
             return out
 
+        ms = getattr(store, "metrics", None)
+        if ms is not None and ms.num_metrics > 1:
+            # multi-metric jobs branch off *after* the shared cold start; the
+            # M=1 declaration never reaches here (bit-identical single path).
+            return self._decide_multi(store, k, pend_np, ms)
+
         x_all, y_std, _, _ = store.standardized()
         post = self._posterior_for(store, x_all, y_std)
         size = post.x_train.shape[0]
@@ -406,8 +492,18 @@ class BOSuggester:
         work = post
         y_work = list(y_live[: n])
         if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
-            for xp in pend_np:
-                work, y_work = self._fantasy_append(work, y_work, xp)
+            if (
+                cfg.fantasy_block
+                and cfg.pending_strategy == "liar"
+                and len(pend_np) > 1
+            ):
+                # rank-k blocked border: one O(k·n²) solve instead of k
+                # sequential rank-1 borders (valid for the constant liar —
+                # fantasy values don't depend on earlier fantasies).
+                work, y_work = self._fantasy_append_block(work, y_work, pend_np)
+            else:
+                for xp in pend_np:
+                    work, y_work = self._fantasy_append(work, y_work, xp)
         elif len(pend_np) > 0:
             n_excl = min(len(pend_np), cfg.max_pending)
             pend_buf[:n_excl] = pend_np[:n_excl]
@@ -446,6 +542,190 @@ class BOSuggester:
                     n_excl += 1
         self.cache.touched()  # LRU bump + arena budget enforcement
         return out
+
+    # ------------------------------------------------- multi-metric decisions
+    def _decide_multi(
+        self, store: ObservationStore, k: int, pend_np: np.ndarray, ms
+    ) -> List[Dict[str, Any]]:
+        """One batched decision for an M>1 job (``repro.core.multimetric``).
+
+        The objective head (metric column 0) drives the exact single-metric
+        machinery — GPHP fitting, the cached factor, rank-1 appends, the
+        refit cadence — so the shared-factor invariants (snapshots, arena
+        eviction, pool adoption) are untouched. The extra heads cost M−1
+        triangular solves against that cached factor per decision
+        (``solve_head_alphas``) plus one matvec per head inside scoring."""
+        from repro.core.gp.multi import solve_head_alphas
+
+        cfg = self.config
+        space = self.space
+        if cfg.acq.acq != "ei":
+            raise ValueError(
+                "multi-metric jobs support acq='ei' only (constrained EI / "
+                f"random-scalarization EI), got {cfg.acq.acq!r}"
+            )
+        n = store.num_observations
+        m_all = ms.num_metrics
+        num_con = ms.num_constraints
+        num_obj = ms.num_objectives
+
+        x_all, ystd, means, scales = store.standardized_metrics()
+        post = self._posterior_for(
+            store, x_all, np.ascontiguousarray(ystd[:, 0])
+        )
+        size = post.x_train.shape[0]
+        y_live = np.zeros(size)
+        y_live[:n] = ystd[:, 0]
+        post = refresh_alpha(post, jnp.asarray(y_live))
+        self.cache.post = post
+
+        y_heads = np.zeros((m_all, size))
+        y_heads[:, :n] = ystd.T
+        alphas = solve_head_alphas(post, jnp.asarray(y_heads))
+
+        # constraint thresholds + feasibility in standardized space
+        t_signed = ms.signed_thresholds()  # (C,) raw signed bounds
+        t_std = (t_signed - means[m_all - num_con :]) / scales[m_all - num_con :]
+        raw = store.metric_matrix()  # (n, M) signed raw own rows
+        if num_con:
+            feas_rows = np.all(
+                raw[:, m_all - num_con :] <= t_signed[None, :], axis=1
+            )
+        else:
+            feas_rows = np.ones(len(raw), dtype=bool)
+        has_feasible = bool(feas_rows.any())
+
+        spec = MultiAcqSpec(
+            mode=ms.mode, num_objectives=num_obj, num_constraints=num_con
+        )
+        if spec.mode == "constrained":
+            y_best = float(ystd[feas_rows, 0].min()) if has_feasible else 0.0
+            weights = np.zeros((0, num_obj))
+            y_best_w = np.zeros((0,))
+        else:
+            # ParEGO-style random scalarizations: Dirichlet(1) simplex draws
+            # from the engine RNG (checkpointed — restored jobs redraw the
+            # exact weights an uninterrupted engine would have).
+            w_draws = cfg.num_scalarizations
+            g = -np.log1p(-self._rng.random((w_draws, num_obj)))
+            weights = g / g.sum(axis=1, keepdims=True)
+            rows = feas_rows if has_feasible else np.ones(len(raw), bool)
+            sc = ystd[:n][rows][:, :num_obj] @ weights.T  # (n_r, W)
+            y_best_w = sc.min(axis=0)
+            y_best = 0.0
+
+        def make_head(alphas_now):
+            return MultiMetricHead(
+                alphas=alphas_now,
+                t_std=jnp.asarray(t_std),
+                y_best=jnp.asarray(y_best),
+                has_feasible=jnp.asarray(has_feasible),
+                weights=jnp.asarray(weights),
+                y_best_w=jnp.asarray(y_best_w),
+            )
+
+        # --- pending (§4.4) + scratch posterior for fantasies ---------------
+        d = space.encoded_dim
+        pend_buf = np.zeros((cfg.max_pending, d))
+        pend_mask = np.zeros(cfg.max_pending, dtype=bool)
+        n_excl = 0
+        work = post
+        head = make_head(alphas)
+        yh_work = [list(y_heads[j, :n]) for j in range(m_all)]
+        if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
+            for xp in pend_np:
+                work, yh_work = self._fantasy_append_multi(work, yh_work, xp)
+            head = make_head(
+                solve_head_alphas(work, jnp.asarray(self._pad_heads(yh_work, work)))
+            )
+        elif len(pend_np) > 0:
+            n_excl = min(len(pend_np), cfg.max_pending)
+            pend_buf[:n_excl] = pend_np[:n_excl]
+            pend_mask[:n_excl] = True
+
+        picks: List[np.ndarray] = []
+        out: List[Dict[str, Any]] = []
+        for slot in range(k):
+            cands, _ = optimize_acquisition_multi(
+                work,
+                head,
+                self._anchors,
+                jnp.asarray(pend_buf),
+                jnp.asarray(pend_mask),
+                self._next_key(),
+                cfg.acq,
+                spec,
+            )
+            seen = self._seen_matrix(x_all, pend_np, picks)
+            config = vec = None
+            for cand in np.asarray(cands):
+                snapped = space.round_trip(cand)
+                if len(seen) == 0 or np.min(
+                    np.max(np.abs(seen - snapped[None, :]), axis=1)
+                ) > cfg.dedupe_tol:
+                    config, vec = space.decode(snapped), snapped
+                    break
+            if config is None:
+                config, vec = self._quasi_random(seen)
+            out.append(config)
+            picks.append(vec)
+            if slot + 1 < k:
+                if cfg.pending_strategy in ("liar", "kb"):
+                    work, yh_work = self._fantasy_append_multi(work, yh_work, vec)
+                    head = make_head(
+                        solve_head_alphas(
+                            work, jnp.asarray(self._pad_heads(yh_work, work))
+                        )
+                    )
+                elif n_excl < cfg.max_pending:
+                    pend_buf[n_excl] = vec
+                    pend_mask[n_excl] = True
+                    n_excl += 1
+        self.cache.touched()  # LRU bump + arena budget enforcement
+        return out
+
+    @staticmethod
+    def _pad_heads(yh_work: List[List[float]], work) -> np.ndarray:
+        """Stack per-head target lists into the (M, bucket) padded block."""
+        size = work.x_train.shape[0]
+        out = np.zeros((len(yh_work), size))
+        for j, col in enumerate(yh_work):
+            out[j, : len(col)] = col
+        return out
+
+    def _fantasy_append_multi(
+        self, work, yh_work: List[List[float]], x_vec: np.ndarray
+    ):
+        """Multi-head fantasy fold: append the input once (shared factor),
+        extend every head's target list with its fantasy value (constant
+        liar, or per-head kriging-believer means)."""
+        cfg = self.config
+        if cfg.pending_strategy == "kb":
+            from repro.core.gp.multi import (
+                MultiOutputPosterior,
+                predict_heads,
+                solve_head_alphas,
+            )
+
+            alphas_now = solve_head_alphas(
+                work, jnp.asarray(self._pad_heads(yh_work, work))
+            )
+            mu, _ = predict_heads(
+                MultiOutputPosterior(work, alphas_now),
+                jnp.asarray(x_vec)[None, :],
+                backend=cfg.fit_backend,
+            )  # (S, M, 1)
+            vals = [float(v) for v in np.asarray(jnp.mean(mu, axis=0))[:, 0]]
+        else:
+            vals = [cfg.liar_value] * len(yh_work)
+        live = len(yh_work[0])
+        if live >= work.x_train.shape[0]:
+            work = grow_posterior(work, bucket_size(live + 1))
+        work = posterior_append(work, jnp.asarray(x_vec), backend=cfg.fit_backend)
+        yh_work = [col + [v] for col, v in zip(yh_work, vals)]
+        y_pad = np.zeros(work.x_train.shape[0])
+        y_pad[: len(yh_work[0])] = yh_work[0]
+        return refresh_alpha(work, jnp.asarray(y_pad)), yh_work
 
     # ------------------------------------------------------ posterior cache
     def _posterior_for(
@@ -602,6 +882,28 @@ class BOSuggester:
             work = grow_posterior(work, bucket_size(live + 1))
         work = posterior_append(work, jnp.asarray(x_vec), backend=cfg.fit_backend)
         y_work = y_work + [val]
+        y_pad = np.zeros(work.x_train.shape[0])
+        y_pad[: len(y_work)] = y_work
+        return refresh_alpha(work, jnp.asarray(y_pad)), y_work
+
+    def _fantasy_append_block(
+        self, work, y_work: List[float], x_block: np.ndarray
+    ):
+        """Rank-k blocked fantasy fold (``BOConfig.fantasy_block``): one
+        blocked triangular solve per GPHP sample folds the whole pending set
+        (constant-liar values only — they don't depend on earlier
+        fantasies). Numerically within rounding of the sequential rank-1
+        path; the stream-identity test pins that suggestions agree."""
+        cfg = self.config
+        k = len(x_block)
+        live = len(y_work)
+        need = bucket_size(live + k)
+        if work.x_train.shape[0] < need:
+            work = grow_posterior(work, need)
+        work = posterior_append_block(
+            work, jnp.asarray(x_block), backend=cfg.fit_backend
+        )
+        y_work = y_work + [cfg.liar_value] * k
         y_pad = np.zeros(work.x_train.shape[0])
         y_pad[: len(y_work)] = y_work
         return refresh_alpha(work, jnp.asarray(y_pad)), y_work

@@ -43,6 +43,14 @@ class Trial:
     error: Optional[str] = None
     stopped_early: bool = False
     resource_used: int = 0  # training iterations actually executed
+    # named metric dict reported at completion (multi-metric jobs; raw
+    # per-goal values, unsigned — see repro.core.multimetric.MetricSet)
+    metrics: Optional[Dict[str, float]] = None
+    # authoritative signed objective resolved from the metric dict. When the
+    # tuner sets it, ``objective`` returns it verbatim — the curve stream
+    # must not be consulted (for maximize goals the raw curve values have
+    # the wrong sign, and min() over them would corrupt ranking/seeding).
+    objective_from_metrics: Optional[float] = None
 
     # ------------------------------------------------------------- helpers
     @property
@@ -59,7 +67,13 @@ class Trial:
         substitute — such a trial must neither seed the GP nor win the job.
         The curve fallback is reserved for early-STOPPED trials, where the
         best-so-far curve value is the intended objective.
+
+        ``objective_from_metrics`` (set by the tuner when a declared metric
+        dict resolves the objective authoritatively) short-circuits all of
+        the above.
         """
+        if self.objective_from_metrics is not None:
+            return self.objective_from_metrics
         if self.state == TrialState.COMPLETED and (
             self.final_objective is None
             or not math.isfinite(self.final_objective)

@@ -47,6 +47,8 @@ import os
 import tempfile
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.history import ObservationStore
 from repro.core.trial import Trial, TrialState
 from repro.core.warm_start import WarmStartPool
@@ -77,6 +79,16 @@ class TuningJobConfig:
             seeded suggester construction.
         job_name: registry key in service mode — concurrent jobs on one
             ``SelectionService``/``RemoteService`` need distinct names.
+        metrics: optional tuple of ``repro.core.multimetric.MetricSpec``
+            declaring the job's named metrics (objective first; constraints
+            after). Trials then report a metric dict at completion — the
+            objective returns ``{"val_loss": ..., "latency_ms": ...}``
+            (``ThreadBackend``) or a ``(curve, costs, metrics)`` 3-tuple
+            (``SimBackend``). With constraints declared, ``best_trial`` is
+            the best *feasible* trial; with ≥ 2 objectives the engine runs
+            Pareto mode and ``TuningResult.pareto_front`` tracks the
+            non-dominated set. None (default) is exactly the single-metric
+            job of the paper.
     """
 
     max_trials: int = 20
@@ -87,6 +99,7 @@ class TuningJobConfig:
     checkpoint_path: Optional[str] = None
     seed: int = 0
     job_name: str = "tuning-job"
+    metrics: Optional[Tuple] = None  # Tuple[MetricSpec, ...]
 
 
 @dataclasses.dataclass
@@ -107,6 +120,14 @@ class TuningResult:
         num_failed_attempts: failed executions including retried attempts
             (infrastructure failures like a dead engine replica do not count;
             see ``tests/test_remote_service.py``).
+        pareto_front: jobs with a metric declaration only — the
+            non-dominated set of COMPLETED trials over the *objective*
+            metrics (signed into the minimize convention; restricted to
+            feasible trials when constraints are declared), sorted by trial
+            id. Empty when ``TuningJobConfig.metrics`` is None (undeclared
+            jobs). With a single objective (declared single-metric or
+            constrained mode) it degenerates to the best (feasible)
+            trial(s).
     """
 
     trials: List[Trial]
@@ -116,6 +137,7 @@ class TuningResult:
     total_iterations: int  # resource actually consumed
     num_early_stopped: int
     num_failed_attempts: int
+    pareto_front: List[Trial] = dataclasses.field(default_factory=list)
 
     @property
     def best_config(self) -> Optional[Dict[str, Any]]:
@@ -186,6 +208,14 @@ class Tuner:
         self.stopping_rule = stopping_rule
         self.warm_start = warm_start
         self.callbacks = list(callbacks)
+        # multi-metric declaration (repro.core.multimetric): None for the
+        # paper's single-metric job.
+        if job_config.metrics:
+            from repro.core.multimetric import MetricSet
+
+            self.metric_set = MetricSet(job_config.metrics)
+        else:
+            self.metric_set = None
         # service mode (paper §3 Fig. 1): decisions route through a shared
         # SelectionService — store/cache are service-owned, siblings on the
         # same space pool GPHP samples and warm-start each other.
@@ -222,13 +252,16 @@ class Tuner:
                 seed=self.config.seed,
                 warm_start=self.warm_start,
                 fold_siblings=not self._warm_start_restored,
+                metrics=self.metric_set,
             )
             self._service_handle = handle
             self.suggester = handle.suggester
             if handle.warm_pool is not None:
                 self.warm_start = handle.warm_pool
             return handle.store
-        store = ObservationStore(self.space, warm_start=self.warm_start)
+        store = ObservationStore(
+            self.space, warm_start=self.warm_start, metrics=self.metric_set
+        )
         if hasattr(self.suggester, "bind_store"):
             self.suggester.bind_store(store)
         return store
@@ -237,13 +270,37 @@ class Tuner:
         """Event-sourced store transition at trial terminality. FAILED or
         non-finite trials only clear their pending slot: their curve minima
         are measurements at the moment of death, not final objectives — they
-        must neither seed the GP nor win the job."""
+        must neither seed the GP nor win the job. Multi-metric jobs push the
+        full named vector; a trial that completed without its metric dict
+        (early-stopped, or a misbehaving objective) cannot seed the GP —
+        constraint heads have no value to impute."""
         self.store.clear_pending(trial.trial_id)
-        if (
-            trial.state in (TrialState.COMPLETED, TrialState.STOPPED)
-            and math.isfinite(trial.objective)
-        ):
+        if trial.state not in (TrialState.COMPLETED, TrialState.STOPPED):
+            return
+        if self.metric_set is not None and self.metric_set.num_metrics > 1:
+            if trial.metrics is None:
+                return
+            try:
+                self.store.push_metrics(trial.config, trial.metrics)
+            except KeyError:
+                pass  # missing metric name: row cannot seed the GP
+            return
+        if self._objective_usable(trial) and math.isfinite(trial.objective):
             self.store.push(trial.config, trial.objective)
+
+    def _objective_usable(self, trial: Trial) -> bool:
+        """Is ``trial.objective`` trustworthy for ranking/seeding? For a
+        declared maximize objective (or any M > 1 job) only the resolved
+        metric dict carries the right sign — the raw curve stream does not,
+        so a trial without one (early-STOPPED, misbehaving objective) has no
+        usable objective. Declared minimize single metrics keep the legacy
+        curve semantics (the M=1 bit-equivalence contract)."""
+        ms = self.metric_set
+        if ms is None:
+            return True
+        if ms.num_metrics > 1 or ms.specs[0].goal == "maximize":
+            return trial.objective_from_metrics is not None
+        return True
 
     # ---------------------------------------------------------------- main
     def run(self) -> TuningResult:
@@ -372,6 +429,26 @@ class Tuner:
             trial.end_time = ev.time
             if math.isfinite(ev.value):
                 trial.final_objective = ev.value
+            if ev.metrics is not None:
+                trial.metrics = dict(ev.metrics)
+                if self.metric_set is not None:
+                    # resolve the scalar objective (signed into the engine's
+                    # minimize convention) from the named dict
+                    ms = self.metric_set
+                    spec0 = ms.specs[0]
+                    val = trial.metrics.get(spec0.name)
+                    if val is not None and math.isfinite(float(val)):
+                        trial.final_objective = spec0.sign * float(val)
+                        # The dict is authoritative for M>1 and for maximize
+                        # goals (raw curve values carry the wrong sign there;
+                        # min() over them would corrupt ranking/seeding). For
+                        # a declared minimize single metric we keep the
+                        # legacy min(final, curve) semantics — the M=1
+                        # bit-equivalence contract with undeclared jobs.
+                        if ms.num_metrics > 1 or spec0.goal == "maximize":
+                            trial.objective_from_metrics = (
+                                spec0.sign * float(val)
+                            )
             if ev.trial_id in self._stop_requested:
                 trial.state = TrialState.STOPPED
                 trial.stopped_early = True
@@ -421,6 +498,7 @@ class Tuner:
                 tr.objective
                 for tr in self.trials.values()
                 if tr.state in (TrialState.COMPLETED, TrialState.STOPPED)
+                and self._objective_usable(tr)
             ),
             default=float("inf"),
         )
@@ -439,9 +517,21 @@ class Tuner:
         eligible = [
             t for t in terminal
             if t.state in (TrialState.COMPLETED, TrialState.STOPPED)
+            and self._objective_usable(t)
             and math.isfinite(t.objective)
         ]
-        best = min(eligible, key=lambda t: t.objective) if eligible else None
+        ms = self.metric_set
+        if ms is not None and ms.num_constraints > 0:
+            feasible = [
+                t for t in eligible
+                if t.metrics is not None and ms.feasible(t.metrics)
+            ]
+            # best *feasible* trial; with nothing feasible yet, fall back to
+            # the unconstrained best so the job still reports progress.
+            pool = feasible if feasible else eligible
+        else:
+            pool = eligible
+        best = min(pool, key=lambda t: t.objective) if pool else None
         return TuningResult(
             trials=sorted(self.trials.values(), key=lambda t: t.trial_id),
             best_trial=best,
@@ -450,6 +540,38 @@ class Tuner:
             total_iterations=sum(t.resource_used for t in self.trials.values()),
             num_early_stopped=sum(1 for t in terminal if t.stopped_early),
             num_failed_attempts=self._num_failed_attempts,
+            pareto_front=self._pareto_front(),
+        )
+
+    def _pareto_front(self) -> List[Trial]:
+        """Non-dominated COMPLETED trials over the objective metrics (signed;
+        feasible-only when constraints are declared). See
+        ``TuningResult.pareto_front``."""
+        ms = self.metric_set
+        if ms is None:
+            return []
+        from repro.core.multimetric import pareto_mask
+
+        cands = [
+            t for t in self.trials.values()
+            if t.state == TrialState.COMPLETED and t.metrics is not None
+            and all(
+                s.name in t.metrics and math.isfinite(float(t.metrics[s.name]))
+                for s in ms.specs
+            )
+        ]
+        if ms.num_constraints > 0:
+            cands = [t for t in cands if ms.feasible(t.metrics)]
+        if not cands:
+            return []
+        obj_specs = [s for s in ms.specs if s.objective]
+        y = np.asarray(
+            [[s.sign * float(t.metrics[s.name]) for s in obj_specs] for t in cands]
+        )
+        mask = pareto_mask(y)
+        return sorted(
+            (t for t, keep in zip(cands, mask) if keep),
+            key=lambda t: t.trial_id,
         )
 
     # -------------------------------------------------------- persistence
@@ -545,8 +667,14 @@ class Tuner:
         if state.get("store"):
             self.store.load_state_dict(state["store"])
         else:  # older checkpoints: reconstruct from the trial table
+            multi = self.metric_set is not None and self.metric_set.num_metrics > 1
             for t in sorted(self.trials.values(), key=lambda tr: tr.trial_id):
-                if t.state in (TrialState.COMPLETED, TrialState.STOPPED) and math.isfinite(t.objective):
+                if t.state not in (TrialState.COMPLETED, TrialState.STOPPED):
+                    continue
+                if multi:
+                    if t.metrics is not None:
+                        self.store.push_metrics(t.config, t.metrics)
+                elif math.isfinite(t.objective):
                     self.store.push(t.config, t.objective)
         for _, t, _ in self._retry_queue:
             self.store.mark_pending(t.trial_id, t.config)

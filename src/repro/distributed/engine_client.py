@@ -120,9 +120,9 @@ class MirroredStore(ObservationStore):
     checkpointing and the store-version handshake do)."""
 
     def __init__(self, space: SearchSpace, handle: "RemoteJobHandle",
-                 warm_start=None):
+                 warm_start=None, metrics=None):
         self._handle: Optional[RemoteJobHandle] = None  # silence during init
-        super().__init__(space, warm_start=warm_start)
+        super().__init__(space, warm_start=warm_start, metrics=metrics)
         self._handle = handle
 
     def push_encoded(self, x: np.ndarray, y: float) -> bool:
@@ -130,6 +130,18 @@ class MirroredStore(ObservationStore):
         if accepted and self._handle is not None:
             self._handle._observe_push(np.asarray(x), float(y),
                                        expect_version=self.num_observations)
+        return accepted
+
+    def push_vector_encoded(self, x: np.ndarray, yvec: np.ndarray) -> bool:
+        if self.num_metrics == 1:
+            # delegates to ``push_encoded`` above — mirrored there.
+            return super().push_vector_encoded(x, yvec)
+        accepted = ObservationStore.push_vector_encoded(self, x, yvec)
+        if accepted and self._handle is not None:
+            self._handle._observe_push_vector(
+                np.asarray(x), np.asarray(yvec, dtype=np.float64),
+                expect_version=self.num_observations,
+            )
         return accepted
 
     def mark_pending(self, key, config: Mapping[str, Any]) -> None:
@@ -186,10 +198,12 @@ class RemoteJobHandle:
         seed: int,
         warm_start: Optional[WarmStartPool],
         fold_siblings: bool,
+        metrics=None,
     ):
         self.name = name
         self.space = space
         self.service = service
+        self.metrics = metrics  # Optional[MetricSet] (multi-metric jobs)
         self.stale = False
         self.warm_pool: Optional[WarmStartPool] = None
         self.store: Optional[MirroredStore] = None
@@ -283,17 +297,28 @@ class RemoteJobHandle:
 
     def fetch_snapshot(self, include_factors: bool = False) -> Dict[str, Any]:
         """Fetch the replica's current engine snapshot for this job (also
-        refreshes the handle's failover baseline)."""
+        refreshes the handle's failover baseline). Advertises the frame
+        codecs this process decodes; the server compresses with the best
+        common one (or ships plain JSON — see ``repro.core.rpc``)."""
+        from repro.core.rpc import (
+            available_snapshot_codecs,
+            decode_snapshot_frame,
+        )
+
         reply = self._rpc(
             lambda lease: SnapshotRequest(
                 job_name=self.name, lease=lease,
                 include_factors=include_factors,
+                accept_codecs=available_snapshot_codecs(),
             )
         )
+        snap = reply.snapshot
+        if reply.codec is not None:
+            snap = decode_snapshot_frame(snap["frame"], reply.codec)
         if not include_factors:
-            self._snapshot = reply.snapshot
+            self._snapshot = snap
             self._oplog = []
-        return reply.snapshot
+        return snap
 
     # -------------------------------------------------------- store mirrors
     def _observe_push(self, x: np.ndarray, y: float, expect_version: int) -> None:
@@ -311,6 +336,26 @@ class RemoteJobHandle:
                 f"client mirror at {expect_version}"
             )
         self._log(("push", wire, y))
+
+    def _observe_push_vector(
+        self, x: np.ndarray, yvec: np.ndarray, expect_version: int
+    ) -> None:
+        from repro.core.gp.serialize import array_to_wire
+
+        wire = array_to_wire(x)
+        wire_ys = array_to_wire(yvec)
+        reply = self._rpc(
+            lambda lease: ObserveRequest(
+                job_name=self.name, lease=lease, kind="push", x=wire,
+                ys=wire_ys,
+            )
+        )
+        if not reply.accepted or reply.store_version != expect_version:
+            raise ReplicaDivergenceError(
+                f"replica store at {reply.store_version} obs after push, "
+                f"client mirror at {expect_version}"
+            )
+        self._log(("pushv", wire, wire_ys))
 
     def _observe_pending(self, key, config: Dict[str, Any]) -> None:
         self._rpc(
@@ -377,10 +422,13 @@ class RemoteJobHandle:
         self._replica_idx = (self._replica_idx + 1) % len(self.service.addresses)
 
     def _register_message(self) -> RegisterRequest:
+        from repro.core.rpc import available_snapshot_codecs
+
+        caps = [f"snapshot-{c}" for c in available_snapshot_codecs()]
         if self._snapshot is not None:
             return RegisterRequest(
                 job_name=self.name, snapshot=self._snapshot,
-                takeover_lease=self._takeover,
+                takeover_lease=self._takeover, capabilities=caps,
             )
         return RegisterRequest(
             job_name=self.name,
@@ -394,6 +442,10 @@ class RemoteJobHandle:
             else self._user_warm_start.state_dict(),
             fold_siblings=self._fold_siblings,
             takeover_lease=self._takeover,
+            metric_specs=None
+            if self.metrics is None
+            else self.metrics.to_wire(),
+            capabilities=caps,
         )
 
     def _readopt(self) -> None:
@@ -525,7 +577,9 @@ class RemoteJobHandle:
                 pool = WarmStartPool()
                 pool.load_state_dict(reply.warm_pool_state)
             self.warm_pool = pool
-            self.store = MirroredStore(self.space, self, warm_start=pool)
+            self.store = MirroredStore(
+                self.space, self, warm_start=pool, metrics=self.metrics
+            )
         if reply.num_parents != self.store.num_parents:
             raise ReplicaDivergenceError(
                 f"replica folded {reply.num_parents} parent rows, client "
@@ -557,6 +611,13 @@ class RemoteJobHandle:
                 reply = self._conn.call(
                     ObserveRequest(job_name=self.name, lease=self._lease,
                                    kind="push", x=wire, y=y)
+                )
+                self._check_replay(reply)
+            elif kind == "pushv":
+                _, wire, wire_ys = op
+                reply = self._conn.call(
+                    ObserveRequest(job_name=self.name, lease=self._lease,
+                                   kind="push", x=wire, ys=wire_ys)
                 )
                 self._check_replay(reply)
             elif kind == "pending":
@@ -647,6 +708,7 @@ class RemoteService:
         seed: int = 0,
         warm_start: Optional[WarmStartPool] = None,
         fold_siblings: bool = True,
+        metrics=None,
     ) -> RemoteJobHandle:
         """Register a tuning job onto the fleet; same signature and handle
         surface as ``SelectionService.register_job``. Re-registering a name
@@ -669,6 +731,7 @@ class RemoteService:
             seed,
             warm_start,
             fold_siblings,
+            metrics=metrics,
         )
         prior = self._handles.get(name)
         if prior is not None and not prior.stale:

@@ -206,6 +206,22 @@ class EngineServer:
             snap = self.service.snapshot_job(
                 msg.job_name, include_factors=msg.include_factors
             )
+            # codec negotiation: best codec both peers support, in server
+            # preference order; a client that advertised nothing (or lacks
+            # the optional zstd module) still gets a frame it can decode —
+            # plain JSON in the limit. Same-protocol capability negotiation,
+            # not cross-version compat (version mismatch refuses earlier).
+            from repro.core.rpc import (
+                available_snapshot_codecs,
+                encode_snapshot_frame,
+            )
+
+            for codec in available_snapshot_codecs():
+                if codec in msg.accept_codecs:
+                    return SnapshotReply(
+                        snapshot={"frame": encode_snapshot_frame(snap, codec)},
+                        codec=codec,
+                    )
             return SnapshotReply(snapshot=snap)
         if isinstance(msg, EngineStateRequest):
             handle = self._checked(msg.job_name, msg.lease)
@@ -288,6 +304,8 @@ class EngineServer:
             if msg.warm_start_state:
                 warm = WarmStartPool()
                 warm.load_state_dict(msg.warm_start_state)
+            from repro.core.multimetric import MetricSet
+
             handle = self.service.register_job(
                 msg.job_name,
                 SearchSpace.from_spec(msg.space_spec),
@@ -297,10 +315,13 @@ class EngineServer:
                 seed=int(msg.seed),
                 warm_start=warm,
                 fold_siblings=msg.fold_siblings,
+                metrics=MetricSet.from_wire(msg.metric_specs),
             )
         token = uuid.uuid4().hex
         self._leases[msg.job_name] = _Lease(token, now + self.lease_ttl)
         pool = self.service.group_pool(msg.job_name)
+        from repro.core.rpc import available_snapshot_codecs
+
         return RegisterReply(
             lease=token,
             lease_ttl=self.lease_ttl,
@@ -313,6 +334,7 @@ class EngineServer:
             store_version=handle.store.num_observations,
             num_pending=handle.store.num_pending,
             store_fingerprint=handle.store.fingerprint(),
+            capabilities=[f"snapshot-{c}" for c in available_snapshot_codecs()],
         )
 
     def _suggest(self, msg: SuggestBatchRequest) -> SuggestBatchReply:
@@ -339,7 +361,12 @@ class EngineServer:
         handle = self._checked(msg.job_name, msg.lease)
         store = handle.store
         if msg.kind == "push":
-            accepted = store.push_encoded(array_from_wire(msg.x), float(msg.y))
+            if msg.ys is not None:  # multi-metric: full signed vector
+                accepted = store.push_vector_encoded(
+                    array_from_wire(msg.x), array_from_wire(msg.ys)
+                )
+            else:
+                accepted = store.push_encoded(array_from_wire(msg.x), float(msg.y))
         elif msg.kind == "pending":
             store.mark_pending(msg.key, msg.config)
             accepted = True

@@ -36,7 +36,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["acq_score_pallas", "TILE_A", "anchor_tile"]
+__all__ = [
+    "acq_score_pallas",
+    "acq_score_multi_pallas",
+    "TILE_A",
+    "anchor_tile",
+]
 
 TILE_A = 128  # minimum anchors per grid cell (lane-aligned)
 _VMEM_TILE_ELEMS = 1 << 20  # cap tile_a·npad so K*/V tiles stay ≤ 4 MB (f32)
@@ -55,6 +60,42 @@ _SQRT5 = 2.2360679774997896
 _SQRT2 = 1.4142135623730951
 _INV_SQRT2PI = 0.3989422804014327
 _EPS = 1e-6
+
+
+# Shared in-kernel math (plain traced jnp — both pallas_call bodies inline
+# these; keeping one copy is what keeps the single- and multi-head kernels'
+# parity contracts in lock-step).
+
+
+def _kumaraswamy_warp(x, a, b, on):
+    """Per-feature Kumaraswamy CDF warp, identity where ``on`` is 0."""
+    xc = jnp.clip(x, _EPS, 1.0 - _EPS)
+    xa = jnp.clip(jnp.exp(a * jnp.log(xc)), _EPS, 1.0 - _EPS)
+    w = 1.0 - jnp.exp(b * jnp.log1p(-xa))
+    return on * w + (1.0 - on) * x
+
+
+def _matern52_cross(s1, s2, amp2):
+    """Matérn-5/2 cross-gram of pre-scaled inputs: (m, d) × (n, d) → (m, n).
+    ‖a−b‖² = ‖a‖² + ‖b‖² − 2 a·bᵀ — the cross term runs on the MXU."""
+    n1 = jnp.sum(s1 * s1, axis=1, keepdims=True)  # (m, 1)
+    n2 = jnp.sum(s2 * s2, axis=1, keepdims=True)  # (n, 1)
+    cross = jax.lax.dot_general(
+        s1, s2,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=s1.dtype,
+    )
+    r2 = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
+    r = jnp.sqrt(r2)
+    return amp2 * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+
+def _ei_closed_form(mu, sigma, incumbent):
+    """EI = σ·(γΦ(γ) + φ(γ)), clamped at 0 (rounds to ~−1e-17 for γ ≪ 0)."""
+    gamma = (incumbent - mu) / sigma
+    cdf = 0.5 * (1.0 + jax.lax.erf(gamma / _SQRT2))
+    pdf = _INV_SQRT2PI * jnp.exp(-0.5 * gamma * gamma)
+    return jnp.maximum(sigma * (gamma * cdf + pdf), 0.0)
 
 
 def _acq_kernel(
@@ -79,28 +120,11 @@ def _acq_kernel(
     on = warp_on_ref[...]
     inv_ell = inv_ell_ref[...]
 
-    def warp(x):
-        xc = jnp.clip(x, _EPS, 1.0 - _EPS)
-        xa = jnp.clip(jnp.exp(a * jnp.log(xc)), _EPS, 1.0 - _EPS)
-        w = 1.0 - jnp.exp(b * jnp.log1p(-xa))
-        return on * w + (1.0 - on) * x
-
-    s1 = warp(anchors_ref[...]) * inv_ell  # (TILE_A, dpad)
-    s2 = warp(xt_ref[...]) * inv_ell  # (npad, dpad)
-
-    # ‖a−b‖² = ‖a‖² + ‖b‖² − 2 a·bᵀ  — the cross term runs on the MXU.
-    n1 = jnp.sum(s1 * s1, axis=1, keepdims=True)  # (TILE_A, 1)
-    n2 = jnp.sum(s2 * s2, axis=1, keepdims=True)  # (npad, 1)
-    cross = jax.lax.dot_general(
-        s1, s2,
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=s1.dtype,
-    )  # (TILE_A, npad)
-    r2 = jnp.maximum(n1 + n2.T - 2.0 * cross, 0.0)
-    r = jnp.sqrt(r2)
+    s1 = _kumaraswamy_warp(anchors_ref[...], a, b, on) * inv_ell  # (TILE_A, dpad)
+    s2 = _kumaraswamy_warp(xt_ref[...], a, b, on) * inv_ell  # (npad, dpad)
     amp2 = amp2_ref[0, 0]
-    k_star = amp2 * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
-    k_star = k_star * mask_ref[...]  # (TILE_A, npad); masked train rows inert
+    k_star = _matern52_cross(s1, s2, amp2)  # (TILE_A, npad)
+    k_star = k_star * mask_ref[...]  # masked train rows inert
 
     # μ = K*·α — cached alpha, contraction on the MXU.
     mu = jax.lax.dot_general(
@@ -119,14 +143,151 @@ def _acq_kernel(
     sigma = jnp.sqrt(var)  # (1, TILE_A)
 
     if acq == "ei":
-        y_best = y_best_ref[0, 0]
-        gamma = (y_best - mu) / sigma
-        cdf = 0.5 * (1.0 + jax.lax.erf(gamma / _SQRT2))
-        pdf = _INV_SQRT2PI * jnp.exp(-0.5 * gamma * gamma)
-        # clamp: the closed form rounds to ~−1e-17 for γ ≪ 0
-        out_ref[...] = jnp.maximum(sigma * (gamma * cdf + pdf), 0.0)
+        out_ref[...] = _ei_closed_form(mu, sigma, y_best_ref[0, 0])
     else:  # "lcb" — negated lower confidence bound (larger is better)
         out_ref[...] = kappa_ref[0, 0] * sigma - mu
+
+
+def _acq_multi_kernel(
+    anchors_ref,  # (tile_a, dpad) anchor tile
+    xt_ref,  # (npad, dpad) cached train set
+    linv_ref,  # (1, npad, npad) inverted Cholesky factor, sample s
+    alphas_ref,  # (1, M, npad) cached K̃⁻¹y_j for every metric head, sample s
+    mask_ref,  # (1, npad) 1.0 on live train rows
+    inv_ell_ref,  # (1, dpad) 1/ℓ, 0 on padded features, sample s
+    warp_a_ref,  # (1, dpad) Kumaraswamy a, sample s
+    warp_b_ref,  # (1, dpad) Kumaraswamy b, sample s
+    warp_on_ref,  # (1, dpad) 1.0 where warping applies, sample s
+    amp2_ref,  # (1, 1) signal variance, sample s
+    tcon_ref,  # (1, max(C,1)) standardized constraint thresholds (or dummy)
+    ybest_ref,  # (1, 1) best feasible incumbent (constrained; dummy in pareto)
+    feas_ref,  # (1, 1) 1.0 iff a feasible incumbent exists (constrained)
+    weights_ref,  # (W, K) simplex scalarization draws (pareto; dummy else)
+    ybw_ref,  # (W, 1) per-draw scalarized incumbent (pareto; dummy else)
+    out_ref,  # (1, tile_a) acquisition values
+    *,
+    mode: str,
+    num_con: int,
+):
+    """Fused multi-head scoring: the Kumaraswamy warp, Matérn-5/2 cross-gram
+    and cached-factor solve are computed ONCE per (GPHP-sample × anchor-tile)
+    cell and amortized over all M metric heads — each extra head costs one
+    (1, npad)·(npad, tile_a) matvec for its mean (the shared factor means the
+    predictive variance is common across heads). The constrained-EI product
+    (EI₀ · Π Φ) or the W-draw scalarized EI is applied in registers; only the
+    (1, tile_a) score tile is written back."""
+    a = warp_a_ref[...]
+    b = warp_b_ref[...]
+    on = warp_on_ref[...]
+    inv_ell = inv_ell_ref[...]
+
+    s1 = _kumaraswamy_warp(anchors_ref[...], a, b, on) * inv_ell  # (tile_a, dpad)
+    s2 = _kumaraswamy_warp(xt_ref[...], a, b, on) * inv_ell  # (npad, dpad)
+    amp2 = amp2_ref[0, 0]
+    k_star = _matern52_cross(s1, s2, amp2)
+    k_star = k_star * mask_ref[...]  # (tile_a, npad); masked train rows inert
+
+    # per-head means μ_j = K*·α_j — one contraction for all M heads.
+    mu = jax.lax.dot_general(
+        alphas_ref[0], k_star,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=s1.dtype,
+    )  # (M, tile_a)
+
+    # shared σ² = amp² − ‖L⁻¹K*ᵀ‖²_col (one solve for every head)
+    v = jax.lax.dot_general(
+        linv_ref[0], k_star,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=s1.dtype,
+    )
+    var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0, keepdims=True), 1e-12)
+    sigma = jnp.sqrt(var)  # (1, tile_a)
+
+    if num_con:
+        mu_con = mu[mu.shape[0] - num_con :, :]  # (C, tile_a)
+        z = (tcon_ref[0][:num_con, None] - mu_con) / sigma
+        feas = jnp.prod(0.5 * (1.0 + jax.lax.erf(z / _SQRT2)), axis=0,
+                        keepdims=True)  # (1, tile_a)
+    else:
+        feas = 1.0
+
+    if mode == "constrained":
+        e0 = _ei_closed_form(mu[0:1, :], sigma, ybest_ref[0, 0])
+        has_feas = feas_ref[0, 0]
+        out_ref[...] = jnp.where(has_feas > 0.5, e0 * feas, feas)
+    else:  # "pareto" — random-scalarization EI averaged over the W draws
+        weights = weights_ref[...]  # (W, K)
+        num_obj = weights.shape[1]
+        mu_s = jax.lax.dot_general(
+            weights, mu[:num_obj, :],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=s1.dtype,
+        )  # (W, tile_a)
+        wn2 = jnp.sum(weights * weights, axis=1, keepdims=True)  # (W, 1)
+        sigma_s = sigma * jnp.sqrt(wn2)  # (W, tile_a)
+        ei_w = _ei_closed_form(mu_s, sigma_s, ybw_ref[...])  # (W, tile_a)
+        out_ref[...] = jnp.mean(ei_w, axis=0, keepdims=True) * feas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "num_con", "tile_a", "interpret")
+)
+def acq_score_multi_pallas(
+    anchors: jax.Array,  # (m_pad, dpad), m_pad % tile_a == 0
+    x_train: jax.Array,  # (npad, dpad)
+    linv: jax.Array,  # (S, npad, npad)
+    alphas: jax.Array,  # (S, M, npad)
+    mask: jax.Array,  # (1, npad)
+    inv_ell: jax.Array,  # (S, dpad)
+    warp_a: jax.Array,  # (S, dpad)
+    warp_b: jax.Array,  # (S, dpad)
+    warp_on: jax.Array,  # (S, dpad)
+    amp2: jax.Array,  # (S, 1)
+    tcon: jax.Array,  # (1, max(C,1))
+    y_best: jax.Array,  # (1, 1)
+    has_feasible: jax.Array,  # (1, 1)
+    weights: jax.Array,  # (W, K) (dummy (1,1) in constrained mode)
+    y_best_w: jax.Array,  # (W, 1)
+    mode: str = "constrained",
+    num_con: int = 0,
+    tile_a: int = TILE_A,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-sample multi-head acquisition at every anchor: (S, m_pad)."""
+    m, d = anchors.shape
+    s, npad, _ = linv.shape
+    num_heads = alphas.shape[1]
+    tc = tcon.shape[1]
+    w_rows, w_cols = weights.shape
+    grid = (s, m // tile_a)
+    return pl.pallas_call(
+        functools.partial(_acq_multi_kernel, mode=mode, num_con=num_con),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_a, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((npad, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, npad, npad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, num_heads, npad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, npad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tc), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((w_rows, w_cols), lambda i, j: (0, 0)),
+            pl.BlockSpec((w_rows, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_a), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, m), anchors.dtype),
+        interpret=interpret,
+    )(
+        anchors, x_train, linv, alphas, mask,
+        inv_ell, warp_a, warp_b, warp_on, amp2,
+        tcon, y_best, has_feasible, weights, y_best_w,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("acq", "tile_a", "interpret"))

@@ -28,9 +28,14 @@ import jax.numpy as jnp
 from repro.core import acquisition as A
 from repro.core.gp.gp import GPPosterior, _triangular_inverse, predict
 from repro.core.gp.params import GPHyperParams
-from repro.kernels.acq_score.kernel import TILE_A, acq_score_pallas, anchor_tile
+from repro.kernels.acq_score.kernel import (
+    TILE_A,
+    acq_score_multi_pallas,
+    acq_score_pallas,
+    anchor_tile,
+)
 
-__all__ = ["acq_score"]
+__all__ = ["acq_score", "acq_score_multi"]
 
 
 def _default_interpret() -> bool:
@@ -134,3 +139,100 @@ def acq_score(
     )  # (S, mpad)
     out = out[:, :m].astype(x_star.dtype)
     return out if batched else out[0]
+
+
+def acq_score_multi(
+    post: GPPosterior,
+    head,  # repro.core.optimize_acq.MultiMetricHead (duck-typed pytree)
+    x_star: jax.Array,  # (m, d) anchor locations in the unit cube
+    *,
+    mode: str = "constrained",
+    backend: str = "xla",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-head acquisition values at ``x_star``: (S, m), larger is
+    better. ``mode``: "constrained" (EI₀ · Π Φ feasibility) | "pareto"
+    (random-scalarization EI averaged over the head's weight draws).
+
+    ``backend="xla"`` is the production composition
+    (``gp.multi.predict_heads`` + ``multimetric.acquisition``);
+    ``backend="pallas"`` runs the fused kernel — warp + cross-gram +
+    cached-factor solve once per (GPHP-sample × anchor-tile), the extra
+    heads amortized as matvecs against the shared gram."""
+    if mode not in ("constrained", "pareto"):
+        raise ValueError(f"unsupported mode {mode!r}")
+    if backend == "xla":
+        from repro.core.gp.multi import MultiOutputPosterior, predict_heads
+        from repro.core.multimetric.acquisition import (
+            constrained_ei,
+            scalarized_ei,
+        )
+
+        mu, var = predict_heads(
+            MultiOutputPosterior(post, head.alphas), x_star, backend="xla"
+        )
+        if mode == "constrained":
+            return constrained_ei(
+                mu, var, head.y_best, head.t_std, head.has_feasible
+            )
+        return scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
+    if backend != "pallas":
+        raise ValueError(f"unknown acq_score backend {backend!r}")
+
+    if interpret is None:
+        interpret = _default_interpret()
+    batched = post.chol.ndim == 3
+    chol = post.chol if batched else post.chol[None]
+    params = (
+        post.params
+        if batched
+        else jax.tree.map(lambda p: p[None], post.params)
+    )
+    alphas = head.alphas  # (S, M, n)
+
+    m, d = x_star.shape
+    n = chol.shape[-1]
+    npad = max(8, -(-n // 8) * 8)
+    dpad = max(8, -(-d // 8) * 8)
+    tile_a = anchor_tile(-(-m // TILE_A) * TILE_A, npad)
+    mpad = -(-m // tile_a) * tile_a
+    dt = x_star.dtype if interpret else jnp.float32
+
+    anchors = _pad_to(_pad_to(x_star.astype(dt), mpad, 0), dpad, 1)
+    xt = _pad_to(_pad_to(post.x_train.astype(dt), npad, 0), dpad, 1)
+    mask = _pad_to(post.mask.astype(dt)[None, :], npad, 1)
+
+    def ident_pad(t):
+        t = _pad_to(_pad_to(t.astype(dt), npad, 1), npad, 2)
+        if npad > n:
+            diag = jnp.arange(n, npad)
+            t = t.at[:, diag, diag].set(1.0)
+        return t
+
+    if post.chol_inv is not None:
+        linv = ident_pad(post.chol_inv if batched else post.chol_inv[None])
+    else:
+        linv = _triangular_inverse(ident_pad(chol))
+    alphasp = _pad_to(alphas.astype(dt), npad, 2)
+
+    inv_ell, a, b, on, amp2 = _packed_params_batch(params, dpad, dt)
+
+    num_con = int(head.t_std.shape[0])
+    tcon = head.t_std.astype(dt).reshape(1, -1)
+    if num_con == 0:
+        tcon = jnp.zeros((1, 1), dt)
+    y_b = jnp.asarray(head.y_best, dt).reshape(1, 1)
+    feas = jnp.asarray(head.has_feasible, dt).reshape(1, 1)
+    if mode == "pareto":
+        weights = head.weights.astype(dt)
+        ybw = head.y_best_w.astype(dt).reshape(-1, 1)
+    else:
+        weights = jnp.zeros((1, 1), dt)
+        ybw = jnp.zeros((1, 1), dt)
+
+    out = acq_score_multi_pallas(
+        anchors, xt, linv, alphasp, mask, inv_ell, a, b, on, amp2,
+        tcon, y_b, feas, weights, ybw,
+        mode=mode, num_con=num_con, tile_a=tile_a, interpret=interpret,
+    )  # (S, mpad)
+    return out[:, :m].astype(x_star.dtype)

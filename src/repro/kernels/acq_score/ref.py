@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.core.gp.gp import GPPosterior
 from repro.core.gp.kernels import matern52_ard
 
-__all__ = ["acq_score_ref"]
+__all__ = ["acq_score_ref", "acq_score_multi_ref"]
 
 _SQRT2 = 1.4142135623730951
 _INV_SQRT2PI = 0.3989422804014327
@@ -55,3 +55,63 @@ def acq_score_ref(
     if batched:
         return jax.vmap(one)(post.chol, post.alpha, post.params)
     return one(post.chol, post.alpha, post.params)
+
+
+def acq_score_multi_ref(
+    post: GPPosterior,
+    alphas: jax.Array,  # (S, M, n) all-head alphas (head 0 = objective)
+    x_star: jax.Array,  # (m, d)
+    *,
+    mode: str = "constrained",
+    t_std: jax.Array = None,  # (C,) standardized constraint thresholds
+    y_best: jax.Array = 0.0,  # best feasible incumbent (constrained mode)
+    has_feasible: bool = True,
+    weights: jax.Array = None,  # (W, K) scalarization draws (pareto mode)
+    y_best_w: jax.Array = None,  # (W,)
+) -> jax.Array:
+    """Standalone jnp mirror of the fused multi-head kernel math: warp+gram →
+    shared cached-factor solve → per-head means → constrained / scalarized
+    EI. (S, m); larger is better. Like ``acq_score_ref``, deliberately NOT
+    implemented via ``gp.multi.predict_heads`` + the production acquisition
+    composition, so the parity suite triangulates three code paths."""
+    if mode not in ("constrained", "pareto"):
+        raise ValueError(f"unsupported mode {mode!r}")
+    mask = post.mask.astype(x_star.dtype)
+    t_std = jnp.zeros((0,)) if t_std is None else jnp.asarray(t_std)
+    num_con = t_std.shape[0]
+
+    def ei(mu, sigma, incumbent):
+        gamma = (incumbent - mu) / sigma
+        cdf = 0.5 * (1.0 + jax.lax.erf(gamma / _SQRT2))
+        pdf = _INV_SQRT2PI * jnp.exp(-0.5 * gamma * gamma)
+        return jnp.maximum(sigma * (gamma * cdf + pdf), 0.0)
+
+    def one(chol, alphas_s, params):
+        k_star = matern52_ard(x_star, post.x_train, params) * mask[None, :]
+        mu = alphas_s @ k_star.T  # (M, m)
+        eye = jnp.eye(chol.shape[0], dtype=chol.dtype)
+        linv = jax.scipy.linalg.solve_triangular(chol, eye, lower=True)
+        v = linv @ k_star.T  # (n, m)
+        amp2 = jnp.exp(2.0 * params.log_amplitude)
+        var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0), 1e-12)
+        sigma = jnp.sqrt(var)  # (m,)
+        if num_con:
+            mu_con = mu[mu.shape[0] - num_con :]
+            z = (t_std[:, None] - mu_con) / sigma[None, :]
+            feas = jnp.prod(0.5 * (1.0 + jax.lax.erf(z / _SQRT2)), axis=0)
+        else:
+            feas = jnp.ones_like(sigma)
+        if mode == "constrained":
+            e0 = ei(mu[0], sigma, y_best)
+            return jnp.where(jnp.asarray(has_feasible), e0 * feas, feas)
+        w = jnp.asarray(weights)  # (W, K)
+        mu_s = w @ mu[: w.shape[1]]  # (W, m)
+        sigma_s = sigma[None, :] * jnp.sqrt(
+            jnp.sum(w * w, axis=1, keepdims=True)
+        )
+        ei_w = ei(mu_s, sigma_s, jnp.asarray(y_best_w)[:, None])
+        return jnp.mean(ei_w, axis=0) * feas
+
+    if post.chol.ndim == 3:
+        return jax.vmap(one)(post.chol, alphas, post.params)
+    return one(post.chol, alphas[0] if alphas.ndim == 3 else alphas, post.params)
