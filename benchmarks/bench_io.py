@@ -7,6 +7,21 @@ import os
 from typing import Any, Dict
 
 
+def rss_bytes() -> int:
+    """Current resident-set size of this process, read from
+    ``/proc/self/status`` (``VmRSS``) — no psutil dependency. Returns 0 on
+    platforms without procfs (the bench then reports rss_mb=0 rather than
+    crashing)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1]) * 1024
+    except OSError:
+        pass
+    return 0
+
+
 def merge_bench_json(out_path: str, updates: Dict[str, Any]) -> None:
     """Read-merge-write top-level sections of a bench artifact, preserving
     sections written by other suites. A missing or torn file (e.g. from an

@@ -1,0 +1,205 @@
+"""Large-n posterior backends: per-decision latency + RSS vs store size.
+
+Drives one tuning job whose store is pre-loaded with n observations and
+measures what the paper's service actually pays per decision at that size:
+
+  * **exact** — the incremental full-rank engine (factors cover all n rows):
+    per-decision cost grows superlinearly (O(S·n²) appends / alpha refreshes
+    on O(S·n²) resident factor bytes), which is why it is measured only up to
+    a few thousand rows;
+  * **subset** — the inducing-point backend (``BOConfig.posterior_backend=
+    "subset"``): factors cover m ≤ ``max_inducing`` greedily-diverse rows
+    plus the post-boundary tail, so per-decision cost and factor memory are
+    flat in n. Measured out to n = 10⁵.
+
+Each arm reports the *cold* decision (boundary work: inducing selection +
+GPHP fit + factorization) separately from the steady-state per-decision
+latency (median of the append-path decisions that follow), plus process RSS
+(``bench_io.rss_bytes``, /proc-based). The subset arms also compare the XLA
+vs fused-Pallas anchor-scoring backends at n = 10⁴.
+
+Merges a ``large_n`` section into ``BENCH_suggest.json`` (preserving other
+sections) and returns CSV rows for ``benchmarks/run.py``. The section's
+``acceptance`` block records the PR's gate: subset per-decision latency at
+n = 10⁴ within 1.5× of its own n = 10³ latency. ``--smoke`` runs a reduced
+n ∈ {2048, 8192} subset-only variant without touching the JSON and asserts
+the 8192-row decision stays within 2× of the 2048-row one (CI).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import gc
+import os
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+try:
+    from benchmarks.bench_io import merge_bench_json, rss_bytes
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from bench_io import merge_bench_json, rss_bytes
+
+from repro.core import BOConfig, BOSuggester, Continuous, ObservationStore, SearchSpace
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+from repro.core.optimize_acq import AcqOptConfig
+
+BENCH_SLICE = SliceSamplerConfig(num_samples=4, burn_in=2, thin=1)
+_D = 4
+_M_INDUCING = 256
+_N_SWITCH = 512  # subset active at every measured n
+_DECISIONS = 3  # steady-state (append-path) decisions timed per arm
+
+
+def _space() -> SearchSpace:
+    return SearchSpace([Continuous(f"x{i}", 0.0, 1.0) for i in range(_D)])
+
+
+def _objective_rows(x: np.ndarray) -> np.ndarray:
+    shift = 0.5 - 0.1 * np.arange(_D)
+    return np.sum((x - shift) ** 2, axis=-1)
+
+
+def _config(backend: str, acq_backend: str) -> BOConfig:
+    return dataclasses.replace(
+        BOConfig(num_init=3, slice_config=BENCH_SLICE,
+                 # keep the timed decisions on the append path: the cold
+                 # (boundary) decision is reported separately.
+                 refit_every=64, incremental=True),
+        posterior_backend=backend,
+        n_switch=_N_SWITCH,
+        max_inducing=_M_INDUCING,
+        acq=AcqOptConfig(backend=acq_backend),
+    )
+
+
+def _build_store(space: SearchSpace, n: int, seed: int) -> ObservationStore:
+    """n observations pushed as encoded rows (the unit-cube continuous space
+    encodes to the raw coordinates, so rows go in without per-row dicts)."""
+    store = ObservationStore(space)
+    rng = np.random.default_rng(seed)
+    xs = rng.random((n, _D))
+    ys = _objective_rows(xs)
+    for i in range(n):
+        store.push_encoded(xs[i], float(ys[i]))
+    return store
+
+
+def _measure_arm(backend: str, n: int, acq_backend: str = "xla",
+                 decisions: int = _DECISIONS) -> dict:
+    space = _space()
+    store = _build_store(space, n, seed=n % 7919)
+    sug = BOSuggester(space, _config(backend, acq_backend), seed=3, store=store)
+    rss0 = rss_bytes()
+    t0 = time.perf_counter()
+    cfg = sug.suggest_batch(1)[0]  # cold: selection + GPHP fit + factorize
+    cold_s = time.perf_counter() - t0
+    times = []
+    for _ in range(decisions):
+        store.push(cfg, float(_objective_rows(space.encode(cfg))))
+        t0 = time.perf_counter()
+        cfg = sug.suggest_batch(1)[0]
+        times.append(time.perf_counter() - t0)
+    arm = {
+        "backend": backend,
+        "n": n,
+        "acq_backend": acq_backend,
+        "cold_ms": cold_s * 1e3,
+        "per_decision_ms": float(np.median(times)) * 1e3,
+        "per_decision_ms_all": [t * 1e3 for t in times],
+        "rss_mb": rss_bytes() / 2**20,
+        "rss_delta_mb": (rss_bytes() - rss0) / 2**20,
+    }
+    del sug, store
+    gc.collect()
+    return arm
+
+
+def run(
+    subset_ns: Tuple[int, ...] = (1_000, 10_000, 100_000),
+    exact_ns: Tuple[int, ...] = (1_000, 4_000),
+    out_path: Optional[str] = "default",
+) -> List[Tuple[str, float, str]]:
+    # warm-up: compile the jitted pieces at subset shapes so arm one does
+    # not pay XLA compile time inside the measured region.
+    _measure_arm("subset", 1_000, decisions=1)
+
+    arms = []
+    for n in subset_ns:
+        arms.append(_measure_arm("subset", n))
+    arms.append(_measure_arm("subset", 10_000, acq_backend="pallas"))
+    for n in exact_ns:
+        arms.append(_measure_arm("exact", n))
+
+    def _arm(backend, n, acq="xla"):
+        return next(a for a in arms
+                    if a["backend"] == backend and a["n"] == n
+                    and a["acq_backend"] == acq)
+
+    ratio = (_arm("subset", 10_000)["per_decision_ms"]
+             / _arm("subset", 1_000)["per_decision_ms"])
+    section = {
+        "config": {
+            "dims": _D,
+            "slice": {"num_samples": BENCH_SLICE.num_samples,
+                      "burn_in": BENCH_SLICE.burn_in, "thin": BENCH_SLICE.thin},
+            "max_inducing": _M_INDUCING,
+            "n_switch": _N_SWITCH,
+            "steady_state_decisions": _DECISIONS,
+        },
+        "arms": arms,
+        "acceptance": {
+            "subset_1e4_vs_1e3_latency_ratio": ratio,
+            "threshold": 1.5,
+            "pass": bool(ratio <= 1.5),
+        },
+    }
+
+    rows: List[Tuple[str, float, str]] = []
+    for a in arms:
+        tag = f"large_n_{a['backend']}_{a['n']}_{a['acq_backend']}"
+        rows.append((f"{tag}_us", a["per_decision_ms"] * 1e3,
+                     f"cold{a['cold_ms']:.0f}ms_rss{a['rss_mb']:.0f}mb"))
+    rows.append(("large_n_subset_1e4_vs_1e3_ratio", ratio, "accept_le_1.5"))
+
+    if out_path == "default":
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_suggest.json")
+    if out_path:
+        merge_bench_json(out_path, {"large_n": section})
+    return rows
+
+
+def smoke() -> None:
+    """CI rot check: subset per-decision latency must be flat-ish in n —
+    the 8192-row decision within 2× of the 2048-row one."""
+    _measure_arm("subset", 2_048, decisions=1)  # compile warm-up
+    small = _measure_arm("subset", 2_048)
+    big = _measure_arm("subset", 8_192)
+    ratio = big["per_decision_ms"] / small["per_decision_ms"]
+    print(f"large_n_smoke_2048_us,{small['per_decision_ms'] * 1e3:.1f},")
+    print(f"large_n_smoke_8192_us,{big['per_decision_ms'] * 1e3:.1f},")
+    print(f"large_n_smoke_ratio,{ratio:.3f},accept_le_2.0")
+    assert ratio <= 2.0, (
+        f"subset backend per-decision latency no longer flat: "
+        f"8192 rows cost {ratio:.2f}x the 2048-row decision"
+    )
+    print("smoke: OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced subset-only variant, no JSON write (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

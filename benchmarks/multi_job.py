@@ -33,9 +33,9 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 try:
-    from benchmarks.bench_io import merge_bench_json
+    from benchmarks.bench_io import merge_bench_json, rss_bytes
 except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
-    from bench_io import merge_bench_json
+    from bench_io import merge_bench_json, rss_bytes
 
 from repro.core import (
     BOConfig,
@@ -183,6 +183,7 @@ def run(
             "speedup": speedup,
             "gphp_pool": pool_stats,
             "arena": arena_stats,
+            "rss_mb": rss_bytes() / 2**20,
         })
         rows.append((f"multi_job_n{n_jobs}_shared_us", sh_ms * 1e3,
                      f"{speedup:.2f}x_vs_per_job_hit{pool_stats['hit_rate']:.2f}"))

@@ -340,6 +340,17 @@ class ObservationStore:
             for i in range(npar, n)
         ]
 
+    def nbytes(self) -> int:
+        """Resident bytes of the store: the row buffers (X, y, extra metric
+        columns — at *capacity*, since the capacity-doubled arrays are what
+        actually sit in memory) plus the encoded pending buffers. This is the
+        un-evictable floor the ``FactorArena`` end-to-end budget counts
+        alongside the factor blocks."""
+        total = int(self._x.nbytes + self._y.nbytes + self._yx.nbytes)
+        for _, x in self._pending.values():
+            total += int(x.nbytes)
+        return total
+
     def fingerprint(self) -> str:
         """Content hash of the live rows (parents + own, byte-exact) plus
         the parent/pending counts. Two stores with equal fingerprints hold

@@ -40,21 +40,29 @@ def _norm_cdf(z: jax.Array) -> jax.Array:
 
 def feasibility_weight(
     mu_con: jax.Array,  # (S, C, m) constraint-head means (standardized)
-    var: jax.Array,  # (S, m) shared predictive variance
+    var: jax.Array,  # (S, m) shared — or (S, C, m) per-head — variance
     t_std: jax.Array,  # (C,) standardized signed thresholds (feasible ⇔ ≤ t)
 ) -> jax.Array:
     """Π_c P(y_c(x) ≤ t_c) per (sample, anchor): (S, m), each factor and the
-    product in [0, 1]. C = 0 returns ones (no constraints ⇒ no discount)."""
+    product in [0, 1]. C = 0 returns ones (no constraints ⇒ no discount).
+
+    ``var`` is the shared (S, m) variance in the default one-factor layout;
+    the per-head layout (``BOConfig.per_head_gphp``) passes the (S, C, m)
+    per-constraint variances instead."""
     if mu_con.shape[1] == 0:
-        return jnp.ones(var.shape, dtype=var.dtype)
-    sigma = jnp.sqrt(jnp.maximum(var, 1e-16))[:, None, :]  # (S, 1, m)
+        shape = var.shape if var.ndim == 2 else (var.shape[0], var.shape[-1])
+        return jnp.ones(shape, dtype=var.dtype)
+    if var.ndim == 3:
+        sigma = jnp.sqrt(jnp.maximum(var, 1e-16))  # (S, C, m)
+    else:
+        sigma = jnp.sqrt(jnp.maximum(var, 1e-16))[:, None, :]  # (S, 1, m)
     z = (t_std[None, :, None] - mu_con) / sigma  # (S, C, m)
     return jnp.prod(_norm_cdf(z), axis=1)
 
 
 def constrained_ei(
     mu: jax.Array,  # (S, M, m) all-head means; head 0 = objective
-    var: jax.Array,  # (S, m) shared predictive variance
+    var: jax.Array,  # (S, m) shared — or (S, M, m) per-head — variance
     y_best: jax.Array,  # () best *feasible* standardized objective
     t_std: jax.Array,  # (C,) standardized signed constraint thresholds
     has_feasible: jax.Array,  # () bool/0-1: does a feasible incumbent exist?
@@ -62,14 +70,18 @@ def constrained_ei(
     """Constrained EI per (sample, anchor): (S, m). With no feasible
     incumbent the EI factor degenerates to 1 (pure feasibility search)."""
     num_con = t_std.shape[0]
-    ei = expected_improvement(mu[:, 0, :], var, y_best)
-    feas = feasibility_weight(mu[:, mu.shape[1] - num_con :, :], var, t_std)
+    var_obj = var[:, 0, :] if var.ndim == 3 else var
+    var_con = var[:, var.shape[1] - num_con :, :] if var.ndim == 3 else var
+    ei = expected_improvement(mu[:, 0, :], var_obj, y_best)
+    feas = feasibility_weight(
+        mu[:, mu.shape[1] - num_con :, :], var_con, t_std
+    )
     return jnp.where(has_feasible, ei * feas, feas)
 
 
 def scalarized_ei(
     mu: jax.Array,  # (S, M, m) all-head means; first K heads = objectives
-    var: jax.Array,  # (S, m) shared predictive variance
+    var: jax.Array,  # (S, m) shared — or (S, M, m) per-head — variance
     weights: jax.Array,  # (W, K) simplex weight draws
     y_best_w: jax.Array,  # (W,) best observed scalarized value per draw
     t_std: jax.Array,  # (C,) standardized constraint thresholds (may be empty)
@@ -81,13 +93,19 @@ def scalarized_ei(
     mu_obj = mu[:, :num_obj, :]  # (S, K, m)
     # scalarized means: (S, W, m) = Σ_j w_j μ_j
     mu_s = jnp.einsum("wk,skm->swm", weights, mu_obj)
-    # independent heads ⇒ Var[Σ w_j y_j] = (Σ w_j²) σ²
-    wn2 = jnp.sum(weights * weights, axis=1)  # (W,)
-    var_s = wn2[None, :, None] * var[:, None, :]  # (S, W, m)
+    if var.ndim == 3:
+        # independent heads, per-head variances ⇒ Var[Σ w_j y_j] = Σ w_j² σ_j²
+        var_s = jnp.einsum("wk,skm->swm", weights * weights, var[:, :num_obj, :])
+        var_con = var[:, var.shape[1] - num_con :, :]
+    else:
+        # shared variance ⇒ Var[Σ w_j y_j] = (Σ w_j²) σ²
+        wn2 = jnp.sum(weights * weights, axis=1)  # (W,)
+        var_s = wn2[None, :, None] * var[:, None, :]  # (S, W, m)
+        var_con = var
     ei = expected_improvement(mu_s, var_s, y_best_w[None, :, None])
     out = jnp.mean(ei, axis=1)  # (S, m)
     if num_con:
         out = out * feasibility_weight(
-            mu[:, mu.shape[1] - num_con :, :], var, t_std
+            mu[:, mu.shape[1] - num_con :, :], var_con, t_std
         )
     return out

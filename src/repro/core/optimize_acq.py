@@ -196,7 +196,15 @@ class MultiMetricHead(NamedTuple):
 
     ``weights``/``y_best_w`` are the random-scalarization draws of Pareto
     mode and are empty (W=0) in constrained mode; ``y_best``/``has_feasible``
-    drive constrained EI and are ignored in Pareto mode."""
+    drive constrained EI and are ignored in Pareto mode.
+
+    ``head_posts`` is empty in the default shared-factor layout. With
+    ``BOConfig.per_head_gphp`` it carries one ``GPPosterior`` per extra head
+    (head 1 first), each fitted under its own GPHP chain; the scorer then
+    predicts every head through its own factor (per-head variances) instead
+    of the shared-factor alpha block, and ``alphas`` degenerates to the
+    objective column. The tuple length is part of the pytree structure, so
+    the two layouts jit-compile separately and the default path is untouched."""
 
     alphas: jax.Array  # (S, M, n) all-head K̃⁻¹y (head 0 = objective)
     t_std: jax.Array  # (C,) standardized signed constraint thresholds
@@ -204,6 +212,7 @@ class MultiMetricHead(NamedTuple):
     has_feasible: jax.Array  # () bool: feasible incumbent exists
     weights: jax.Array  # (W, K) simplex scalarization draws
     y_best_w: jax.Array  # (W,) best observed scalarized value per draw
+    head_posts: tuple = ()  # per-head GPPosteriors (per_head_gphp only)
 
 
 def _acq_values_multi(
@@ -221,6 +230,31 @@ def _acq_values_multi(
     from repro.core.gp.multi import MultiOutputPosterior, predict_heads
     from repro.core.multimetric.acquisition import constrained_ei, scalarized_ei
 
+    if head.head_posts:
+        # per-head layout (BOConfig.per_head_gphp): every head predicts
+        # through its own factor — variances are per-head, so the fused
+        # shared-variance Pallas kernel does not apply and scoring stays on
+        # the jnp composition for both the anchor sweep and refinement.
+        backend = "xla" if differentiable else (
+            "xla" if cfg.backend == "pallas" else cfg.backend
+        )
+        mu0, var0 = predict(post, x, backend=backend)
+        mus, vrs = [mu0], [var0]
+        for hp in head.head_posts:
+            muh, varh = predict(hp, x, backend=backend)
+            mus.append(muh)
+            vrs.append(varh)
+        mu = jnp.stack(mus, axis=1)  # (S, M, m)
+        var = jnp.stack(vrs, axis=1)  # (S, M, m) per-head variances
+        if spec.mode == "constrained":
+            vals = constrained_ei(
+                mu, var, head.y_best, head.t_std, head.has_feasible
+            )
+        else:
+            vals = scalarized_ei(
+                mu, var, head.weights, head.y_best_w, head.t_std
+            )
+        return A.integrate_over_samples(vals)
     if cfg.backend == "pallas" and not differentiable:
         from repro.kernels.acq_score.ops import acq_score_multi
 

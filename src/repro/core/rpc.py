@@ -86,6 +86,8 @@ __all__ = [
     "available_snapshot_codecs",
     "encode_snapshot_frame",
     "decode_snapshot_frame",
+    "encode_snapshot_frames",
+    "decode_snapshot_frames",
 ]
 
 #: Message-schema version. Bumped on any incompatible change to the
@@ -93,12 +95,19 @@ __all__ = [
 #: v2: multi-metric fields (``RegisterRequest.metric_specs``,
 #: ``ObserveRequest.ys``) + snapshot-compression negotiation
 #: (``SnapshotRequest.accept_codecs`` / ``SnapshotReply.codec``).
-PROTOCOL_VERSION = 2
+#: v3: chunked snapshot frames (``SnapshotRequest.max_frame_bytes`` /
+#: ``SnapshotReply.frames``) so large-n store images stream in bounded
+#: pieces instead of one message-sized blob.
+PROTOCOL_VERSION = 3
 
 #: Engine-snapshot schema version (``SelectionService.snapshot_job`` output).
 #: v2: ``metrics`` (the job's MetricSpec list) + the store's ``own_yx``
 #: metric block.
-ENGINE_SNAPSHOT_VERSION = 2
+#: v3: subset-backend cache fields (``inducing_sel``/``inducing_n0``) and
+#: per-head GPHP state (``head_samples``/``head_n``, per-head chain states)
+#: so a restoring replica replays the inducing-set construction and head
+#: chains bit-exactly.
+ENGINE_SNAPSHOT_VERSION = 3
 
 
 # --------------------------------------------------------------------------
@@ -142,6 +151,47 @@ def encode_snapshot_frame(snapshot: Dict[str, Any], codec: str) -> str:
 def decode_snapshot_frame(frame: str, codec: str) -> Dict[str, Any]:
     """Inverse of ``encode_snapshot_frame``."""
     comp = base64.b64decode(frame)
+    if codec == "zstd":
+        if _zstd is None:
+            raise ValueError("zstd codec unavailable in this process")
+        raw = _zstd.ZstdDecompressor().decompress(comp)
+    elif codec == "zlib":
+        raw = zlib.decompress(comp)
+    else:
+        raise ValueError(f"unknown snapshot codec {codec!r}")
+    return json.loads(raw)
+
+
+def encode_snapshot_frames(
+    snapshot: Dict[str, Any], codec: str, max_frame_bytes: int
+) -> List[str]:
+    """Chunked variant of ``encode_snapshot_frame`` for large-n snapshots:
+    compress the exact JSON bytes *once*, then split the compressed stream
+    into ≤ ``max_frame_bytes`` pieces, base64-ing each. The receiver joins
+    the decoded pieces and decompresses the whole stream, so the result is
+    byte-identical to the single-frame path — chunking only bounds the size
+    of any one wire string."""
+    if max_frame_bytes <= 0:
+        raise ValueError("max_frame_bytes must be positive")
+    raw = json.dumps(snapshot, separators=(",", ":")).encode("utf-8")
+    if codec == "zstd":
+        if _zstd is None:
+            raise ValueError("zstd codec unavailable in this process")
+        comp = _zstd.ZstdCompressor().compress(raw)
+    elif codec == "zlib":
+        comp = zlib.compress(raw, level=6)
+    else:
+        raise ValueError(f"unknown snapshot codec {codec!r}")
+    return [
+        base64.b64encode(comp[i : i + max_frame_bytes]).decode("ascii")
+        for i in range(0, max(len(comp), 1), max_frame_bytes)
+    ]
+
+
+def decode_snapshot_frames(frames: List[str], codec: str) -> Dict[str, Any]:
+    """Inverse of ``encode_snapshot_frames``: join the decoded chunks,
+    decompress the whole stream, parse."""
+    comp = b"".join(base64.b64decode(f) for f in frames)
     if codec == "zstd":
         if _zstd is None:
             raise ValueError("zstd codec unavailable in this process")
@@ -327,24 +377,31 @@ class SnapshotRequest:
     blocks; by default a restoring replica rehydrates them locally.
     ``accept_codecs`` lists the frame codecs the client decodes (e.g.
     ``["zstd", "zlib"]``); empty means "plain JSON only" — the server never
-    compresses toward a client that did not ask."""
+    compresses toward a client that did not ask. ``max_frame_bytes`` (with a
+    negotiated codec) asks for the *chunked* reply shape: compressed bytes
+    split into ≤ max_frame_bytes pieces in ``SnapshotReply.frames``, for
+    large-n store images."""
 
     TYPE = "snapshot"
     job_name: str
     lease: str
     include_factors: bool = False
     accept_codecs: List[str] = dataclasses.field(default_factory=list)
+    max_frame_bytes: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class SnapshotReply:
-    """``codec=None``: ``snapshot`` is the plain JSON object. Otherwise
-    ``snapshot`` is ``{"frame": <base64>}`` compressed with ``codec`` —
-    decode with ``decode_snapshot_frame``."""
+    """``codec=None``: ``snapshot`` is the plain JSON object. Otherwise,
+    either ``frames`` carries the chunked compressed stream (decode with
+    ``decode_snapshot_frames``; ``snapshot`` is then empty), or ``snapshot``
+    is ``{"frame": <base64>}`` compressed with ``codec`` — decode with
+    ``decode_snapshot_frame``."""
 
     TYPE = "snapshot_reply"
     snapshot: Dict[str, Any]
     codec: Optional[str] = None
+    frames: Optional[List[str]] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -509,6 +566,10 @@ def bo_config_to_wire(cfg: BOConfig) -> Dict[str, Any]:
         "fit_backend": cfg.fit_backend,
         "num_scalarizations": cfg.num_scalarizations,
         "fantasy_block": cfg.fantasy_block,
+        "posterior_backend": cfg.posterior_backend,
+        "n_switch": cfg.n_switch,
+        "max_inducing": cfg.max_inducing,
+        "per_head_gphp": cfg.per_head_gphp,
     }
 
 
@@ -529,4 +590,8 @@ def bo_config_from_wire(blob: Dict[str, Any]) -> BOConfig:
         fit_backend=blob["fit_backend"],
         num_scalarizations=int(blob.get("num_scalarizations", 16)),
         fantasy_block=bool(blob.get("fantasy_block", False)),
+        posterior_backend=blob.get("posterior_backend", "exact"),
+        n_switch=int(blob.get("n_switch", 2048)),
+        max_inducing=int(blob.get("max_inducing", 1024)),
+        per_head_gphp=bool(blob.get("per_head_gphp", False)),
     )

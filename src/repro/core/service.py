@@ -201,13 +201,18 @@ class GPHPSamplePool:
 
 
 class FactorArena:
-    """LRU bound on the total resident posterior-factor memory.
+    """LRU bound on the total resident decision-engine memory.
 
-    Each ``EngineCache`` registers here on every decision (``touch``). When
-    the summed ``factor_nbytes`` exceeds the budget, least-recently-used
-    caches are asked to ``drop_factors`` — the cached GPHP draws survive, so
-    the evicted job's next decision refactorizes (O(S·n³), RNG-free) instead
-    of re-running MCMC, and its suggestions are unchanged.
+    Each ``EngineCache`` registers here on every decision (``touch``). The
+    budget is *end-to-end*: it counts the factor blocks (L, L⁻¹, alpha —
+    objective, per-head posteriors, and the cached multi-head alpha block)
+    **plus** every tracked job's observation-store bytes (row buffers and
+    pending snapshot buffers). Only the factor blocks are evictable — stores
+    are live state, so they form the budget's un-evictable floor; when the
+    total exceeds the budget, least-recently-used caches are asked to
+    ``drop_factors`` — the cached GPHP draws survive, so the evicted job's
+    next decision refactorizes (O(S·n³), RNG-free) instead of re-running
+    MCMC, and its suggestions are unchanged.
     """
 
     def __init__(self, budget_bytes: int = 256 << 20):
@@ -223,12 +228,24 @@ class FactorArena:
     def remove(self, key: Any) -> None:
         self._entries.pop(key, None)
 
-    def resident_bytes(self) -> int:
+    def factor_bytes(self) -> int:
+        """Evictable bytes: every tracked job's resident factor blocks."""
         return sum(c.factor_nbytes() for c in self._entries.values())
+
+    def store_bytes(self) -> int:
+        """Un-evictable bytes: every tracked job's observation store (row
+        buffers + pending snapshot buffers)."""
+        return sum(c.store_nbytes() for c in self._entries.values())
+
+    def resident_bytes(self) -> int:
+        """End-to-end resident bytes: factors + stores."""
+        return self.factor_bytes() + self.store_bytes()
 
     def _enforce(self, protect: Any) -> None:
         # evict LRU-first until under budget; never evict the cache that was
-        # just touched (the job currently deciding).
+        # just touched (the job currently deciding). Only factor blocks can
+        # be dropped: once every unprotected cache is factor-free, the
+        # remaining residency is the stores' floor and enforcement stops.
         while self.resident_bytes() > self.budget_bytes:
             victim = None
             for key in self._entries:  # iteration order: LRU → MRU
@@ -245,6 +262,8 @@ class FactorArena:
         return {
             "budget_bytes": self.budget_bytes,
             "resident_bytes": self.resident_bytes(),
+            "factor_bytes": self.factor_bytes(),
+            "store_bytes": self.store_bytes(),
             "tracked_jobs": len(self._entries),
             "evictions": self.evictions,
         }

@@ -70,6 +70,7 @@ from repro.core.gp.slice_sampler import (
     PAPER_CONFIG,
     SliceSamplerConfig,
 )
+from repro.core.gp.sparse import select_inducing
 from repro.core.history import ObservationStore, bucket_size
 from repro.core.optimize_acq import (
     AcqOptConfig,
@@ -128,6 +129,16 @@ class BOConfig:
     fantasy_block: bool = False  # fold the pending set with one rank-k
     # blocked append instead of k rank-1 borders ("liar" strategy only);
     # off by default to keep the fantasy fold bit-identical to PR 1
+    posterior_backend: str = "exact"  # "exact" | "subset" (inducing rows,
+    # core/gp/sparse.py) — "subset" caps the factor at max_inducing rows
+    # once the refit boundary reaches n_switch; below that it is
+    # bit-identical to "exact"
+    n_switch: int = 2048  # store rows at a refit boundary before "subset"
+    # actually switches away from the exact factorization
+    max_inducing: int = 1024  # inducing rows selected at each refit boundary
+    per_head_gphp: bool = False  # M>1 jobs: give every constraint/latency
+    # head its own GPHP chain (and factor) instead of sharing the objective's
+    # draws; default off — the shared-factor layout of PR 5
 
     def __post_init__(self):
         if self.backend is not None:
@@ -136,6 +147,13 @@ class BOConfig:
                     self, "acq", self.acq._replace(backend=self.backend)
                 )
             object.__setattr__(self, "backend", None)
+        if self.posterior_backend not in ("exact", "subset"):
+            raise ValueError(
+                f"unknown posterior_backend {self.posterior_backend!r} "
+                "(expected 'exact' or 'subset')"
+            )
+        if self.max_inducing < 2:
+            raise ValueError("max_inducing must be at least 2")
 
     def fast(self) -> "BOConfig":
         """Cheaper MCMC settings for many-seed benchmark sweeps."""
@@ -159,7 +177,7 @@ class EngineCache:
 
     def __init__(self, pool=None, arena=None, arena_key=None):
         self.samples: Optional[np.ndarray] = None  # packed (S, 3d+2) draws
-        self.post = None  # GPPosterior for store rows [0, n)
+        self.post = None  # GPPosterior for the live rows (see live_rows)
         self.n = 0  # observations folded into the cadence accounting
         self.obs_since_refit = 0
         self.token: Optional[int] = None  # id() of the store the cache maps
@@ -167,6 +185,30 @@ class EngineCache:
         self.pool_version = -1  # pool.version last adopted/published
         self.arena = arena  # FactorArena bounding factor residency (or None)
         self.arena_key = arena_key
+        self.store = None  # last bound ObservationStore (arena accounting)
+        # --- subset posterior backend (core/gp/sparse.py) -----------------
+        # store-row indices of the inducing set selected at the last refit
+        # boundary, or None when the exact backend is live. inducing_n0 is
+        # the store-row count at selection time: rows [inducing_n0, n) were
+        # appended to the factor after the boundary.
+        self.inducing_sel: Optional[np.ndarray] = None
+        self.inducing_n0 = 0
+        # --- per-head GPHP chains (BOConfig.per_head_gphp) ----------------
+        self.head_samples: Optional[List[np.ndarray]] = None  # per extra head
+        self.head_posts: Optional[list] = None  # per-head GPPosteriors
+        self.head_n = 0  # store rows folded into the head factors
+        self.head_alphas = None  # last shared-factor head alphas (accounting)
+
+    # ------------------------------------------------------------ live rows
+    def live_rows(self, n: int) -> np.ndarray:
+        """Store-row indices the resident factor covers, in factor order:
+        all of ``[0, n)`` on the exact backend, else the inducing set plus
+        every row appended since the boundary."""
+        if self.inducing_sel is None:
+            return np.arange(n, dtype=np.int64)
+        return np.concatenate(
+            [self.inducing_sel, np.arange(self.inducing_n0, n, dtype=np.int64)]
+        )
 
     # ------------------------------------------------------------ lifecycle
     def reset(self) -> None:
@@ -176,26 +218,56 @@ class EngineCache:
         self.obs_since_refit = 0
         self.token = None
         self.pool_version = -1
+        self.inducing_sel = None
+        self.inducing_n0 = 0
+        self.head_samples = None
+        self.head_posts = None
+        self.head_n = 0
+        self.head_alphas = None
 
     def invalidate_factors(self) -> None:
         """Forget the factorization but keep draws + cadence (store rebind)."""
         self.post = None
         self.token = None
+        self.inducing_sel = None
+        self.inducing_n0 = 0
+        self.head_posts = None
+        self.head_alphas = None
 
     def drop_factors(self) -> None:
-        """Arena eviction hook: release the O(S·n²) factor blocks. The next
-        decision rebuilds them from ``samples`` (RNG-free, deterministic)."""
+        """Arena eviction hook: release the O(S·n²) factor blocks (objective
+        and per-head) plus the cached head alphas. The next decision rebuilds
+        them from ``samples``/``head_samples`` (RNG-free, deterministic) —
+        including the inducing-set selection, which is a pure function of the
+        store prefix at the boundary."""
         self.post = None
+        self.inducing_sel = None
+        self.inducing_n0 = 0
+        self.head_posts = None
+        self.head_alphas = None
 
     def factor_nbytes(self) -> int:
-        """Resident bytes of the factor blocks (what the arena budgets)."""
-        if self.post is None:
-            return 0
+        """Resident bytes of the factor blocks (what the arena budgets):
+        the objective posterior (L, L⁻¹, alpha, x, mask), any per-head
+        posteriors, and the cached multi-head alpha block."""
         total = 0
-        for leaf in jax.tree_util.tree_leaves(self.post):
-            if hasattr(leaf, "nbytes"):
-                total += int(leaf.nbytes)
+        blocks = [self.post, self.head_alphas]
+        if self.head_posts:
+            blocks.extend(self.head_posts)
+        for block in blocks:
+            if block is None:
+                continue
+            for leaf in jax.tree_util.tree_leaves(block):
+                if hasattr(leaf, "nbytes"):
+                    total += int(leaf.nbytes)
         return total
+
+    def store_nbytes(self) -> int:
+        """Resident bytes of the bound observation store (rows + pending
+        buffers) — the un-evictable floor of the arena's end-to-end budget."""
+        if self.store is None or not hasattr(self.store, "nbytes"):
+            return 0
+        return int(self.store.nbytes())
 
     def touched(self) -> None:
         """Mark this cache most-recently-used in its arena (if any)."""
@@ -224,6 +296,17 @@ class EngineCache:
             "factors": posterior_to_wire(self.post)
             if include_factors and self.post is not None
             else None,
+            # subset backend: the inducing set is replayable (select_inducing
+            # is deterministic over the store prefix), but shipping it keeps
+            # factor-bearing snapshots self-describing and lets a restore
+            # resume the append path without recomputing the selection.
+            "inducing_sel": array_to_wire(self.inducing_sel),
+            "inducing_n0": self.inducing_n0,
+            # per-head GPHP draws (factors rehydrate like the objective's)
+            "head_samples": None
+            if self.head_samples is None
+            else [array_to_wire(s) for s in self.head_samples],
+            "head_n": self.head_n,
         }
 
     def load_snapshot(self, snap: Mapping[str, Any]) -> None:
@@ -240,6 +323,16 @@ class EngineCache:
         factors = snap.get("factors")
         self.post = None if factors is None else posterior_from_wire(factors)
         self.token = None  # factors (if any) bind to whatever store comes next
+        sel = array_from_wire(snap.get("inducing_sel"))
+        self.inducing_sel = None if sel is None else sel.astype(np.int64)
+        self.inducing_n0 = int(snap.get("inducing_n0", 0))
+        hs = snap.get("head_samples")
+        self.head_samples = (
+            None if hs is None else [array_from_wire(s) for s in hs]
+        )
+        self.head_posts = None  # rehydrated lazily, like the objective factors
+        self.head_n = int(snap.get("head_n", 0))
+        self.head_alphas = None
 
 
 class BOSuggester:
@@ -292,6 +385,12 @@ class BOSuggester:
         # persisted slice-chain state: warm-starts the next chain (paper runs
         # one chain per decision; warm chains amortize burn-in).
         self._chain_state: Optional[np.ndarray] = None
+        # per-head chains (BOConfig.per_head_gphp): slot j warm-starts the
+        # chain of extra head j+1
+        self._head_chain_states: Dict[int, np.ndarray] = {}
+        # did the last _posterior_for re-fit or adopt draws? (the per-head
+        # factors re-fit at exactly the objective's boundaries)
+        self._boundary_refit = False
         # --- incremental-engine caches -----------------------------------
         self._store: Optional[ObservationStore] = store
         if store is not None:
@@ -419,6 +518,10 @@ class BOSuggester:
             and cache.post is not None
             and cache.token in (None, id(self._wrapper_store))
             and cache.n == len(old)
+            # subset backend: store row i is not factor row i once the
+            # inducing set is live, so the rank-1 downdate does not apply —
+            # fall back to the stateless rebuild.
+            and cache.inducing_sel is None
         ):
             for i in range(len(old)):
                 if old[:i] == fps[:i] and old[i + 1 :] == fps[i : len(old) - 1]:
@@ -477,9 +580,11 @@ class BOSuggester:
 
         x_all, y_std, _, _ = store.standardized()
         post = self._posterior_for(store, x_all, y_std)
+        rows = self.cache.live_rows(n)  # factor rows, in store order
+        n_live = len(rows)
         size = post.x_train.shape[0]
         y_live = np.zeros(size)
-        y_live[:n] = y_std
+        y_live[:n_live] = y_std[rows]
         post = refresh_alpha(post, jnp.asarray(y_live))
         self.cache.post = post
         y_best = jnp.asarray(float(y_std.min()))  # best *real* observation
@@ -490,7 +595,7 @@ class BOSuggester:
         pend_mask = np.zeros(cfg.max_pending, dtype=bool)
         n_excl = 0
         work = post
-        y_work = list(y_live[: n])
+        y_work = list(y_live[:n_live])
         if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
             if (
                 cfg.fantasy_block
@@ -573,15 +678,27 @@ class BOSuggester:
         post = self._posterior_for(
             store, x_all, np.ascontiguousarray(ystd[:, 0])
         )
+        rows = self.cache.live_rows(n)  # factor rows, in store order
+        n_live = len(rows)
         size = post.x_train.shape[0]
         y_live = np.zeros(size)
-        y_live[:n] = ystd[:, 0]
+        y_live[:n_live] = ystd[rows, 0]
         post = refresh_alpha(post, jnp.asarray(y_live))
         self.cache.post = post
 
         y_heads = np.zeros((m_all, size))
-        y_heads[:, :n] = ystd.T
-        alphas = solve_head_alphas(post, jnp.asarray(y_heads))
+        y_heads[:, :n_live] = ystd[rows].T
+        if cfg.per_head_gphp:
+            # every extra head runs its own GPHP chain + factor; the shared
+            # (S, M, n) alpha block is not built (head 0 scores through the
+            # objective posterior directly).
+            head_posts = self._head_posteriors_for(store, post, y_heads, n)
+            alphas = jnp.asarray(post.alpha)[:, None, :]
+            self.cache.head_alphas = None
+        else:
+            head_posts = ()
+            alphas = solve_head_alphas(post, jnp.asarray(y_heads))
+            self.cache.head_alphas = alphas  # arena accounting (factor_nbytes)
 
         # constraint thresholds + feasibility in standardized space
         t_signed = ms.signed_thresholds()  # (C,) raw signed bounds
@@ -614,7 +731,7 @@ class BOSuggester:
             y_best_w = sc.min(axis=0)
             y_best = 0.0
 
-        def make_head(alphas_now):
+        def make_head(alphas_now, posts_now):
             return MultiMetricHead(
                 alphas=alphas_now,
                 t_std=jnp.asarray(t_std),
@@ -622,6 +739,20 @@ class BOSuggester:
                 has_feasible=jnp.asarray(has_feasible),
                 weights=jnp.asarray(weights),
                 y_best_w=jnp.asarray(y_best_w),
+                head_posts=tuple(posts_now),
+            )
+
+        def refold_head(work_now, yh_now, heads_now):
+            """Rebuild the MultiMetricHead after a fantasy fold."""
+            if heads_now:
+                return make_head(
+                    jnp.asarray(work_now.alpha)[:, None, :], heads_now
+                )
+            return make_head(
+                solve_head_alphas(
+                    work_now, jnp.asarray(self._pad_heads(yh_now, work_now))
+                ),
+                (),
             )
 
         # --- pending (§4.4) + scratch posterior for fantasies ---------------
@@ -630,14 +761,15 @@ class BOSuggester:
         pend_mask = np.zeros(cfg.max_pending, dtype=bool)
         n_excl = 0
         work = post
-        head = make_head(alphas)
-        yh_work = [list(y_heads[j, :n]) for j in range(m_all)]
+        head_work = list(head_posts)  # per-head scratch (empty in shared mode)
+        head = make_head(alphas, head_work)
+        yh_work = [list(y_heads[j, :n_live]) for j in range(m_all)]
         if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
             for xp in pend_np:
-                work, yh_work = self._fantasy_append_multi(work, yh_work, xp)
-            head = make_head(
-                solve_head_alphas(work, jnp.asarray(self._pad_heads(yh_work, work)))
-            )
+                work, yh_work, head_work = self._fantasy_append_multi(
+                    work, yh_work, xp, head_work
+                )
+            head = refold_head(work, yh_work, head_work)
         elif len(pend_np) > 0:
             n_excl = min(len(pend_np), cfg.max_pending)
             pend_buf[:n_excl] = pend_np[:n_excl]
@@ -671,12 +803,10 @@ class BOSuggester:
             picks.append(vec)
             if slot + 1 < k:
                 if cfg.pending_strategy in ("liar", "kb"):
-                    work, yh_work = self._fantasy_append_multi(work, yh_work, vec)
-                    head = make_head(
-                        solve_head_alphas(
-                            work, jnp.asarray(self._pad_heads(yh_work, work))
-                        )
+                    work, yh_work, head_work = self._fantasy_append_multi(
+                        work, yh_work, vec, head_work
                     )
+                    head = refold_head(work, yh_work, head_work)
                 elif n_excl < cfg.max_pending:
                     pend_buf[n_excl] = vec
                     pend_mask[n_excl] = True
@@ -694,38 +824,71 @@ class BOSuggester:
         return out
 
     def _fantasy_append_multi(
-        self, work, yh_work: List[List[float]], x_vec: np.ndarray
+        self,
+        work,
+        yh_work: List[List[float]],
+        x_vec: np.ndarray,
+        head_work: Optional[list] = None,
     ):
-        """Multi-head fantasy fold: append the input once (shared factor),
-        extend every head's target list with its fantasy value (constant
-        liar, or per-head kriging-believer means)."""
+        """Multi-head fantasy fold: append the input once per resident factor
+        (the shared factor, plus each per-head factor when
+        ``per_head_gphp`` is on), extend every head's target list with its
+        fantasy value (constant liar, or per-head kriging-believer means)."""
         cfg = self.config
+        head_work = list(head_work) if head_work else []
+        xq = jnp.asarray(x_vec)
         if cfg.pending_strategy == "kb":
-            from repro.core.gp.multi import (
-                MultiOutputPosterior,
-                predict_heads,
-                solve_head_alphas,
-            )
+            if head_work:
+                # per-head kriging believer: each head's own posterior mean
+                mu0, _ = gplib.predict(
+                    work, xq[None, :], backend=cfg.fit_backend
+                )
+                vals = [float(jnp.mean(mu0))]
+                for hp in head_work:
+                    muh, _ = gplib.predict(
+                        hp, xq[None, :], backend=cfg.fit_backend
+                    )
+                    vals.append(float(jnp.mean(muh)))
+            else:
+                from repro.core.gp.multi import (
+                    MultiOutputPosterior,
+                    predict_heads,
+                    solve_head_alphas,
+                )
 
-            alphas_now = solve_head_alphas(
-                work, jnp.asarray(self._pad_heads(yh_work, work))
-            )
-            mu, _ = predict_heads(
-                MultiOutputPosterior(work, alphas_now),
-                jnp.asarray(x_vec)[None, :],
-                backend=cfg.fit_backend,
-            )  # (S, M, 1)
-            vals = [float(v) for v in np.asarray(jnp.mean(mu, axis=0))[:, 0]]
+                alphas_now = solve_head_alphas(
+                    work, jnp.asarray(self._pad_heads(yh_work, work))
+                )
+                mu, _ = predict_heads(
+                    MultiOutputPosterior(work, alphas_now),
+                    xq[None, :],
+                    backend=cfg.fit_backend,
+                )  # (S, M, 1)
+                vals = [
+                    float(v) for v in np.asarray(jnp.mean(mu, axis=0))[:, 0]
+                ]
         else:
             vals = [cfg.liar_value] * len(yh_work)
         live = len(yh_work[0])
         if live >= work.x_train.shape[0]:
             work = grow_posterior(work, bucket_size(live + 1))
-        work = posterior_append(work, jnp.asarray(x_vec), backend=cfg.fit_backend)
+        work = posterior_append(work, xq, backend=cfg.fit_backend)
         yh_work = [col + [v] for col, v in zip(yh_work, vals)]
         y_pad = np.zeros(work.x_train.shape[0])
         y_pad[: len(yh_work[0])] = yh_work[0]
-        return refresh_alpha(work, jnp.asarray(y_pad)), yh_work
+        work = refresh_alpha(work, jnp.asarray(y_pad))
+        if head_work:
+            refolded = []
+            for j, hp in enumerate(head_work):
+                if live >= hp.x_train.shape[0]:
+                    hp = grow_posterior(hp, bucket_size(live + 1))
+                hp = posterior_append(hp, xq, backend=cfg.fit_backend)
+                col = yh_work[j + 1]
+                yj = np.zeros(hp.x_train.shape[0])
+                yj[: len(col)] = col
+                refolded.append(refresh_alpha(hp, jnp.asarray(yj)))
+            head_work = refolded
+        return work, yh_work, head_work
 
     # ------------------------------------------------------ posterior cache
     def _posterior_for(
@@ -739,10 +902,10 @@ class BOSuggester:
         cache = self.cache
         pool = cache.pool
         n = x_all.shape[0]
-        nb = bucket_size(n)
         d = self.space.encoded_dim
         token = id(store)
-        backend = cfg.fit_backend
+        cache.store = store  # arena end-to-end accounting
+        self._boundary_refit = False  # did this decision re-fit/adopt draws?
 
         samples_valid = (
             cfg.incremental
@@ -790,17 +953,15 @@ class BOSuggester:
             post_valid = False  # factors (if any) describe the old draws
             new_obs = 0  # the adopted draws cover all current rows
             acct = n  # adoption refactorizes at n: the new factor boundary
+            self._boundary_refit = True
 
         if pool is not None:
             pool.decisions += 1
 
         if resample:
-            x_pad = np.zeros((nb, d))
-            y_pad = np.zeros((nb,))
-            x_pad[:n], y_pad[:n] = x_all, y_std
-            mask = np.zeros(nb, dtype=bool)
-            mask[:n] = True
-            xj, yj, mj = jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
+            self._boundary_refit = True
+            rows = self._boundary_rows(x_all, n)
+            xj, yj, mj = self._pad_rows(x_all, y_std, rows, d)
             samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
             cache.samples = np.asarray(samples)
             cache.obs_since_refit = 0
@@ -818,25 +979,58 @@ class BOSuggester:
             # factorize(r)+appends in the last bits, which would silently
             # break the bit-equivalence contract of engine snapshots
             # (``SelectionService.restore_job``) and arena eviction. RNG-free.
+            # The subset backend keeps the invariant: its inducing set is a
+            # deterministic function of the store prefix at the boundary, so
+            # re-selecting over [0, r) reproduces the evicted/snapshotted
+            # factor layout bit-exactly before the appends replay.
             r = min(n, max(2, acct - cache.obs_since_refit))
             cache.obs_since_refit += new_obs
-            rb = bucket_size(r)
-            x_pad = np.zeros((rb, d))
-            y_pad = np.zeros((rb,))
-            x_pad[:r], y_pad[:r] = x_all[:r], y_std[:r]
-            mask = np.zeros(rb, dtype=bool)
-            mask[:r] = True
-            post = self._factorize(
-                jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
-            )
-            post = self._append_rows(post, store, r, n)
+            rows = self._boundary_rows(x_all[:r], r)
+            xj, yj, mj = self._pad_rows(x_all, y_std, rows, d)
+            post = self._factorize(xj, yj, mj)
+            post = self._append_rows(post, store, r, n, live0=len(rows))
         else:
-            post = self._append_rows(cache.post, store, acct, n)
+            live0 = (
+                acct
+                if cache.inducing_sel is None
+                else len(cache.inducing_sel) + (acct - cache.inducing_n0)
+            )
+            post = self._append_rows(cache.post, store, acct, n, live0=live0)
             cache.obs_since_refit += new_obs
 
         cache.n = n
         cache.token = token
         return post
+
+    def _boundary_rows(self, x_prefix: np.ndarray, r: int) -> np.ndarray:
+        """Live store rows of a factorization at boundary ``r`` — all of
+        ``[0, r)`` on the exact backend, the greedy max-diversity inducing
+        set on the subset backend once the boundary reaches ``n_switch``.
+        Records the selection on the cache (``inducing_sel``/``inducing_n0``)
+        so the append path and target gathering agree with the factor."""
+        cfg = self.config
+        cache = self.cache
+        if cfg.posterior_backend == "subset" and r >= cfg.n_switch:
+            sel = select_inducing(x_prefix, cfg.max_inducing)
+            cache.inducing_sel = sel
+            cache.inducing_n0 = r
+            return sel
+        cache.inducing_sel = None
+        cache.inducing_n0 = 0
+        return np.arange(r, dtype=np.int64)
+
+    @staticmethod
+    def _pad_rows(x_all: np.ndarray, y_std: np.ndarray, rows: np.ndarray, d):
+        """Gather + bucket-pad the live rows for fitting/factorization."""
+        nlive = len(rows)
+        nb = bucket_size(nlive)
+        x_pad = np.zeros((nb, d))
+        y_pad = np.zeros((nb,))
+        x_pad[:nlive] = x_all[rows]
+        y_pad[:nlive] = y_std[rows]
+        mask = np.zeros(nb, dtype=bool)
+        mask[:nlive] = True
+        return jnp.asarray(x_pad), jnp.asarray(y_pad), jnp.asarray(mask)
 
     def _factorize(self, xj, yj, mj):
         """Factorize the masked rows under the cached GPHP draws. The Pallas
@@ -850,15 +1044,111 @@ class BOSuggester:
             with_inverse=self.config.acq.backend == "pallas",
         )
 
-    def _append_rows(self, post, store: ObservationStore, start: int, stop: int):
+    def _factorize_with(self, samples, xj, yj, mj):
+        """Factorize under an explicit draw set (per-head factors; the
+        per-head scorer is jnp-only, so no L⁻¹ cache is built)."""
+        params_batch = gpparams.GPHyperParams.unpack(
+            jnp.asarray(samples), self.space.encoded_dim
+        )
+        return gplib.fit_posterior_batch(
+            xj, yj, params_batch, mj, backend=self.config.fit_backend,
+            with_inverse=False,
+        )
+
+    def _head_posteriors_for(self, store: ObservationStore, post, y_heads, n):
+        """Per-head posteriors for ``BOConfig.per_head_gphp`` — one GPHP
+        chain and one factor per extra head, mirroring the objective factor's
+        lifecycle exactly: re-fitted at the objective's refit/adoption
+        boundaries (one RNG key per head, in head order), rank-1-appended
+        between boundaries, and rebuilt RNG-free after a restore or arena
+        eviction (the factor is X-only, so the replay needs no targets).
+        Alphas are refreshed against the current head targets every decision.
+        Returns the posts in head order (head 1 first)."""
+        cache = self.cache
+        m_extra = y_heads.shape[0] - 1
+        xj, mj = post.x_train, post.mask
+        stale = (
+            cache.head_samples is None or len(cache.head_samples) != m_extra
+        )
+        if self._boundary_refit or stale:
+            samples, posts = [], []
+            for j in range(m_extra):
+                yj = jnp.asarray(y_heads[j + 1])
+                s = self._fit_gphps(xj, yj, mj, chain_slot=j)
+                samples.append(np.asarray(s))
+                posts.append(self._factorize_with(s, xj, yj, mj))
+            cache.head_samples = samples
+            cache.head_posts = posts
+            cache.head_n = n
+        elif cache.head_posts is None:
+            # RNG-free rebuild: replay factorize-at-boundary + appends (same
+            # invariant as the objective factor; see ``_posterior_for``)
+            b = n - cache.obs_since_refit
+            rows_b = (
+                cache.inducing_sel
+                if cache.inducing_sel is not None
+                else np.arange(b, dtype=np.int64)
+            )
+            nlive = len(rows_b)
+            nb = bucket_size(nlive)
+            x_pad = np.zeros((nb, self.space.encoded_dim))
+            for k_, i in enumerate(rows_b):
+                x_pad[k_] = store.x_rows(int(i), int(i) + 1)[0]
+            mask = np.zeros(nb, dtype=bool)
+            mask[:nlive] = True
+            posts = []
+            for j in range(m_extra):
+                hp = self._factorize_with(
+                    cache.head_samples[j],
+                    jnp.asarray(x_pad),
+                    jnp.zeros(nb),
+                    jnp.asarray(mask),
+                )
+                posts.append(self._append_rows(hp, store, b, n, live0=nlive))
+            cache.head_posts = posts
+            cache.head_n = n
+        elif cache.head_n < n:
+            posts = []
+            for hp in cache.head_posts:
+                live0 = int(np.asarray(hp.mask).sum())
+                posts.append(
+                    self._append_rows(hp, store, cache.head_n, n, live0=live0)
+                )
+            cache.head_posts = posts
+            cache.head_n = n
+        out = []
+        for j, hp in enumerate(cache.head_posts):
+            yj = np.zeros(hp.x_train.shape[0])
+            m_copy = min(yj.shape[0], y_heads.shape[1])
+            yj[:m_copy] = y_heads[j + 1, :m_copy]
+            out.append(refresh_alpha(hp, jnp.asarray(yj)))
+        cache.head_posts = out
+        return tuple(out)
+
+    def _append_rows(
+        self,
+        post,
+        store: ObservationStore,
+        start: int,
+        stop: int,
+        live0: Optional[int] = None,
+    ):
         """Rank-1-append store rows [start, stop), growing the shape bucket
-        per row. Growth points depend only on the row index — never on how
-        many rows one decision happened to fold — so the factor state is a
-        path-independent function of (draws, rows, refit boundary); rebuilds
-        (eviction, snapshot restore) replay it bit-exactly."""
+        per row. Growth points depend only on the live-row count — never on
+        how many rows one decision happened to fold — so the factor state is
+        a path-independent function of (draws, rows, refit boundary);
+        rebuilds (eviction, snapshot restore) replay it bit-exactly.
+
+        ``live0`` is the number of live rows the factor holds before the
+        first append. It equals ``start`` on the exact backend (store row ==
+        factor row) but is the inducing count plus post-boundary appends on
+        the subset backend, where the factor is smaller than the store."""
         backend = self.config.fit_backend
+        if live0 is None:
+            live0 = start
         for i in range(start, stop):
-            nb_i = bucket_size(i + 1)
+            live = live0 + (i - start)
+            nb_i = bucket_size(live + 1)
             if post.x_train.shape[0] < nb_i:
                 post = grow_posterior(post, nb_i)
             post = posterior_append(
@@ -909,15 +1199,24 @@ class BOSuggester:
         return refresh_alpha(work, jnp.asarray(y_pad)), y_work
 
     # ---------------------------------------------------------------- gphps
-    def _fit_gphps(self, xj, yj, mj) -> jax.Array:
-        """Sample/optimize packed GPHPs; returns (S, 3d+2) packed draws."""
+    def _fit_gphps(
+        self, xj, yj, mj, chain_slot: Optional[int] = None
+    ) -> jax.Array:
+        """Sample/optimize packed GPHPs; returns (S, 3d+2) packed draws.
+        ``chain_slot=None`` is the objective chain; slot ``j`` is the
+        warm-start state of extra head ``j+1`` (``per_head_gphp``)."""
         cfg = self.config
         d = self.space.encoded_dim
         bounds = self._bounds
         init = gpparams.default_params(d).pack()
         init = jnp.clip(init, bounds.lower + 1e-4, bounds.upper - 1e-4)
-        if self._chain_state is not None:
-            prev = jnp.asarray(self._chain_state)
+        prev_state = (
+            self._chain_state
+            if chain_slot is None
+            else self._head_chain_states.get(chain_slot)
+        )
+        if prev_state is not None:
+            prev = jnp.asarray(prev_state)
             init = jnp.clip(prev, bounds.lower + 1e-4, bounds.upper - 1e-4)
 
         if cfg.gphp_method == "map":
@@ -925,14 +1224,22 @@ class BOSuggester:
                 xj, yj, mj, bounds, init, self._next_key(), cfg.eb_config,
                 cfg.fit_backend,
             )
-            self._chain_state = np.asarray(best)
+            self._set_chain_state(chain_slot, np.asarray(best))
             return best[None, :]
         samples = mcmc_gphps(
             xj, yj, mj, bounds, init, self._next_key(), cfg.slice_config,
             cfg.fit_backend,
         )
-        self._chain_state = np.asarray(samples[-1])
+        self._set_chain_state(chain_slot, np.asarray(samples[-1]))
         return samples
+
+    def _set_chain_state(
+        self, chain_slot: Optional[int], state: np.ndarray
+    ) -> None:
+        if chain_slot is None:
+            self._chain_state = state
+        else:
+            self._head_chain_states[chain_slot] = state
 
     # ---------------------------------------------------------- cold starts
     def _seen_matrix(
@@ -985,6 +1292,16 @@ class BOSuggester:
             else np.asarray(self.cache.samples).tolist(),
             "cached_n": self.cache.n,
             "obs_since_refit": self.cache.obs_since_refit,
+            # per-head GPHP chains (per_head_gphp; None/absent when off)
+            "head_chain_states": {
+                str(k): v.tolist()
+                for k, v in self._head_chain_states.items()
+            }
+            or None,
+            "cached_head_samples": None
+            if self.cache.head_samples is None
+            else [np.asarray(s).tolist() for s in self.cache.head_samples],
+            "cached_head_n": self.cache.head_n,
         }
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
@@ -1005,6 +1322,19 @@ class BOSuggester:
         self.cache.obs_since_refit = int(state.get("obs_since_refit", 0))
         self.cache.post = None  # refactorized lazily from cached samples
         self.cache.token = None
+        self.cache.inducing_sel = None  # re-selected in the RNG-free rebuild
+        self.cache.inducing_n0 = 0
+        hcs = state.get("head_chain_states") or {}
+        self._head_chain_states = {
+            int(k): np.asarray(v) for k, v in hcs.items()
+        }
+        hs = state.get("cached_head_samples")
+        self.cache.head_samples = (
+            None if hs is None else [np.asarray(s) for s in hs]
+        )
+        self.cache.head_n = int(state.get("cached_head_n", 0))
+        self.cache.head_posts = None  # rebuilt lazily, like the objective's
+        self.cache.head_alphas = None
         self._wrapper_store = None
         self._wrapper_fps = []
 

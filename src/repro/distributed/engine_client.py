@@ -299,10 +299,14 @@ class RemoteJobHandle:
         """Fetch the replica's current engine snapshot for this job (also
         refreshes the handle's failover baseline). Advertises the frame
         codecs this process decodes; the server compresses with the best
-        common one (or ships plain JSON — see ``repro.core.rpc``)."""
+        common one (or ships plain JSON — see ``repro.core.rpc``). When the
+        service sets ``snapshot_frame_bytes``, the compressed stream arrives
+        chunked (``SnapshotReply.frames``) so large-n store images never
+        become one message-sized wire string."""
         from repro.core.rpc import (
             available_snapshot_codecs,
             decode_snapshot_frame,
+            decode_snapshot_frames,
         )
 
         reply = self._rpc(
@@ -310,11 +314,15 @@ class RemoteJobHandle:
                 job_name=self.name, lease=lease,
                 include_factors=include_factors,
                 accept_codecs=available_snapshot_codecs(),
+                max_frame_bytes=self.service.snapshot_frame_bytes,
             )
         )
-        snap = reply.snapshot
-        if reply.codec is not None:
-            snap = decode_snapshot_frame(snap["frame"], reply.codec)
+        if reply.frames is not None:
+            snap = decode_snapshot_frames(reply.frames, reply.codec)
+        elif reply.codec is not None:
+            snap = decode_snapshot_frame(reply.snapshot["frame"], reply.codec)
+        else:
+            snap = reply.snapshot
         if not include_factors:
             self._snapshot = snap
             self._oplog = []
@@ -660,6 +668,10 @@ class RemoteService:
             own default applies when None).
         snapshot_every: state-mutating requests between snapshot refreshes —
             the failover replay log never grows past this.
+        snapshot_frame_bytes: when set, snapshot fetches ask the replica for
+            the *chunked* reply shape — compressed bytes split into pieces
+            of at most this size — so large-n store images stream in bounded
+            frames (None keeps the single-frame v2 shape).
         connect_timeout/call_timeout: socket timeouts in seconds; a timeout
             counts as replica death and triggers failover.
 
@@ -679,6 +691,7 @@ class RemoteService:
         *,
         bo_config: Optional[BOConfig] = None,
         snapshot_every: int = 8,
+        snapshot_frame_bytes: Optional[int] = None,
         connect_timeout: float = 5.0,
         call_timeout: float = 120.0,
     ):
@@ -687,6 +700,9 @@ class RemoteService:
         self.addresses = [tuple(a) for a in addresses]
         self.default_bo_config = bo_config
         self.snapshot_every = int(snapshot_every)
+        self.snapshot_frame_bytes = (
+            None if snapshot_frame_bytes is None else int(snapshot_frame_bytes)
+        )
         self.connect_timeout = float(connect_timeout)
         self.call_timeout = float(call_timeout)
         self._handles: Dict[str, RemoteJobHandle] = {}

@@ -214,10 +214,21 @@ class EngineServer:
             from repro.core.rpc import (
                 available_snapshot_codecs,
                 encode_snapshot_frame,
+                encode_snapshot_frames,
             )
 
             for codec in available_snapshot_codecs():
                 if codec in msg.accept_codecs:
+                    if msg.max_frame_bytes:
+                        # chunked shape: large-n store images stream as
+                        # bounded pieces of one compressed byte stream.
+                        return SnapshotReply(
+                            snapshot={},
+                            codec=codec,
+                            frames=encode_snapshot_frames(
+                                snap, codec, int(msg.max_frame_bytes)
+                            ),
+                        )
                     return SnapshotReply(
                         snapshot={"frame": encode_snapshot_frame(snap, codec)},
                         codec=codec,
