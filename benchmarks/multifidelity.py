@@ -1,0 +1,178 @@
+"""Multi-fidelity engine: resource savings from curve-aware early stopping
+(paper Fig. 4's time-savings claim, rerun against the in-service engine).
+
+Four arms on the same service-mode SimBackend job (identical BO config and
+seed; the arms differ only in who may stop a trial):
+
+* **none** — every trial runs its full curve (the resource ceiling).
+* **median** — client-side ``MedianRule`` (paper §5.2, the PR-2 baseline).
+* **asha-client** — client-side ``ASHARule`` (rung quantiles in the Tuner).
+* **curve-aware** — in-service ASHA (``TuningJobConfig.multi_fidelity``):
+  rung tables live in the ``SelectionService``, feed the per-rung f(x, r)
+  heads of ``core/gp/per_resource``, and drive promote/stop decisions.
+
+Reported per arm, seed-averaged: best objective, total training iterations
+consumed, and the time saving vs the no-stopping arm. The acceptance
+contract (asserted under ``--smoke``, CI): the curve-aware arm reaches
+within 5% of the no-stopping best objective using at most 60% of its
+iterations.
+
+Merged as a ``multifidelity`` section into BENCH_suggest.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+try:
+    from benchmarks.bench_io import merge_bench_json
+except ImportError:  # run as a script: benchmarks/ itself is sys.path[0]
+    from bench_io import merge_bench_json
+
+from repro.core import (
+    BOConfig,
+    Continuous,
+    SearchSpace,
+    SelectionService,
+    ServiceConfig,
+    Tuner,
+    TuningJobConfig,
+)
+from repro.core.asha import ASHAConfig, ASHARule
+from repro.core.median_rule import MedianRule
+from repro.core.scheduler import SimBackend
+
+_MF = ASHAConfig(r_min=3, eta=3, max_rungs=3)  # rung grid [3, 9, 27]
+_ITERS = 27
+
+
+def _space() -> SearchSpace:
+    return SearchSpace([
+        Continuous("lr", 1e-4, 1.0, scaling="log"),
+        Continuous("wd", 1e-5, 1e-1, scaling="log"),
+    ])
+
+
+def _floor(cfg) -> float:
+    # nonzero optimum (≈ a validation loss): relative quality gaps are
+    # meaningful, and the affine offset leaves every order-based decision
+    # (GP standardization, rung quantiles, medians) untouched.
+    return 1.0 + (math.log10(cfg["lr"]) + 2) ** 2 + (math.log10(cfg["wd"]) + 3) ** 2
+
+
+def _curve(cfg):
+    return _floor(cfg) + 2.0 * np.exp(-0.15 * np.arange(1, _ITERS + 1)), 1.0
+
+
+def _bo() -> BOConfig:
+    return BOConfig(num_init=3).fast()
+
+
+def _run_arm(arm: str, seed: int, max_trials: int):
+    svc = SelectionService(ServiceConfig(default_bo_config=_bo()))
+    jc = TuningJobConfig(
+        max_trials=max_trials, job_name=f"mf-{arm}-{seed}", seed=seed,
+        multi_fidelity=_MF if arm == "curve-aware" else None,
+    )
+    rule = None
+    if arm == "median":
+        rule = MedianRule()
+    elif arm == "asha-client":
+        rule = ASHARule(_MF)
+    res = Tuner(_space(), _curve, None, SimBackend(), jc,
+                stopping_rule=rule, service=svc).run()
+    iters = sum(len(t.curve) for t in res.trials)
+    return res.best_objective, iters, res.num_early_stopped
+
+
+ARMS = ("none", "median", "asha-client", "curve-aware")
+
+
+def compare_arms(num_seeds: int, max_trials: int):
+    out = {}
+    for arm in ARMS:
+        best, iters, stopped = zip(*(
+            _run_arm(arm, seed, max_trials) for seed in range(num_seeds)
+        ))
+        out[arm] = {
+            "best_objective": float(np.mean(best)),
+            "total_iterations": float(np.mean(iters)),
+            "num_early_stopped": float(np.mean(stopped)),
+        }
+    base = out["none"]
+    for arm in ARMS:
+        out[arm]["iteration_fraction"] = (
+            out[arm]["total_iterations"] / base["total_iterations"]
+        )
+        out[arm]["time_saving"] = 1.0 - out[arm]["iteration_fraction"]
+    return out
+
+
+def run(
+    num_seeds: int = 4,
+    max_trials: int = 12,
+    out_path: Optional[str] = "default",
+    assert_acceptance: bool = False,
+) -> List[Tuple[str, float, str]]:
+    arms = compare_arms(num_seeds, max_trials)
+    section = {
+        "config": {
+            "num_seeds": num_seeds,
+            "max_trials": max_trials,
+            "curve_iters": _ITERS,
+            "asha": {"r_min": _MF.r_min, "eta": _MF.eta,
+                     "max_rungs": _MF.max_rungs},
+        },
+        "arms": arms,
+    }
+    rows: List[Tuple[str, float, str]] = []
+    for arm in ARMS:
+        a = arms[arm]
+        rows.append((
+            f"multifidelity_{arm.replace('-', '_')}_best_mobj",
+            a["best_objective"] * 1e3,
+            f"iters{a['total_iterations']:.0f}_saving{a['time_saving']:.2f}",
+        ))
+    if assert_acceptance:
+        ca, base = arms["curve-aware"], arms["none"]
+        assert ca["best_objective"] <= 1.05 * base["best_objective"], (
+            f"curve-aware quality {ca['best_objective']:.4f} worse than "
+            f"5% over no-stopping {base['best_objective']:.4f}"
+        )
+        assert ca["iteration_fraction"] <= 0.60, (
+            f"curve-aware used {ca['iteration_fraction']:.0%} of the "
+            "no-stopping iterations (acceptance: ≤ 60%)"
+        )
+        assert ca["num_early_stopped"] > 0
+    if out_path == "default":
+        out_path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_suggest.json")
+    if out_path:
+        merge_bench_json(out_path, {"multifidelity": section})
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale variant + acceptance asserts, no "
+                         "JSON write (CI rot check)")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(num_seeds=1, max_trials=12, out_path=None,
+                   assert_acceptance=True)
+    else:
+        rows = run(assert_acceptance=True)
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    if args.smoke:
+        print("smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,13 +18,15 @@ def main() -> None:
                     help="paper-scale seed counts (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig2,fig4,fig5,async,gp,"
-                         "suggest,multijob,remote,multimetric,large_n,roofline")
+                         "suggest,multijob,remote,multimetric,multifidelity,"
+                         "large_n,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import async_strategies, bo_vs_random, early_stopping
     from benchmarks import gp_perf, log_scaling, roofline_report, warm_start
-    from benchmarks import large_n, multi_job, multimetric, remote_service
+    from benchmarks import large_n, multi_job, multifidelity, multimetric
+    from benchmarks import remote_service
     from benchmarks import suggest_throughput
 
     suites = []
@@ -53,6 +55,8 @@ def main() -> None:
         suites.append(("remote", remote_service.run))
     if only is None or "multimetric" in only:
         suites.append(("multimetric", multimetric.run))
+    if only is None or "multifidelity" in only:
+        suites.append(("multifidelity", multifidelity.run))
     if only is None or "large_n" in only:
         suites.append(("large_n", large_n.run))
     if only is None or "roofline" in only:

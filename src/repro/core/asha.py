@@ -14,11 +14,17 @@ k so far (asynchronous promotion — no waiting for a full bracket).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["ASHARule", "ASHAConfig", "HyperbandConfig", "SynchronousHyperband"]
+__all__ = [
+    "ASHARule",
+    "ASHAConfig",
+    "HyperbandConfig",
+    "SynchronousHyperband",
+    "rung_iters",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,27 +34,52 @@ class ASHAConfig:
     max_rungs: int = 8
 
 
+def rung_iters(config: ASHAConfig) -> List[int]:
+    """The rung grid r = r_min·η^k for k < max_rungs."""
+    return [config.r_min * config.eta**k for k in range(config.max_rungs)]
+
+
 class ASHARule:
-    """Drop-in replacement for MedianRule with ASHA semantics (minimize)."""
+    """Drop-in replacement for MedianRule with ASHA semantics (minimize).
+
+    Rung tables are keyed by trial id, so recording is *idempotent*: a trial
+    whose value was folded in at rung k by a ``should_stop`` decision is not
+    counted a second time when the same trial later completes (or when a
+    restored job replays its reports). Callers that don't track trial ids
+    (``trial_id=None``) get a fresh anonymous key per call — each anonymous
+    call is treated as a distinct trial.
+    """
 
     def __init__(self, config: ASHAConfig = ASHAConfig()):
         self.config = config
-        self._rungs: Dict[int, List[float]] = {}  # rung index -> recorded metrics
+        # rung index -> {trial key: recorded cummin value at that rung}
+        self._rungs: Dict[int, Dict] = {}
+        self._anon = 0  # counter for anonymous (trial_id=None) callers
 
     def _rung_iters(self) -> List[int]:
-        return [
-            self.config.r_min * self.config.eta**k
-            for k in range(self.config.max_rungs)
-        ]
+        return rung_iters(self.config)
 
-    def record_completed(self, curve: Sequence[float]) -> None:
-        """Completed curves also populate rungs (same interface as MedianRule)."""
+    def _key(self, trial_id) -> object:
+        if trial_id is not None:
+            return trial_id
+        self._anon += 1
+        return f"anon-{self._anon}"
+
+    def record_completed(
+        self, curve: Sequence[float], trial_id: Optional[int] = None
+    ) -> None:
+        """Completed curves also populate rungs (same interface as MedianRule).
+        Idempotent per trial: rungs the trial already occupies (e.g. via an
+        earlier ``should_stop`` decision) are overwritten, not re-appended."""
         c = np.minimum.accumulate(np.asarray(list(curve), dtype=np.float64))
+        key = self._key(trial_id)
         for k, r in enumerate(self._rung_iters()):
             if r <= len(c):
-                self._rungs.setdefault(k, []).append(float(c[r - 1]))
+                self._rungs.setdefault(k, {})[key] = float(c[r - 1])
 
-    def should_stop(self, curve: Sequence[float]) -> bool:
+    def should_stop(
+        self, curve: Sequence[float], trial_id: Optional[int] = None
+    ) -> bool:
         c = np.minimum.accumulate(np.asarray(list(curve), dtype=np.float64))
         r_now = len(c)
         rungs = self._rung_iters()
@@ -56,19 +87,41 @@ class ASHARule:
         if r_now not in rungs:
             return False
         k = rungs.index(r_now)
-        peers = self._rungs.setdefault(k, [])
+        peers = self._rungs.get(k, {})
         value = float(c[-1])
-        peers.append(value)
-        if len(peers) < self.config.eta:
-            return False  # not enough evidence at this rung yet
-        cutoff = float(np.quantile(peers, 1.0 / self.config.eta))
+        key = self._key(trial_id)
+        # evidence threshold counts this trial too; below it the rule must
+        # not mutate state — the trial will be back at its next rung, and a
+        # pre-recorded value here would double-count it against itself.
+        if len(peers) + (0 if key in peers else 1) < self.config.eta:
+            return False
+        self._rungs.setdefault(k, {})[key] = value
+        values = list(self._rungs[k].values())
+        cutoff = float(np.quantile(values, 1.0 / self.config.eta))
         return value > cutoff
 
     def state_dict(self) -> Dict:
-        return {"rungs": {str(k): v for k, v in self._rungs.items()}}
+        return {
+            "rungs": {
+                str(k): [[key, v] for key, v in table.items()]
+                for k, table in self._rungs.items()
+            },
+            "anon": self._anon,
+        }
 
     def load_state_dict(self, state: Dict) -> None:
-        self._rungs = {int(k): list(v) for k, v in state["rungs"].items()}
+        self._rungs = {}
+        for k, entries in state["rungs"].items():
+            table: Dict = {}
+            for i, e in enumerate(entries):
+                if isinstance(e, (list, tuple)):  # [key, value] pairs
+                    key, v = e
+                    key = tuple(key) if isinstance(key, list) else key
+                else:  # legacy unkeyed format: plain floats
+                    key, v = f"legacy-{k}-{i}", e
+                table[key] = float(v)
+            self._rungs[int(k)] = table
+        self._anon = int(state.get("anon", 0))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -103,6 +103,10 @@ class ObservationStore:
         self._x[: self._num_parents] = px
         self._y[: self._num_parents] = pz
         self._n_own = 0
+        # per-own-row caller keys (the Tuner passes trial ids): the binding
+        # the multi-fidelity layer uses to join store rows with rung tables.
+        # None for callers that don't track keys — the GP never reads them.
+        self._own_keys: List[Optional[Hashable]] = []
         self._pending: Dict[Hashable, Tuple[Dict[str, Any], np.ndarray]] = {}
 
     # ------------------------------------------------------------- counters
@@ -133,12 +137,18 @@ class ObservationStore:
         return 1 if self.metrics is None else self.metrics.num_metrics
 
     # ------------------------------------------------------------ mutation
-    def push(self, config: Mapping[str, Any], y: float) -> bool:
+    def push(
+        self, config: Mapping[str, Any], y: float, key: Optional[Hashable] = None
+    ) -> bool:
         """Append one finished observation. Non-finite objectives are dropped
-        (they must neither seed the GP nor shift the standardization)."""
-        return self.push_encoded(self.space.encode(config), y)
+        (they must neither seed the GP nor shift the standardization).
+        ``key`` (optional) tags the row with the caller's trial id — the
+        join handle of the multi-fidelity rung tables."""
+        return self.push_encoded(self.space.encode(config), y, key=key)
 
-    def push_encoded(self, x: np.ndarray, y: float) -> bool:
+    def push_encoded(
+        self, x: np.ndarray, y: float, key: Optional[Hashable] = None
+    ) -> bool:
         if self.num_metrics > 1:
             raise ValueError(
                 "multi-metric store: push the full metric vector "
@@ -153,9 +163,15 @@ class ObservationStore:
         self._x[n] = x
         self._y[n] = y
         self._n_own += 1
+        self._own_keys.append(key)
         return True
 
-    def push_metrics(self, config: Mapping[str, Any], values: Mapping[str, float]) -> bool:
+    def push_metrics(
+        self,
+        config: Mapping[str, Any],
+        values: Mapping[str, float],
+        key: Optional[Hashable] = None,
+    ) -> bool:
         """Append one finished observation from a named metric dict (signed
         through the ``MetricSet`` into the engine's minimize convention).
         Raises ``KeyError`` on a missing metric name; any non-finite metric
@@ -164,10 +180,12 @@ class ObservationStore:
         if self.metrics is None:
             raise ValueError("store has no MetricSet; use push(config, y)")
         return self.push_vector_encoded(
-            self.space.encode(config), self.metrics.signed_vector(values)
+            self.space.encode(config), self.metrics.signed_vector(values), key=key
         )
 
-    def push_vector_encoded(self, x: np.ndarray, yvec: np.ndarray) -> bool:
+    def push_vector_encoded(
+        self, x: np.ndarray, yvec: np.ndarray, key: Optional[Hashable] = None
+    ) -> bool:
         """Append one encoded row with its full signed metric vector (M,)."""
         yvec = np.asarray(yvec, dtype=np.float64).reshape(-1)
         if yvec.shape[0] != self.num_metrics:
@@ -175,7 +193,7 @@ class ObservationStore:
                 f"expected {self.num_metrics} metric values, got {yvec.shape[0]}"
             )
         if self.num_metrics == 1:
-            return self.push_encoded(x, float(yvec[0]))
+            return self.push_encoded(x, float(yvec[0]), key=key)
         if not np.all(np.isfinite(yvec)):
             return False
         n = self.num_observations
@@ -185,6 +203,7 @@ class ObservationStore:
         self._y[n] = yvec[0]
         self._yx[n] = yvec[1:]
         self._n_own += 1
+        self._own_keys.append(key)
         return True
 
     def rewrite_own_y(self, own_index: int, y: float) -> None:
@@ -215,6 +234,7 @@ class ObservationStore:
         self._y[n - 1] = 0.0
         self._yx[n - 1] = 0.0
         self._n_own -= 1
+        del self._own_keys[own_index]
         return removed
 
     def _grow(self, cap: int) -> None:
@@ -233,6 +253,12 @@ class ObservationStore:
         self._pending.pop(key, None)
 
     # --------------------------------------------------------------- views
+    def own_keys(self) -> List[Optional[Hashable]]:
+        """Per-own-row caller keys (trial ids), in push order — the handle
+        the multi-fidelity layer joins store rows to rung tables with. None
+        entries are rows pushed by key-less callers."""
+        return list(self._own_keys)
+
     def x_rows(self, start: int, stop: int) -> np.ndarray:
         """Encoded rows [start, stop) — the append log a cached posterior
         reads to catch up via rank-1 updates."""
@@ -376,6 +402,7 @@ class ObservationStore:
         state = {
             "own_x": self._x[npar:n].tolist(),
             "own_y": self._y[npar:n].tolist(),
+            "own_keys": list(self._own_keys),
         }
         if self.num_metrics > 1:
             state["own_yx"] = self._yx[npar:n].tolist()
@@ -402,6 +429,7 @@ class ObservationStore:
             "parent_y": array_to_wire(self._y[:npar]),
             "own_x": array_to_wire(self._x[npar:n]),
             "own_y": array_to_wire(self._y[npar:n]),
+            "own_keys": list(self._own_keys),
             "pending": [
                 [key, dict(cfg), array_to_wire(x)]
                 for key, (cfg, x) in self._pending.items()
@@ -428,28 +456,35 @@ class ObservationStore:
         self._x[: self._num_parents] = px.reshape(-1, d)
         self._y[: self._num_parents] = pz
         self._n_own = 0
+        self._own_keys = []
         self._pending = {}
         own_x = array_from_wire(snap["own_x"]).reshape(-1, d)
         own_y = array_from_wire(snap["own_y"])
+        keys = snap.get("own_keys") or [None] * len(own_x)
         if m_extra > 0:
             own_yx = array_from_wire(snap["own_yx"]).reshape(-1, m_extra)
-            for x, y, yx in zip(own_x, own_y, own_yx):
-                self.push_vector_encoded(x, np.concatenate(([y], yx)))
+            for x, y, yx, k in zip(own_x, own_y, own_yx, keys):
+                self.push_vector_encoded(x, np.concatenate(([y], yx)), key=k)
         else:
-            for x, y in zip(own_x, own_y):
-                self.push_encoded(x, float(y))
+            for x, y, k in zip(own_x, own_y, keys):
+                self.push_encoded(x, float(y), key=k)
         for key, cfg, x in snap["pending"]:
             self._pending[key] = (dict(cfg), array_from_wire(x))
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
         self._n_own = 0
+        self._own_keys = []
         self._pending.clear()
+        keys = state.get("own_keys") or [None] * len(state["own_x"])
         if self.num_metrics > 1:
-            for x, y, yx in zip(state["own_x"], state["own_y"], state["own_yx"]):
+            for x, y, yx, k in zip(
+                state["own_x"], state["own_y"], state["own_yx"], keys
+            ):
                 self.push_vector_encoded(
                     np.asarray(x, dtype=np.float64),
                     np.concatenate(([float(y)], np.asarray(yx, dtype=np.float64))),
+                    key=k,
                 )
             return
-        for x, y in zip(state["own_x"], state["own_y"]):
-            self.push_encoded(np.asarray(x, dtype=np.float64), float(y))
+        for x, y, k in zip(state["own_x"], state["own_y"], keys):
+            self.push_encoded(np.asarray(x, dtype=np.float64), float(y), key=k)

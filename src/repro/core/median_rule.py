@@ -19,7 +19,7 @@ Resilience details implemented exactly as described:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -42,14 +42,28 @@ class MedianRule:
 
     def __init__(self, config: MedianRuleConfig = MedianRuleConfig()):
         self.config = config
-        self._completed: List[np.ndarray] = []  # cummin curves of finished trials
+        # trial key -> cummin curve. Keying by trial id makes recording
+        # *idempotent*: a restored job that replays a completion (or a caller
+        # that reports the same trial twice) overwrites instead of
+        # double-counting the curve in the median. Anonymous callers
+        # (``trial_id=None``) get a fresh key per call.
+        self._completed: Dict = {}
+        self._anon = 0
 
     # ----------------------------------------------------------------- state
-    def record_completed(self, curve: Sequence[float]) -> None:
+    def record_completed(
+        self, curve: Sequence[float], trial_id: Optional[int] = None
+    ) -> None:
         """Register the full learning curve of a trial that ran to the end."""
         c = np.asarray(list(curve), dtype=np.float64)
-        if c.size:
-            self._completed.append(np.minimum.accumulate(c))
+        if not c.size:
+            return
+        if trial_id is None:
+            self._anon += 1
+            key = f"anon-{self._anon}"
+        else:
+            key = trial_id
+        self._completed[key] = np.minimum.accumulate(c)
 
     @property
     def num_completed(self) -> int:
@@ -59,12 +73,14 @@ class MedianRule:
         """Dynamic minimum iteration before any stopping decision."""
         if not self._completed:
             return np.iinfo(np.int32).max
-        med_len = float(np.median([len(c) for c in self._completed]))
+        med_len = float(np.median([len(c) for c in self._completed.values()]))
         dyn = int(np.ceil(self.config.min_iteration_fraction * med_len))
         return max(self.config.min_iteration_floor, dyn)
 
     # ------------------------------------------------------------- decision
-    def should_stop(self, curve: Sequence[float]) -> bool:
+    def should_stop(
+        self, curve: Sequence[float], trial_id: Optional[int] = None
+    ) -> bool:
         """Decide for a *running* trial given its metric history so far."""
         cfg = self.config
         if len(self._completed) < cfg.min_completed_curves:
@@ -75,14 +91,34 @@ class MedianRule:
             return False
         best_so_far = float(np.min(c))
         # median of completed curves' running best at the same iteration r
-        peers = [pc[min(r, len(pc)) - 1] for pc in self._completed if len(pc) > 0]
+        peers = [
+            pc[min(r, len(pc)) - 1]
+            for pc in self._completed.values()
+            if len(pc) > 0
+        ]
         if not peers:
             return False
         return best_so_far > float(np.median(peers))
 
     # ----------------------------------------------------------- persistence
     def state_dict(self) -> Dict:
-        return {"completed": [c.tolist() for c in self._completed]}
+        return {
+            "completed": [
+                [key, c.tolist()] for key, c in self._completed.items()
+            ],
+            "anon": self._anon,
+        }
 
     def load_state_dict(self, state: Dict) -> None:
-        self._completed = [np.asarray(c, dtype=np.float64) for c in state["completed"]]
+        self._completed = {}
+        for i, e in enumerate(state["completed"]):
+            if (
+                isinstance(e, (list, tuple))
+                and len(e) == 2
+                and isinstance(e[1], (list, tuple))
+            ):
+                key, c = e
+            else:  # legacy unkeyed format: plain curves
+                key, c = f"legacy-{i}", e
+            self._completed[key] = np.asarray(c, dtype=np.float64)
+        self._anon = int(state.get("anon", 0))

@@ -182,9 +182,15 @@ def optimize_acquisition(
 
 class MultiAcqSpec(NamedTuple):
     """Static (hashable) shape of a multi-metric acquisition problem —
-    jointly with ``AcqOptConfig`` this keys the jit cache."""
+    jointly with ``AcqOptConfig`` this keys the jit cache.
 
-    mode: str  # "constrained" | "pareto"
+    ``mode="rungs"`` is the multi-fidelity f(x, r) acquisition: heads are
+    [objective, rung 0, …, rung R−1] over the shared factor, scored as a
+    weighted per-head EI (``repro.core.gp.per_resource.rung_weighted_ei``);
+    ``num_objectives`` is then the head count 1+R and there are no
+    constraints."""
+
+    mode: str  # "constrained" | "pareto" | "rungs"
     num_objectives: int
     num_constraints: int
 
@@ -228,7 +234,19 @@ def _acq_values_multi(
     Pallas multi-head scorer serves the dense anchor sweep; gradient
     refinement always goes through the jnp composition (jax.grad)."""
     from repro.core.gp.multi import MultiOutputPosterior, predict_heads
+    from repro.core.gp.per_resource import rung_weighted_ei
     from repro.core.multimetric.acquisition import constrained_ei, scalarized_ei
+
+    def closed_form(mu, var):
+        if spec.mode == "constrained":
+            return constrained_ei(
+                mu, var, head.y_best, head.t_std, head.has_feasible
+            )
+        if spec.mode == "rungs":
+            # weights is the (1, R+1) acquisition row; y_best_w the (R+1,)
+            # per-head incumbents (shared variance: var is (S, m)).
+            return rung_weighted_ei(mu, var, head.y_best_w, head.weights[0])
+        return scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
 
     if head.head_posts:
         # per-head layout (BOConfig.per_head_gphp): every head predicts
@@ -264,11 +282,7 @@ def _acq_values_multi(
     mu, var = predict_heads(
         mp, x, backend="xla" if differentiable else cfg.backend
     )
-    if spec.mode == "constrained":
-        vals = constrained_ei(mu, var, head.y_best, head.t_std, head.has_feasible)
-    else:
-        vals = scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
-    return A.integrate_over_samples(vals)
+    return A.integrate_over_samples(closed_form(mu, var))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec"))

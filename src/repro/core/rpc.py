@@ -70,6 +70,10 @@ __all__ = [
     "SuggestBatchReply",
     "ObserveRequest",
     "ObserveReply",
+    "ReportRungRequest",
+    "ReportRungReply",
+    "PromotionRequest",
+    "PromotionReply",
     "HeartbeatRequest",
     "HeartbeatReply",
     "SnapshotRequest",
@@ -98,7 +102,10 @@ __all__ = [
 #: v3: chunked snapshot frames (``SnapshotRequest.max_frame_bytes`` /
 #: ``SnapshotReply.frames``) so large-n store images stream in bounded
 #: pieces instead of one message-sized blob.
-PROTOCOL_VERSION = 3
+#: v4: multi-fidelity verbs — ``report_rung`` (in-service ASHA promote/stop
+#: decisions) and ``promotion`` (rung-table readback) — plus
+#: ``RegisterRequest.multi_fidelity`` (the job's ASHA config wire dict).
+PROTOCOL_VERSION = 4
 
 #: Engine-snapshot schema version (``SelectionService.snapshot_job`` output).
 #: v2: ``metrics`` (the job's MetricSpec list) + the store's ``own_yx``
@@ -107,7 +114,10 @@ PROTOCOL_VERSION = 3
 #: per-head GPHP state (``head_samples``/``head_n``, per-head chain states)
 #: so a restoring replica replays the inducing-set construction and head
 #: chains bit-exactly.
-ENGINE_SNAPSHOT_VERSION = 3
+#: v4: ``multi_fidelity`` (ASHA config + rung tables + memoized decisions)
+#: and the store's ``own_keys`` row-key list (rows join rung tables by
+#: trial id).
+ENGINE_SNAPSHOT_VERSION = 4
 
 
 # --------------------------------------------------------------------------
@@ -255,6 +265,8 @@ class RegisterRequest:
     attempt against a live lease is refused with ``LEASE_HELD``.
 
     ``metric_specs`` (``MetricSet.to_wire``) declares a multi-metric job;
+    ``multi_fidelity`` (the ASHA config as a field dict) turns on in-service
+    ASHA promotion + per-rung acquisition heads for the job;
     ``capabilities`` advertises optional client features — currently
     ``"snapshot-zstd"`` / ``"snapshot-zlib"`` (the compressed-snapshot
     codecs this client decodes; see the module docstring).
@@ -270,6 +282,7 @@ class RegisterRequest:
     snapshot: Optional[Dict[str, Any]] = None
     takeover_lease: Optional[str] = None
     metric_specs: Optional[List[Dict[str, Any]]] = None
+    multi_fidelity: Optional[Dict[str, Any]] = None
     capabilities: List[str] = dataclasses.field(default_factory=list)
 
 
@@ -352,6 +365,50 @@ class ObserveReply:
     TYPE = "observe_reply"
     accepted: bool
     store_version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReportRungRequest:
+    """A running trial crossed a rung boundary: trial ``key``, the crossing
+    ``iteration``, and the trial's running-best ``value`` so far (already
+    signed into the minimize convention). The replica records the value in
+    the job's rung table (idempotently, keyed by trial) and returns the
+    in-service ASHA decision; replays of a crossing the replica has already
+    decided get the *memoized* original decision back."""
+
+    TYPE = "report_rung"
+    job_name: str
+    lease: str
+    key: Any
+    iteration: int
+    value: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ReportRungReply:
+    """``decision`` is ``"stop"`` or ``"continue"``; ``rung`` is the rung
+    index the iteration landed on (−1 for a non-rung iteration)."""
+
+    TYPE = "report_rung_reply"
+    decision: str
+    rung: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class PromotionRequest:
+    """Fetch the job's rung tables + memoized decisions
+    (``MultiFidelityState.promotion``) — the readback the equality and
+    failover tests compare across process boundaries."""
+
+    TYPE = "promotion"
+    job_name: str
+    lease: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PromotionReply:
+    TYPE = "promotion_reply"
+    state: Optional[Dict[str, Any]] = None  # None: job has no multi-fidelity
 
 
 @dataclasses.dataclass(frozen=True)
@@ -459,6 +516,10 @@ Message = Union[
     SuggestBatchReply,
     ObserveRequest,
     ObserveReply,
+    ReportRungRequest,
+    ReportRungReply,
+    PromotionRequest,
+    PromotionReply,
     HeartbeatRequest,
     HeartbeatReply,
     SnapshotRequest,
@@ -479,6 +540,10 @@ _REGISTRY: Dict[str, Type[Any]] = {
         SuggestBatchReply,
         ObserveRequest,
         ObserveReply,
+        ReportRungRequest,
+        ReportRungReply,
+        PromotionRequest,
+        PromotionReply,
         HeartbeatRequest,
         HeartbeatReply,
         SnapshotRequest,

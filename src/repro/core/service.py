@@ -295,17 +295,22 @@ class JobHandle:
         warm_pool: the combined ``WarmStartPool`` the store's parents came
             from, or None — the Tuner checkpoints this so restore does not
             re-fold siblings' moved histories.
+        multi_fidelity: the job's in-service ASHA state
+            (``MultiFidelityState``), or None for jobs without it.
         stale: set when another registration takes this name; a stale handle
             raises instead of silently serving the new job's engine.
     """
 
-    def __init__(self, name, space, suggester, store, service, warm_pool):
+    def __init__(
+        self, name, space, suggester, store, service, warm_pool, multi_fidelity=None
+    ):
         self.name = name
         self.space = space
         self.suggester = suggester
         self.store: ObservationStore = store
         self.service: "SelectionService" = service
         self.warm_pool: Optional[WarmStartPool] = warm_pool
+        self.multi_fidelity = multi_fidelity
         self.stale = False  # set when another registration takes this name
 
     def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
@@ -330,6 +335,27 @@ class JobHandle:
         """Record a finished observation of a multi-metric job from its
         named metric dict (direct-drive API)."""
         return self.store.push_metrics(config, values)
+
+    def report_rung(self, key, iteration: int, value: float) -> str:
+        """Report a running trial's rung crossing (value already signed into
+        the minimize convention) and return the in-service ASHA decision:
+        ``"stop"`` or ``"continue"``. Jobs without multi-fidelity always
+        continue — the client-side stopping rules own that path."""
+        if self.stale:
+            raise RuntimeError(
+                f"JobHandle {self.name!r} is stale: the name was re-registered"
+            )
+        if self.multi_fidelity is None:
+            return "continue"
+        decision, _ = self.multi_fidelity.report_rung(key, iteration, value)
+        return decision
+
+    def promotion(self) -> Optional[Dict[str, Any]]:
+        """Read-only JSON-safe view of the rung tables + memoized decisions
+        (None for jobs without multi-fidelity)."""
+        if self.multi_fidelity is None:
+            return None
+        return self.multi_fidelity.promotion()
 
 
 class SelectionService:
@@ -367,6 +393,7 @@ class SelectionService:
         warm_start: Optional[WarmStartPool] = None,
         fold_siblings: bool = True,
         metrics=None,
+        multi_fidelity=None,
     ) -> JobHandle:
         """Register (or re-register, e.g. after a checkpoint restore) a
         tuning job. Creates the job's observation store (sibling + user
@@ -383,6 +410,11 @@ class SelectionService:
         carry objective values only — there is nothing to fold into the
         constraint heads), but their *objective* column still feeds sibling
         warm-start of single-metric jobs in the group.
+
+        ``multi_fidelity`` (an ``ASHAConfig``, or its wire dict) turns on
+        in-service ASHA promotion + the per-rung f(x, r) acquisition heads
+        for this job; rung crossings then arrive via
+        ``JobHandle.report_rung``. Single-metric jobs only.
         """
         sig = space_signature(space)
         group = self._groups.get(sig)
@@ -392,6 +424,21 @@ class SelectionService:
             self._unregister(name)
 
         multi = metrics is not None and metrics.num_metrics > 1
+        mf_state = None
+        if multi_fidelity is not None:
+            if multi:
+                raise ValueError(
+                    "multi_fidelity supports single-metric jobs only"
+                )
+            from repro.core.multifidelity import MultiFidelityState
+
+            if isinstance(multi_fidelity, MultiFidelityState):
+                mf_state = multi_fidelity
+            else:
+                cfg = multi_fidelity
+                if isinstance(cfg, dict):
+                    cfg = MultiFidelityState.config_from_wire(cfg)
+                mf_state = MultiFidelityState(cfg)
         if multi and warm_start is not None and warm_start.num_parents > 0:
             raise ValueError(
                 "multi-metric jobs cannot take warm-start parents (parent "
@@ -429,8 +476,14 @@ class SelectionService:
                 suggester.attach_cache(cache)
             if hasattr(suggester, "bind_store"):
                 suggester.bind_store(store)
+        # the engine branches to the rung-aware acquisition when this is set
+        # and rung tables hold data; unset/None keeps suggestions bit-identical.
+        if mf_state is not None:
+            suggester.multi_fidelity_state = mf_state
 
-        handle = JobHandle(name, space, suggester, store, self, warm_pool)
+        handle = JobHandle(
+            name, space, suggester, store, self, warm_pool, multi_fidelity=mf_state
+        )
         group.jobs.append(name)
         self._jobs[name] = handle
         return handle
@@ -498,6 +551,9 @@ class SelectionService:
             "suggester": sugg.state_dict(),
             "cache": cache.snapshot(include_factors=include_factors),
             "pool": None if cache.pool is None else cache.pool.snapshot(),
+            "multi_fidelity": None
+            if handle.multi_fidelity is None
+            else handle.multi_fidelity.snapshot(),
         }
 
     def restore_job(self, snap: Dict[str, Any]) -> JobHandle:
@@ -557,6 +613,7 @@ class SelectionService:
             warm_pool.load_state_dict(snap["warm_pool"])
         from repro.core.multimetric import MetricSet
 
+        mf_snap = snap.get("multi_fidelity")
         handle = self.register_job(
             snap["job_name"],
             space,
@@ -565,7 +622,10 @@ class SelectionService:
             warm_start=warm_pool,
             fold_siblings=False,  # the snapshot's parent rows are authoritative
             metrics=MetricSet.from_wire(snap.get("metrics")),
+            multi_fidelity=None if mf_snap is None else mf_snap["config"],
         )
+        if mf_snap is not None:
+            handle.multi_fidelity.load_snapshot(mf_snap)
         handle.store.load_snapshot(snap["store"])
         handle.suggester.load_state_dict(snap["suggester"])
         cache = handle.suggester.cache

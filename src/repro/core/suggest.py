@@ -395,6 +395,10 @@ class BOSuggester:
         self._store: Optional[ObservationStore] = store
         if store is not None:
             self._check_multimetric_config(store)
+        # in-service ASHA state (``repro.core.multifidelity``) — set by the
+        # SelectionService when the job declares multi_fidelity. None (the
+        # default) keeps every decision bit-identical to the exact path.
+        self.multi_fidelity_state = None
         self._wrapper_store: Optional[ObservationStore] = None
         self._wrapper_fps: List[Tuple[float, bytes]] = []
         # the cache block is an object of its own so a SelectionService can
@@ -577,6 +581,13 @@ class BOSuggester:
             # multi-metric jobs branch off *after* the shared cold start; the
             # M=1 declaration never reaches here (bit-identical single path).
             return self._decide_multi(store, k, pend_np, ms)
+
+        mf = self.multi_fidelity_state
+        if mf is not None and mf.num_active_rungs() > 0:
+            # multi-fidelity jobs score (x, r) jointly once rung tables hold
+            # data; with empty tables (or multi_fidelity off) the exact
+            # single-metric path below is untouched.
+            return self._decide_rungs(store, k, pend_np, mf)
 
         x_all, y_std, _, _ = store.standardized()
         post = self._posterior_for(store, x_all, y_std)
@@ -807,6 +818,142 @@ class BOSuggester:
                         work, yh_work, vec, head_work
                     )
                     head = refold_head(work, yh_work, head_work)
+                elif n_excl < cfg.max_pending:
+                    pend_buf[n_excl] = vec
+                    pend_mask[n_excl] = True
+                    n_excl += 1
+        self.cache.touched()  # LRU bump + arena budget enforcement
+        return out
+
+    # ----------------------------------------------- multi-fidelity decisions
+    def _decide_rungs(
+        self, store: ObservationStore, k: int, pend_np: np.ndarray, mf
+    ) -> List[Dict[str, Any]]:
+        """One batched decision for a multi-fidelity job whose rung tables
+        hold data: the f(x, r) posterior of ``repro.core.gp.per_resource``.
+
+        The objective head (final/cummin value) drives the exact
+        single-metric machinery — GPHP chain, cached factor, rank-1 appends,
+        refit cadence — untouched; each active rung adds one alpha solve
+        against that factor per decision plus one matvec inside scoring
+        (the shape of the multi-metric heads). Head targets are a pure
+        function of (store rows + keys, rung tables), so every
+        replay-rehydration invariant (arena eviction, snapshot restore,
+        oplog failover) holds for the rung heads for free."""
+        from repro.core.gp.multi import solve_head_alphas
+        from repro.core.gp.per_resource import (
+            rung_head_targets,
+            rung_head_weights,
+        )
+
+        cfg = self.config
+        space = self.space
+        if cfg.acq.acq != "ei":
+            raise ValueError(
+                "multi-fidelity jobs support acq='ei' only (rung-weighted "
+                f"EI), got {cfg.acq.acq!r}"
+            )
+        n = store.num_observations
+        num_rungs = mf.num_active_rungs()
+        m_all = 1 + num_rungs
+
+        x_all, y_std, _, _ = store.standardized()
+        post = self._posterior_for(store, x_all, y_std)
+        rows = self.cache.live_rows(n)  # factor rows, in store order
+        n_live = len(rows)
+        size = post.x_train.shape[0]
+        y_live = np.zeros(size)
+        y_live[:n_live] = y_std[rows]
+        post = refresh_alpha(post, jnp.asarray(y_live))
+        self.cache.post = post
+
+        # (R, n) standardized rung-head targets; rows without a rung-k value
+        # impute their final objective (dense columns — no per-head masks).
+        rung_t = rung_head_targets(store, mf.rungs, num_rungs, y_std)
+        y_heads = np.zeros((m_all, size))
+        y_heads[0, :n_live] = y_std[rows]
+        y_heads[1:, :n_live] = rung_t[:, rows]
+        alphas = solve_head_alphas(post, jnp.asarray(y_heads))
+        self.cache.head_alphas = alphas  # arena accounting (factor_nbytes)
+
+        weights = rung_head_weights(mf.rung_grid, num_rungs)  # (1, R+1)
+        # per-head incumbents: each head's EI improves on its own best
+        y_best = float(y_std[:n].min())
+        y_best_w = np.concatenate(([y_best], rung_t.min(axis=1)))
+        spec = MultiAcqSpec(
+            mode="rungs", num_objectives=m_all, num_constraints=0
+        )
+
+        def make_head(alphas_now):
+            return MultiMetricHead(
+                alphas=alphas_now,
+                t_std=jnp.zeros((0,)),
+                y_best=jnp.asarray(y_best),
+                has_feasible=jnp.asarray(True),
+                weights=jnp.asarray(weights),
+                y_best_w=jnp.asarray(y_best_w),
+                head_posts=(),
+            )
+
+        def refold_head(work_now, yh_now):
+            """Rebuild the head block after a fantasy fold."""
+            return make_head(
+                solve_head_alphas(
+                    work_now, jnp.asarray(self._pad_heads(yh_now, work_now))
+                )
+            )
+
+        # --- pending (§4.4) + scratch posterior for fantasies ---------------
+        d = space.encoded_dim
+        pend_buf = np.zeros((cfg.max_pending, d))
+        pend_mask = np.zeros(cfg.max_pending, dtype=bool)
+        n_excl = 0
+        work = post
+        head = make_head(alphas)
+        yh_work = [list(y_heads[j, :n_live]) for j in range(m_all)]
+        if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
+            for xp in pend_np:
+                work, yh_work, _ = self._fantasy_append_multi(
+                    work, yh_work, xp, []
+                )
+            head = refold_head(work, yh_work)
+        elif len(pend_np) > 0:
+            n_excl = min(len(pend_np), cfg.max_pending)
+            pend_buf[:n_excl] = pend_np[:n_excl]
+            pend_mask[:n_excl] = True
+
+        picks: List[np.ndarray] = []
+        out: List[Dict[str, Any]] = []
+        for slot in range(k):
+            cands, _ = optimize_acquisition_multi(
+                work,
+                head,
+                self._anchors,
+                jnp.asarray(pend_buf),
+                jnp.asarray(pend_mask),
+                self._next_key(),
+                cfg.acq,
+                spec,
+            )
+            seen = self._seen_matrix(x_all, pend_np, picks)
+            config = vec = None
+            for cand in np.asarray(cands):
+                snapped = space.round_trip(cand)
+                if len(seen) == 0 or np.min(
+                    np.max(np.abs(seen - snapped[None, :]), axis=1)
+                ) > cfg.dedupe_tol:
+                    config, vec = space.decode(snapped), snapped
+                    break
+            if config is None:
+                config, vec = self._quasi_random(seen)
+            out.append(config)
+            picks.append(vec)
+            if slot + 1 < k:
+                if cfg.pending_strategy in ("liar", "kb"):
+                    work, yh_work, _ = self._fantasy_append_multi(
+                        work, yh_work, vec, []
+                    )
+                    head = refold_head(work, yh_work)
                 elif n_excl < cfg.max_pending:
                     pend_buf[n_excl] = vec
                     pend_mask[n_excl] = True
@@ -1274,7 +1421,7 @@ class BOSuggester:
         state, numpy/JAX RNG streams, Sobol position, cached GPHP draws and
         refit-cadence counters. Pair with the construction ``seed`` to rebuild
         this engine exactly (factors rehydrate RNG-free)."""
-        return {
+        state = {
             "chain_state": None
             if self._chain_state is None
             else self._chain_state.tolist(),
@@ -1303,6 +1450,13 @@ class BOSuggester:
             else [np.asarray(s).tolist() for s in self.cache.head_samples],
             "cached_head_n": self.cache.head_n,
         }
+        # multi-fidelity rung tables ride the suggester state so both the
+        # Tuner checkpoint and the remote EngineState/EngineRestore RPCs carry
+        # them without a new channel; key absent when MF is off keeps old
+        # checkpoints byte-identical.
+        if self.multi_fidelity_state is not None:
+            state["multi_fidelity"] = self.multi_fidelity_state.snapshot()
+        return state
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
         """Install ``state_dict()`` output into a suggester constructed with
@@ -1335,6 +1489,9 @@ class BOSuggester:
         self.cache.head_n = int(state.get("cached_head_n", 0))
         self.cache.head_posts = None  # rebuilt lazily, like the objective's
         self.cache.head_alphas = None
+        mf = state.get("multi_fidelity")
+        if mf is not None and self.multi_fidelity_state is not None:
+            self.multi_fidelity_state.load_snapshot(mf)
         self._wrapper_store = None
         self._wrapper_fps = []
 

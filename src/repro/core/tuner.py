@@ -100,6 +100,14 @@ class TuningJobConfig:
     seed: int = 0
     job_name: str = "tuning-job"
     metrics: Optional[Tuple] = None  # Tuple[MetricSpec, ...]
+    # multi-fidelity mode (``repro.core.asha.ASHAConfig``): promote/stop
+    # decisions are made *inside* the selection service at each rung crossing
+    # (``JobHandle.report_rung``), and the engine scores candidates with
+    # per-rung GP heads over the shared factor (``core/gp/per_resource``).
+    # Service mode only; mutually exclusive with a client-side
+    # ``stopping_rule``. None (default) disables — bit-identical to the
+    # fixed-fidelity engine.
+    multi_fidelity: Optional[Any] = None  # ASHAConfig
 
 
 @dataclasses.dataclass
@@ -216,6 +224,35 @@ class Tuner:
             self.metric_set = MetricSet(job_config.metrics)
         else:
             self.metric_set = None
+        # stopping rules predate trial-id keying; detect support once so old
+        # custom rules (positional should_stop(curve)) keep working.
+        self._rule_stop_keyed = self._accepts_trial_id(
+            getattr(stopping_rule, "should_stop", None)
+        )
+        self._rule_rec_keyed = self._accepts_trial_id(
+            getattr(stopping_rule, "record_completed", None)
+        )
+        # multi-fidelity (ASHA-in-service; repro.core.multifidelity): rung
+        # crossings route through JobHandle.report_rung; the service owns the
+        # rung tables and the promote/stop decisions.
+        self.multi_fidelity = job_config.multi_fidelity
+        self._mf_rungs: set[int] = set()
+        if self.multi_fidelity is not None:
+            if service is None:
+                raise ValueError(
+                    "multi_fidelity requires service mode (pass service=...)"
+                )
+            if stopping_rule is not None:
+                raise ValueError(
+                    "multi_fidelity replaces stopping_rule — pass one, not both"
+                )
+            if self.metric_set is not None and self.metric_set.num_metrics > 1:
+                raise ValueError(
+                    "multi_fidelity supports single-metric jobs only"
+                )
+            from repro.core.asha import rung_iters
+
+            self._mf_rungs = set(rung_iters(self.multi_fidelity))
         # service mode (paper §3 Fig. 1): decisions route through a shared
         # SelectionService — store/cache are service-owned, siblings on the
         # same space pool GPHP samples and warm-start each other.
@@ -236,6 +273,46 @@ class Tuner:
         self.max_parallel = job_config.max_parallel
         self.store = self._new_store()
 
+    # ------------------------------------------------------- stopping rules
+    @staticmethod
+    def _accepts_trial_id(fn) -> bool:
+        if fn is None:
+            return False
+        import inspect
+
+        try:
+            return "trial_id" in inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            return False
+
+    def _rule_curve(self, trial: Trial) -> List[float]:
+        """The trial's curve signed into the minimize convention the rules
+        assume. For a declared maximize objective the raw curve carries the
+        wrong sign — feeding it unsigned makes the rules stop the *best*
+        trials (consistent with the resolved-metric convention of the
+        multi-metric layer)."""
+        sign = 1.0 if self.metric_set is None else self.metric_set.specs[0].sign
+        if sign == 1.0:
+            return trial.curve
+        return [sign * v for v in trial.curve]
+
+    def _rule_should_stop(self, trial: Trial) -> bool:
+        curve = self._rule_curve(trial)
+        if self._rule_stop_keyed:
+            return self.stopping_rule.should_stop(
+                curve, trial_id=trial.trial_id
+            )
+        return self.stopping_rule.should_stop(curve)
+
+    def _rule_record_completed(self, trial: Trial) -> None:
+        curve = self._rule_curve(trial)
+        if self._rule_rec_keyed:
+            self.stopping_rule.record_completed(
+                curve, trial_id=trial.trial_id
+            )
+        else:
+            self.stopping_rule.record_completed(curve)
+
     # ------------------------------------------------------------- history
     def _new_store(self) -> ObservationStore:
         """Fresh observation store (warm-start parents folded in once); bind
@@ -253,6 +330,7 @@ class Tuner:
                 warm_start=self.warm_start,
                 fold_siblings=not self._warm_start_restored,
                 metrics=self.metric_set,
+                multi_fidelity=self.multi_fidelity,
             )
             self._service_handle = handle
             self.suggester = handle.suggester
@@ -281,12 +359,14 @@ class Tuner:
             if trial.metrics is None:
                 return
             try:
-                self.store.push_metrics(trial.config, trial.metrics)
+                self.store.push_metrics(
+                    trial.config, trial.metrics, key=trial.trial_id
+                )
             except KeyError:
                 pass  # missing metric name: row cannot seed the GP
             return
         if self._objective_usable(trial) and math.isfinite(trial.objective):
-            self.store.push(trial.config, trial.objective)
+            self.store.push(trial.config, trial.objective, key=trial.trial_id)
 
     def _objective_usable(self, trial: Trial) -> bool:
         """Is ``trial.objective`` trustworthy for ranking/seeding? For a
@@ -419,9 +499,25 @@ class Tuner:
             trial.curve.append(ev.value)
             trial.resource_used = max(trial.resource_used, ev.iteration)
             if (
+                self._mf_rungs
+                and ev.trial_id not in self._stop_requested
+                and len(trial.curve) in self._mf_rungs
+            ):
+                # rung crossing: the service owns the promote/stop decision
+                # (idempotent per (trial, rung) — restore replays get the
+                # original decision back). Value = signed running best.
+                decision = self._service_handle.report_rung(
+                    ev.trial_id,
+                    len(trial.curve),
+                    float(min(self._rule_curve(trial))),
+                )
+                if decision == "stop":
+                    self._stop_requested.add(ev.trial_id)
+                    self.backend.request_stop(ev.trial_id)
+            if (
                 self.stopping_rule is not None
                 and ev.trial_id not in self._stop_requested
-                and self.stopping_rule.should_stop(trial.curve)
+                and self._rule_should_stop(trial)
             ):
                 self._stop_requested.add(ev.trial_id)
                 self.backend.request_stop(ev.trial_id)
@@ -456,7 +552,7 @@ class Tuner:
             else:
                 trial.state = TrialState.COMPLETED
                 if self.stopping_rule is not None and trial.curve:
-                    self.stopping_rule.record_completed(trial.curve)
+                    self._rule_record_completed(trial)
             self._observe_terminal(trial)
             self._record_timeline(ev.time)
             for cb in self.callbacks:
@@ -673,9 +769,11 @@ class Tuner:
                     continue
                 if multi:
                     if t.metrics is not None:
-                        self.store.push_metrics(t.config, t.metrics)
+                        self.store.push_metrics(
+                            t.config, t.metrics, key=t.trial_id
+                        )
                 elif math.isfinite(t.objective):
-                    self.store.push(t.config, t.objective)
+                    self.store.push(t.config, t.objective, key=t.trial_id)
         for _, t, _ in self._retry_queue:
             self.store.mark_pending(t.trial_id, t.config)
         if state.get("suggester_state") and hasattr(self.suggester, "load_state_dict"):

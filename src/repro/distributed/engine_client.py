@@ -52,8 +52,10 @@ from repro.core.rpc import (
     HeartbeatRequest,
     Message,
     ObserveRequest,
+    PromotionRequest,
     ProtocolError,
     RegisterRequest,
+    ReportRungRequest,
     SnapshotRequest,
     SuggestBatchRequest,
     bo_config_to_wire,
@@ -125,22 +127,23 @@ class MirroredStore(ObservationStore):
         super().__init__(space, warm_start=warm_start, metrics=metrics)
         self._handle = handle
 
-    def push_encoded(self, x: np.ndarray, y: float) -> bool:
-        accepted = super().push_encoded(x, y)
+    def push_encoded(self, x: np.ndarray, y: float, key=None) -> bool:
+        accepted = super().push_encoded(x, y, key=key)
         if accepted and self._handle is not None:
             self._handle._observe_push(np.asarray(x), float(y),
-                                       expect_version=self.num_observations)
+                                       expect_version=self.num_observations,
+                                       key=key)
         return accepted
 
-    def push_vector_encoded(self, x: np.ndarray, yvec: np.ndarray) -> bool:
+    def push_vector_encoded(self, x: np.ndarray, yvec: np.ndarray, key=None) -> bool:
         if self.num_metrics == 1:
             # delegates to ``push_encoded`` above — mirrored there.
-            return super().push_vector_encoded(x, yvec)
-        accepted = ObservationStore.push_vector_encoded(self, x, yvec)
+            return super().push_vector_encoded(x, yvec, key=key)
+        accepted = ObservationStore.push_vector_encoded(self, x, yvec, key=key)
         if accepted and self._handle is not None:
             self._handle._observe_push_vector(
                 np.asarray(x), np.asarray(yvec, dtype=np.float64),
-                expect_version=self.num_observations,
+                expect_version=self.num_observations, key=key,
             )
         return accepted
 
@@ -199,11 +202,14 @@ class RemoteJobHandle:
         warm_start: Optional[WarmStartPool],
         fold_siblings: bool,
         metrics=None,
+        multi_fidelity=None,
     ):
         self.name = name
         self.space = space
         self.service = service
         self.metrics = metrics  # Optional[MetricSet] (multi-metric jobs)
+        # ASHA config wire dict (or None) — the replica owns the live state.
+        self.multi_fidelity = multi_fidelity
         self.stale = False
         self.warm_pool: Optional[WarmStartPool] = None
         self.store: Optional[MirroredStore] = None
@@ -250,6 +256,35 @@ class RemoteJobHandle:
         """Record a finished observation (direct-drive API; the Tuner pushes
         through ``store`` instead). Mirrors to the replica via the store."""
         return self.store.push(config, y)
+
+    def report_rung(self, key, iteration: int, value: float) -> str:
+        """Report a running trial's rung crossing to the leased replica and
+        return its in-service ASHA decision (``"stop"``/``"continue"``). The
+        decision is logged with the op: on failover the replay re-issues the
+        report and the restored replica must return the *memoized* original
+        decision — verified, not assumed."""
+        if self.stale:
+            raise RuntimeError(
+                f"RemoteJobHandle {self.name!r} is stale: the name was "
+                "re-registered (give concurrent jobs distinct job names)"
+            )
+        reply = self._rpc(
+            lambda lease: ReportRungRequest(
+                job_name=self.name, lease=lease, key=key,
+                iteration=int(iteration), value=float(value),
+            )
+        )
+        decision = str(reply.decision)
+        self._log(("rung", key, int(iteration), float(value), decision))
+        return decision
+
+    def promotion(self) -> Optional[Dict[str, Any]]:
+        """Fetch the job's rung tables + memoized decisions from the replica
+        (None for jobs without multi-fidelity)."""
+        reply = self._rpc(
+            lambda lease: PromotionRequest(job_name=self.name, lease=lease)
+        )
+        return reply.state
 
     def heartbeat(self) -> float:
         """Renew the lease without doing work; returns the TTL granted.
@@ -329,13 +364,15 @@ class RemoteJobHandle:
         return snap
 
     # -------------------------------------------------------- store mirrors
-    def _observe_push(self, x: np.ndarray, y: float, expect_version: int) -> None:
+    def _observe_push(self, x: np.ndarray, y: float, expect_version: int,
+                      key=None) -> None:
         from repro.core.gp.serialize import array_to_wire
 
         wire = array_to_wire(x)
         reply = self._rpc(
             lambda lease: ObserveRequest(
-                job_name=self.name, lease=lease, kind="push", x=wire, y=y
+                job_name=self.name, lease=lease, kind="push", x=wire, y=y,
+                key=key,
             )
         )
         if not reply.accepted or reply.store_version != expect_version:
@@ -343,10 +380,10 @@ class RemoteJobHandle:
                 f"replica store at {reply.store_version} obs after push, "
                 f"client mirror at {expect_version}"
             )
-        self._log(("push", wire, y))
+        self._log(("push", wire, y, key))
 
     def _observe_push_vector(
-        self, x: np.ndarray, yvec: np.ndarray, expect_version: int
+        self, x: np.ndarray, yvec: np.ndarray, expect_version: int, key=None
     ) -> None:
         from repro.core.gp.serialize import array_to_wire
 
@@ -355,7 +392,7 @@ class RemoteJobHandle:
         reply = self._rpc(
             lambda lease: ObserveRequest(
                 job_name=self.name, lease=lease, kind="push", x=wire,
-                ys=wire_ys,
+                ys=wire_ys, key=key,
             )
         )
         if not reply.accepted or reply.store_version != expect_version:
@@ -363,7 +400,7 @@ class RemoteJobHandle:
                 f"replica store at {reply.store_version} obs after push, "
                 f"client mirror at {expect_version}"
             )
-        self._log(("pushv", wire, wire_ys))
+        self._log(("pushv", wire, wire_ys, key))
 
     def _observe_pending(self, key, config: Dict[str, Any]) -> None:
         self._rpc(
@@ -453,6 +490,7 @@ class RemoteJobHandle:
             metric_specs=None
             if self.metrics is None
             else self.metrics.to_wire(),
+            multi_fidelity=self.multi_fidelity,
             capabilities=caps,
         )
 
@@ -615,19 +653,36 @@ class RemoteJobHandle:
                         "diverged from the original suggestions"
                     )
             elif kind == "push":
-                _, wire, y = op
+                _, wire, y, key = op
                 reply = self._conn.call(
                     ObserveRequest(job_name=self.name, lease=self._lease,
-                                   kind="push", x=wire, y=y)
+                                   kind="push", x=wire, y=y, key=key)
                 )
                 self._check_replay(reply)
             elif kind == "pushv":
-                _, wire, wire_ys = op
+                _, wire, wire_ys, key = op
                 reply = self._conn.call(
                     ObserveRequest(job_name=self.name, lease=self._lease,
-                                   kind="push", x=wire, ys=wire_ys)
+                                   kind="push", x=wire, ys=wire_ys, key=key)
                 )
                 self._check_replay(reply)
+            elif kind == "rung":
+                _, key, iteration, value, decision = op
+                reply = self._conn.call(
+                    ReportRungRequest(job_name=self.name, lease=self._lease,
+                                      key=key, iteration=iteration,
+                                      value=value)
+                )
+                self._check_replay(reply)
+                if reply.decision != decision:
+                    # the restored replica must hand back the memoized
+                    # original decision; anything else means the trial was
+                    # (or was not) stopped on state we cannot reproduce.
+                    raise ReplicaDivergenceError(
+                        f"job {self.name!r}: replayed report_rung({key!r}, "
+                        f"iter {iteration}) decided {reply.decision!r}, "
+                        f"original decision was {decision!r}"
+                    )
             elif kind == "pending":
                 _, key, config = op
                 reply = self._conn.call(
@@ -725,6 +780,7 @@ class RemoteService:
         warm_start: Optional[WarmStartPool] = None,
         fold_siblings: bool = True,
         metrics=None,
+        multi_fidelity=None,
     ) -> RemoteJobHandle:
         """Register a tuning job onto the fleet; same signature and handle
         surface as ``SelectionService.register_job``. Re-registering a name
@@ -739,6 +795,11 @@ class RemoteService:
         # a RemoteSuggester is this service's own shim (the Tuner hands it
         # back on checkpoint-restore re-registration): the replica-side
         # engine is service-created either way, so it is simply replaced.
+        mf_wire = multi_fidelity
+        if mf_wire is not None and not isinstance(mf_wire, dict):
+            import dataclasses as _dc
+
+            mf_wire = _dc.asdict(mf_wire)  # ASHAConfig → wire dict
         handle = RemoteJobHandle(
             self,
             name,
@@ -748,6 +809,7 @@ class RemoteService:
             warm_start,
             fold_siblings,
             metrics=metrics,
+            multi_fidelity=mf_wire,
         )
         prior = self._handles.get(name)
         if prior is not None and not prior.stale:

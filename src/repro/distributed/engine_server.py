@@ -54,9 +54,13 @@ from repro.core.rpc import (
     HeartbeatRequest,
     ObserveReply,
     ObserveRequest,
+    PromotionReply,
+    PromotionRequest,
     ProtocolError,
     RegisterReply,
     RegisterRequest,
+    ReportRungReply,
+    ReportRungRequest,
     SnapshotReply,
     SnapshotRequest,
     SuggestBatchReply,
@@ -197,6 +201,17 @@ class EngineServer:
             return self._suggest(msg)
         if isinstance(msg, ObserveRequest):
             return self._observe(msg)
+        if isinstance(msg, ReportRungRequest):
+            handle = self._checked(msg.job_name, msg.lease)
+            if handle.multi_fidelity is None:
+                return ReportRungReply(decision="continue", rung=-1)
+            decision, rung = handle.multi_fidelity.report_rung(
+                msg.key, int(msg.iteration), float(msg.value)
+            )
+            return ReportRungReply(decision=decision, rung=rung)
+        if isinstance(msg, PromotionRequest):
+            handle = self._checked(msg.job_name, msg.lease)
+            return PromotionReply(state=handle.promotion())
         if isinstance(msg, HeartbeatRequest):
             handle = self._checked(msg.job_name, msg.lease)
             pool = self.service.group_pool(handle.name)
@@ -327,6 +342,7 @@ class EngineServer:
                 warm_start=warm,
                 fold_siblings=msg.fold_siblings,
                 metrics=MetricSet.from_wire(msg.metric_specs),
+                multi_fidelity=msg.multi_fidelity,
             )
         token = uuid.uuid4().hex
         self._leases[msg.job_name] = _Lease(token, now + self.lease_ttl)
@@ -374,10 +390,12 @@ class EngineServer:
         if msg.kind == "push":
             if msg.ys is not None:  # multi-metric: full signed vector
                 accepted = store.push_vector_encoded(
-                    array_from_wire(msg.x), array_from_wire(msg.ys)
+                    array_from_wire(msg.x), array_from_wire(msg.ys), key=msg.key
                 )
             else:
-                accepted = store.push_encoded(array_from_wire(msg.x), float(msg.y))
+                accepted = store.push_encoded(
+                    array_from_wire(msg.x), float(msg.y), key=msg.key
+                )
         elif msg.kind == "pending":
             store.mark_pending(msg.key, msg.config)
             accepted = True

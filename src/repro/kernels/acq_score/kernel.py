@@ -162,8 +162,8 @@ def _acq_multi_kernel(
     tcon_ref,  # (1, max(C,1)) standardized constraint thresholds (or dummy)
     ybest_ref,  # (1, 1) best feasible incumbent (constrained; dummy in pareto)
     feas_ref,  # (1, 1) 1.0 iff a feasible incumbent exists (constrained)
-    weights_ref,  # (W, K) simplex scalarization draws (pareto; dummy else)
-    ybw_ref,  # (W, 1) per-draw scalarized incumbent (pareto; dummy else)
+    weights_ref,  # (W, K) scalarization draws (pareto) | (1, M) rung weights
+    ybw_ref,  # (W, 1) scalarized incumbents (pareto) | (M, 1) per-head (rungs)
     out_ref,  # (1, tile_a) acquisition values
     *,
     mode: str,
@@ -174,8 +174,9 @@ def _acq_multi_kernel(
     cell and amortized over all M metric heads — each extra head costs one
     (1, npad)·(npad, tile_a) matvec for its mean (the shared factor means the
     predictive variance is common across heads). The constrained-EI product
-    (EI₀ · Π Φ) or the W-draw scalarized EI is applied in registers; only the
-    (1, tile_a) score tile is written back."""
+    (EI₀ · Π Φ), the W-draw scalarized EI, or the rung-weighted per-head EI
+    sum is applied in registers; only the (1, tile_a) score tile is written
+    back — rungs amortize over the shared gram/solve exactly as heads do."""
     a = warp_a_ref[...]
     b = warp_b_ref[...]
     on = warp_on_ref[...]
@@ -215,6 +216,17 @@ def _acq_multi_kernel(
         e0 = _ei_closed_form(mu[0:1, :], sigma, ybest_ref[0, 0])
         has_feas = feas_ref[0, 0]
         out_ref[...] = jnp.where(has_feas > 0.5, e0 * feas, feas)
+    elif mode == "rungs":
+        # per-head EI against each head's own incumbent (shared σ broadcasts
+        # against the (M, 1) incumbent column), then one weights-row
+        # contraction — f(x, r) over all rungs for the cost of one extra
+        # (1, M)·(M, tile_a) matvec.
+        ei_h = _ei_closed_form(mu, sigma, ybw_ref[...])  # (M, tile_a)
+        out_ref[...] = jax.lax.dot_general(
+            weights_ref[...], ei_h,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=s1.dtype,
+        )  # (1, tile_a)
     else:  # "pareto" — random-scalarization EI averaged over the W draws
         weights = weights_ref[...]  # (W, K)
         num_obj = weights.shape[1]
@@ -259,6 +271,7 @@ def acq_score_multi_pallas(
     num_heads = alphas.shape[1]
     tc = tcon.shape[1]
     w_rows, w_cols = weights.shape
+    yw_rows = y_best_w.shape[0]  # == w_rows in pareto; num_heads in rungs
     grid = (s, m // tile_a)
     return pl.pallas_call(
         functools.partial(_acq_multi_kernel, mode=mode, num_con=num_con),
@@ -278,7 +291,7 @@ def acq_score_multi_pallas(
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
             pl.BlockSpec((w_rows, w_cols), lambda i, j: (0, 0)),
-            pl.BlockSpec((w_rows, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((yw_rows, 1), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, tile_a), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((s, m), anchors.dtype),

@@ -152,17 +152,21 @@ def acq_score_multi(
 ) -> jax.Array:
     """Multi-head acquisition values at ``x_star``: (S, m), larger is
     better. ``mode``: "constrained" (EI₀ · Π Φ feasibility) | "pareto"
-    (random-scalarization EI averaged over the head's weight draws).
+    (random-scalarization EI averaged over the head's weight draws) |
+    "rungs" (resource-weighted per-head EI over the multi-fidelity rung
+    heads — scores f(x, r) jointly across the rung grid).
 
     ``backend="xla"`` is the production composition
-    (``gp.multi.predict_heads`` + ``multimetric.acquisition``);
-    ``backend="pallas"`` runs the fused kernel — warp + cross-gram +
-    cached-factor solve once per (GPHP-sample × anchor-tile), the extra
-    heads amortized as matvecs against the shared gram."""
-    if mode not in ("constrained", "pareto"):
+    (``gp.multi.predict_heads`` + ``multimetric.acquisition`` /
+    ``gp.per_resource``); ``backend="pallas"`` runs the fused kernel —
+    warp + cross-gram + cached-factor solve once per (GPHP-sample ×
+    anchor-tile), the extra heads amortized as matvecs against the shared
+    gram."""
+    if mode not in ("constrained", "pareto", "rungs"):
         raise ValueError(f"unsupported mode {mode!r}")
     if backend == "xla":
         from repro.core.gp.multi import MultiOutputPosterior, predict_heads
+        from repro.core.gp.per_resource import rung_weighted_ei
         from repro.core.multimetric.acquisition import (
             constrained_ei,
             scalarized_ei,
@@ -175,6 +179,8 @@ def acq_score_multi(
             return constrained_ei(
                 mu, var, head.y_best, head.t_std, head.has_feasible
             )
+        if mode == "rungs":
+            return rung_weighted_ei(mu, var, head.y_best_w, head.weights[0])
         return scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
     if backend != "pallas":
         raise ValueError(f"unknown acq_score backend {backend!r}")
@@ -223,7 +229,11 @@ def acq_score_multi(
         tcon = jnp.zeros((1, 1), dt)
     y_b = jnp.asarray(head.y_best, dt).reshape(1, 1)
     feas = jnp.asarray(head.has_feasible, dt).reshape(1, 1)
-    if mode == "pareto":
+    if mode in ("pareto", "rungs"):
+        # pareto: weights (W, K) draws with ybw (W, 1) scalarized incumbents;
+        # rungs: weights (1, M) rung-weight row with ybw (M, 1) per-head
+        # incumbents — the kernel keys its BlockSpecs off each array's own
+        # row count.
         weights = head.weights.astype(dt)
         ybw = head.y_best_w.astype(dt).reshape(-1, 1)
     else:

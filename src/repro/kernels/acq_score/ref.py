@@ -66,15 +66,16 @@ def acq_score_multi_ref(
     t_std: jax.Array = None,  # (C,) standardized constraint thresholds
     y_best: jax.Array = 0.0,  # best feasible incumbent (constrained mode)
     has_feasible: bool = True,
-    weights: jax.Array = None,  # (W, K) scalarization draws (pareto mode)
-    y_best_w: jax.Array = None,  # (W,)
+    weights: jax.Array = None,  # (W, K) draws (pareto) | (1, M) rung weights
+    y_best_w: jax.Array = None,  # (W,) pareto | (M,) per-head incumbents
 ) -> jax.Array:
     """Standalone jnp mirror of the fused multi-head kernel math: warp+gram →
-    shared cached-factor solve → per-head means → constrained / scalarized
-    EI. (S, m); larger is better. Like ``acq_score_ref``, deliberately NOT
-    implemented via ``gp.multi.predict_heads`` + the production acquisition
-    composition, so the parity suite triangulates three code paths."""
-    if mode not in ("constrained", "pareto"):
+    shared cached-factor solve → per-head means → constrained / scalarized /
+    rung-weighted EI. (S, m); larger is better. Like ``acq_score_ref``,
+    deliberately NOT implemented via ``gp.multi.predict_heads`` + the
+    production acquisition composition, so the parity suite triangulates
+    three code paths."""
+    if mode not in ("constrained", "pareto", "rungs"):
         raise ValueError(f"unsupported mode {mode!r}")
     mask = post.mask.astype(x_star.dtype)
     t_std = jnp.zeros((0,)) if t_std is None else jnp.asarray(t_std)
@@ -104,6 +105,11 @@ def acq_score_multi_ref(
         if mode == "constrained":
             e0 = ei(mu[0], sigma, y_best)
             return jnp.where(jnp.asarray(has_feasible), e0 * feas, feas)
+        if mode == "rungs":
+            # per-head EI vs each head's own incumbent, σ shared, then the
+            # resource-weight contraction over heads.
+            ei_h = ei(mu, sigma[None, :], jnp.asarray(y_best_w)[:, None])
+            return jnp.asarray(weights)[0] @ ei_h  # (m,)
         w = jnp.asarray(weights)  # (W, K)
         mu_s = w @ mu[: w.shape[1]]  # (W, m)
         sigma_s = sigma[None, :] * jnp.sqrt(

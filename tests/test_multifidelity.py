@@ -1,0 +1,371 @@
+"""Multi-fidelity engine: in-service ASHA promotion + per-rung f(x, r) heads.
+
+Covers the ``MultiFidelityState`` decision semantics (idempotent keyed
+recording, memoized replay-stable decisions, quantile promotion), the
+per-rung head construction of ``core/gp/per_resource``, the Tuner/SimBackend
+end-to-end behavior (resource savings, maximize-goal signing, MF-off
+bit-identity), checkpoint restore, and the remote deployment (socket
+equality incl. rung tables, replica-kill failover with ASHA active).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BOConfig,
+    Continuous,
+    ObservationStore,
+    SearchSpace,
+    SelectionService,
+    ServiceConfig,
+    Tuner,
+    TuningJobConfig,
+)
+from repro.core.asha import ASHAConfig, rung_iters
+from repro.core.multifidelity import MultiFidelityState
+from repro.core.multimetric import MetricSpec
+from repro.core.scheduler import SimBackend
+from repro.core.trial import TrialState
+
+_CFG = BOConfig(num_init=3).fast()
+_MF = ASHAConfig(r_min=3, eta=3, max_rungs=3)
+
+
+def _space():
+    return SearchSpace([
+        Continuous("lr", 1e-4, 1.0, scaling="log"),
+        Continuous("wd", 1e-5, 1e-1, scaling="log"),
+    ])
+
+
+def _floor(cfg):
+    return (math.log10(cfg["lr"]) + 2) ** 2 + (math.log10(cfg["wd"]) + 3) ** 2
+
+
+def _curve(cfg):
+    return _floor(cfg) + 2.0 * np.exp(-0.15 * np.arange(1, 28)), 1.0
+
+
+def _make(svc, mf=_MF, max_trials=10, path=None, callbacks=(), seed=3):
+    return Tuner(
+        _space(), _curve, None, SimBackend(),
+        TuningJobConfig(max_trials=max_trials, job_name="mf-job", seed=seed,
+                        multi_fidelity=mf, checkpoint_path=path),
+        service=svc, callbacks=callbacks,
+    )
+
+
+def _table(result):
+    return [
+        (t.trial_id, t.config, str(t.state), t.objective, len(t.curve))
+        for t in result.trials
+    ]
+
+
+# ---------------------------------------------------------------------------
+# MultiFidelityState decision semantics
+# ---------------------------------------------------------------------------
+
+
+class TestMultiFidelityState:
+    def test_non_rung_iteration_is_noop(self):
+        st = MultiFidelityState(ASHAConfig(r_min=2, eta=2, max_rungs=3))
+        assert st.report_rung(0, 3, 1.0) == ("continue", -1)
+        assert st.rungs == {}
+        assert st.decisions == {}
+
+    def test_below_eta_never_stops_but_records(self):
+        """Below the evidence threshold every trial is promoted — but its
+        value IS recorded (keyed), so later replays cannot double-count."""
+        st = MultiFidelityState(ASHAConfig(r_min=2, eta=3, max_rungs=2))
+        assert st.report_rung(0, 2, 9.0) == ("continue", 0)
+        assert st.report_rung(1, 2, 8.0) == ("continue", 0)
+        assert st.value_at(0, 0) == 9.0 and st.value_at(1, 0) == 8.0
+        # third arrival reaches eta=3: the worst of the three is stopped
+        assert st.report_rung(2, 2, 10.0) == ("stop", 0)
+
+    def test_quantile_stop_top_survives(self):
+        st = MultiFidelityState(ASHAConfig(r_min=1, eta=3, max_rungs=1))
+        for tid, v in enumerate([1.0, 2.0, 3.0]):
+            st.report_rung(tid, 1, v)
+        # best-so-far arrival is in the top 1/eta -> promoted
+        assert st.report_rung(3, 1, 0.5) == ("continue", 0)
+        # clearly-worst arrival is stopped
+        assert st.report_rung(4, 1, 9.0) == ("stop", 0)
+
+    def test_idempotent_rerecord_and_memoized_decision(self):
+        """Regression (rung double-count): re-reporting a (trial, rung)
+        overwrites instead of re-appending, and the replay gets the original
+        decision even after the rung gained peers that would flip it."""
+        st = MultiFidelityState(ASHAConfig(r_min=1, eta=2, max_rungs=1))
+        assert st.report_rung(0, 1, 5.0) == ("continue", 0)
+        assert st.report_rung(1, 1, 1.0) == ("continue", 0)  # eta reached; 1.0 ok
+        assert len(st.rungs[0]) == 2
+        # replay of trial 0's crossing: table size unchanged, decision is the
+        # memoized original even though 5.0 would now be quantile-stopped
+        assert st.report_rung(0, 1, 5.0) == ("continue", 0)
+        assert len(st.rungs[0]) == 2
+        cutoff = float(np.quantile([5.0, 1.0], 0.5))
+        assert 5.0 > cutoff  # the fresh computation WOULD stop it
+
+    def test_num_active_rungs(self):
+        st = MultiFidelityState(ASHAConfig(r_min=1, eta=2, max_rungs=3))
+        assert st.num_active_rungs() == 0
+        st.report_rung(0, 1, 1.0)
+        assert st.num_active_rungs() == 1
+        st.report_rung(0, 4, 0.9)  # rung grid [1, 2, 4]: index 2
+        assert st.num_active_rungs() == 3
+
+    def test_snapshot_roundtrip(self):
+        st = MultiFidelityState(ASHAConfig(r_min=1, eta=2, max_rungs=2))
+        st.report_rung(0, 1, 3.0)
+        st.report_rung(1, 1, 1.0)
+        st.report_rung(1, 2, 0.5)
+        snap = st.snapshot()
+        st2 = MultiFidelityState(MultiFidelityState.config_from_wire(snap["config"]))
+        st2.load_snapshot(snap)
+        assert st2.promotion() == st.promotion()
+        # replays against the restored state get the original decisions
+        assert st2.report_rung(0, 1, 3.0) == st.report_rung(0, 1, 3.0)
+
+
+# ---------------------------------------------------------------------------
+# per-rung head construction
+# ---------------------------------------------------------------------------
+
+
+class TestRungHeads:
+    def _store(self, n=5):
+        space = _space()
+        store = ObservationStore(space)
+        rng = np.random.default_rng(0)
+        for i, c in enumerate(space.sample(rng, n)):
+            store.push(c, float(i + 1), key=i)
+        return store
+
+    def test_targets_impute_and_zscore(self):
+        from repro.core.gp.per_resource import rung_head_targets
+
+        store = self._store(5)
+        _, y_std, _, _ = store.standardized()
+        # rung 0 observed by trials 0, 2, 4 only
+        rungs = {0: {0: 10.0, 2: 20.0, 4: 30.0}}
+        t = rung_head_targets(store, rungs, 1, y_std)
+        assert t.shape == (1, 5)
+        # unobserved rows imputed with the standardized objective
+        np.testing.assert_allclose(t[0, [1, 3]], y_std[[1, 3]])
+        # observed rows z-scored over the rung's own values
+        v = np.asarray([10.0, 20.0, 30.0])
+        np.testing.assert_allclose(t[0, [0, 2, 4]], (v - v.mean()) / v.std())
+
+    def test_single_observation_zscores_to_zero(self):
+        from repro.core.gp.per_resource import rung_head_targets
+
+        store = self._store(3)
+        _, y_std, _, _ = store.standardized()
+        t = rung_head_targets(store, {0: {1: 42.0}}, 1, y_std)
+        assert t[0, 1] == 0.0
+        np.testing.assert_allclose(t[0, [0, 2]], y_std[[0, 2]])
+
+    def test_weights_row(self):
+        from repro.core.gp.per_resource import rung_head_weights
+
+        w = rung_head_weights([1, 3, 9], 3)
+        assert w.shape == (1, 4)
+        assert w[0, 0] == 0.5  # objective head keeps half
+        np.testing.assert_allclose(w.sum(), 1.0)
+        # rung weights proportional to resource level
+        np.testing.assert_allclose(w[0, 1:] / w[0, 1], [1.0, 3.0, 9.0])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: in-service ASHA over SimBackend
+# ---------------------------------------------------------------------------
+
+
+class TestInServiceASHA:
+    def test_stops_early_and_saves_resource(self):
+        svc = SelectionService(ServiceConfig(default_bo_config=_CFG))
+        res = _make(svc).run()
+        base = _make(
+            SelectionService(ServiceConfig(default_bo_config=_CFG)), mf=None
+        ).run()
+
+        stopped = [t for t in res.trials if t.state == TrialState.STOPPED]
+        assert stopped, "ASHA never stopped a trial"
+        assert res.num_early_stopped == len(stopped)
+        assert sum(len(t.curve) for t in res.trials) < sum(
+            len(t.curve) for t in base.trials
+        )
+        promo = svc._jobs["mf-job"].promotion()
+        assert promo["rung_grid"] == rung_iters(_MF)
+        assert promo["rungs"] and promo["decisions"]
+        # every stop decision corresponds to a stopped trial's rung crossing
+        stops = [k for k, d in promo["decisions"].items() if d == "stop"]
+        assert len(stops) >= len(stopped)
+
+    def test_empty_rung_tables_bit_identical_to_off(self):
+        """The rung-aware acquisition only engages once rung tables hold
+        data: an MF job whose trials never reach a rung walks the exact
+        single-metric suggestion stream (MF-off bit-identity gate)."""
+        tall = ASHAConfig(r_min=100, eta=3, max_rungs=2)  # beyond curve length
+        got = _make(
+            SelectionService(ServiceConfig(default_bo_config=_CFG)), mf=tall
+        ).run()
+        ref = _make(
+            SelectionService(ServiceConfig(default_bo_config=_CFG)), mf=None
+        ).run()
+        assert _table(got) == _table(ref)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="service"):
+            Tuner(_space(), _curve, None, SimBackend(),
+                  TuningJobConfig(max_trials=2, multi_fidelity=_MF))
+        svc = SelectionService(ServiceConfig(default_bo_config=_CFG))
+        from repro.core.median_rule import MedianRule
+
+        with pytest.raises(ValueError, match="stopping_rule"):
+            Tuner(_space(), _curve, None, SimBackend(),
+                  TuningJobConfig(max_trials=2, multi_fidelity=_MF),
+                  stopping_rule=MedianRule(), service=svc)
+        with pytest.raises(ValueError, match="single-metric"):
+            Tuner(_space(), _curve, None, SimBackend(),
+                  TuningJobConfig(
+                      max_trials=2, multi_fidelity=_MF,
+                      metrics=(MetricSpec("loss"),
+                               MetricSpec("lat", objective=False, threshold=1.0)),
+                  ),
+                  service=svc)
+
+    def test_maximize_goal_signs_rung_values(self):
+        """Regression (maximize-goal inversion): rung values must be signed
+        into the minimize convention before any ASHA rule runs — unsigned, a
+        rising reward curve reads as 'worst' and the best trials get
+        stopped."""
+        space = _space()
+        specs = (MetricSpec("reward", goal="maximize"),)
+
+        def objective(cfg):
+            reward = 10.0 - _floor(cfg)
+            curve = reward * (1.0 - np.exp(-0.3 * np.arange(1, 28)))
+            return curve, 1.0, {"reward": reward}
+
+        svc = SelectionService(ServiceConfig(default_bo_config=_CFG))
+        t = Tuner(space, objective, None, SimBackend(),
+                  TuningJobConfig(max_trials=10, job_name="mf-max", seed=3,
+                                  metrics=specs, multi_fidelity=_MF),
+                  service=svc)
+        res = t.run()
+        promo = svc._jobs["mf-max"].promotion()
+        vals = [v for table in promo["rungs"].values() for _, v in table]
+        assert vals and all(v < 0 for v in vals)  # signed, not raw reward
+        stopped = [tr for tr in res.trials if tr.state == TrialState.STOPPED]
+        completed = [tr for tr in res.trials if tr.state == TrialState.COMPLETED]
+        assert stopped and completed
+        # the highest-reward trial survives to completion; stopped trials are
+        # strictly worse than the best (unsigned values invert this)
+        best_reward = max(tr.metrics["reward"] for tr in completed)
+        assert res.best_trial.metrics["reward"] == best_reward
+        assert res.best_trial.state == TrialState.COMPLETED
+
+    def test_minimize_goal_rung_values_raw(self):
+        """The minimize twin: values arrive unflipped."""
+        svc = SelectionService(ServiceConfig(default_bo_config=_CFG))
+        _make(svc).run()
+        promo = svc._jobs["mf-job"].promotion()
+        vals = [v for table in promo["rungs"].values() for _, v in table]
+        assert vals and all(v > 0 for v in vals)  # loss curves are positive
+
+    def test_checkpoint_kill_restore_exact(self, tmp_path):
+        """Crash mid-run with ASHA active, restore, finish: trial table AND
+        rung/decision tables match the uninterrupted run (rung state rides
+        the suggester checkpoint; replayed crossings are idempotent and get
+        their memoized decisions). ``share_gphp=False`` keeps the GPHP chain
+        bit-identical to the uninterrupted run (same contract as the
+        standalone-engine equivalence of the service layer)."""
+        sc = ServiceConfig(default_bo_config=_CFG, share_gphp=False)
+        ref_svc = SelectionService(sc)
+        ref = _make(ref_svc).run()
+
+        class _Crash(Exception):
+            pass
+
+        def boom(tuner, trial):
+            if sum(1 for t in tuner.trials.values() if t.is_terminal) == 4:
+                raise _Crash()
+
+        path = str(tmp_path / "mf.json")
+        svc = SelectionService(sc)
+        with pytest.raises(_Crash):
+            _make(svc, path=path, callbacks=[boom]).run()
+        t2 = _make(svc, path=path)
+        t2.restore()
+        got = t2.run()
+        assert _table(got) == _table(ref)
+        assert (
+            svc._jobs["mf-job"].promotion()
+            == ref_svc._jobs["mf-job"].promotion()
+        )
+
+
+# ---------------------------------------------------------------------------
+# remote deployment: socket equality + failover with ASHA active
+# ---------------------------------------------------------------------------
+
+
+class TestRemoteMultiFidelity:
+    def test_socket_equals_in_process(self):
+        from repro.distributed.engine_client import RemoteService
+        from repro.distributed.engine_server import EngineServer
+
+        ref_svc = SelectionService(ServiceConfig(default_bo_config=_CFG))
+        ref = _make(ref_svc).run()
+        with EngineServer(
+            service_config=ServiceConfig(default_bo_config=_CFG)
+        ) as server:
+            rsvc = RemoteService([server.address])
+            got = _make(rsvc).run()
+            promo = rsvc._handles["mf-job"].promotion()
+        assert _table(got) == _table(ref)
+        assert promo == ref_svc._jobs["mf-job"].promotion()
+
+    @pytest.mark.slow
+    def test_replica_kill_failover_exact(self):
+        """Kill the serving replica mid-run with ASHA active: the handle
+        re-adopts from its snapshot + oplog (rung reports replayed with
+        decision-identity verification) and the finished trial table —
+        stopped-early states and curve lengths included — equals the
+        in-process run's."""
+        from repro.distributed.engine_client import RemoteService
+        from repro.distributed.engine_server import EngineServer
+
+        ref_svc = SelectionService(ServiceConfig(default_bo_config=_CFG))
+        ref = _make(ref_svc).run()
+
+        s1 = EngineServer(
+            service_config=ServiceConfig(default_bo_config=_CFG)
+        ).start()
+        s2 = EngineServer(
+            service_config=ServiceConfig(default_bo_config=_CFG)
+        ).start()
+        killed = []
+
+        def kill_after_third(tuner, trial):
+            done = sum(1 for t in tuner.trials.values() if t.is_terminal)
+            if done == 3 and not killed:
+                s1.shutdown()
+                killed.append(True)
+
+        try:
+            got = _make(
+                RemoteService([s1.address, s2.address], snapshot_every=4),
+                callbacks=[kill_after_third],
+            ).run()
+        finally:
+            s2.shutdown()
+        assert killed, "kill callback never fired"
+        assert _table(got) == _table(ref)
+        assert got.num_early_stopped == ref.num_early_stopped
+        assert all(t.attempts == 1 for t in got.trials)

@@ -675,7 +675,7 @@ def _multi_posterior(seed, n, s, d, m_heads):
 @pytest.mark.parametrize("n", [6, 40, 130])
 @pytest.mark.parametrize("s", [1, 8])
 @pytest.mark.parametrize("d", [2, 12])
-@pytest.mark.parametrize("mode", ["constrained", "pareto"])
+@pytest.mark.parametrize("mode", ["constrained", "pareto", "rungs"])
 def test_multi_head_kernel_parity_sweep(n, s, d, mode):
     """Fused multi-head scorer vs the standalone jnp oracle vs the
     production composition, across shape buckets / samples / dims / modes
@@ -699,6 +699,22 @@ def test_multi_head_kernel_parity_sweep(n, s, d, mode):
         ref = acq_score_multi_ref(
             post, alphas, xs, mode=mode, t_std=head.t_std,
             y_best=head.y_best, has_feasible=True,
+        )
+    elif mode == "rungs":
+        from repro.core.gp.per_resource import rung_head_weights
+
+        weights = jnp.asarray(rung_head_weights([1, 3], m_heads - 1))
+        head = MultiMetricHead(
+            alphas=alphas,
+            t_std=jnp.zeros((0,)),
+            y_best=jnp.asarray(0.0),
+            has_feasible=jnp.asarray(True),
+            weights=weights,
+            y_best_w=jnp.asarray(rng.standard_normal(m_heads)),
+        )
+        ref = acq_score_multi_ref(
+            post, alphas, xs, mode=mode,
+            weights=head.weights, y_best_w=head.y_best_w,
         )
     else:
         w = rng.random((8, 2)) + 1e-3

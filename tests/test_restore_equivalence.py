@@ -21,6 +21,8 @@ from repro.core import (
     Tuner,
     TuningJobConfig,
 )
+from repro.core.asha import ASHAConfig, ASHARule
+from repro.core.median_rule import MedianRule
 from repro.core.scheduler import SimBackend
 from repro.core.trial import TrialState
 
@@ -200,6 +202,70 @@ class TestKillRestoreEquivalence:
         t0 = next(t for t in res.trials if t.trial_id == 0)
         assert t0.state == TrialState.COMPLETED
         assert t0.attempts == 2  # the restored retry counted as attempt 2
+
+
+class TestStoppingRuleRestoreEquivalence:
+    """Regression (restore-replay double-count): a restored tuner replays
+    rung crossings / completions for its re-queued trials. Unkeyed rule
+    state re-appended the replayed curves, shifting the median/quantile and
+    flipping later decisions; keyed (idempotent) recording makes the
+    crash+restore run reproduce the uninterrupted one exactly."""
+
+    def _run(self, path, rule_factory, crash_after=None, seed=17):
+        def objective(cfg):
+            return _curve_objective(cfg, n=8)
+
+        sugg = BOSuggester(_space(), BOConfig(num_init=2, refit_every=2).fast(),
+                           seed=seed)
+        callbacks = []
+        if crash_after is not None:
+            done = {"n": 0}
+
+            def boom(tuner, trial):
+                done["n"] += 1
+                if done["n"] == crash_after:
+                    raise _CrashAfter()
+
+            callbacks.append(boom)
+        return Tuner(
+            _space(), objective, sugg, SimBackend(),
+            TuningJobConfig(max_trials=8, checkpoint_path=path),
+            stopping_rule=rule_factory(), callbacks=callbacks,
+        )
+
+    def _curves(self, result):
+        return [
+            (t.trial_id, t.state, t.stopped_early, len(t.curve), t.objective)
+            for t in result.trials
+        ]
+
+    @pytest.mark.parametrize("rule_factory", [
+        lambda: ASHARule(ASHAConfig(r_min=2, eta=2, max_rungs=2)),
+        lambda: MedianRule(),
+    ], ids=["asha", "median"])
+    def test_kill_restore_matches_uninterrupted(self, tmp_path, rule_factory):
+        p_a = str(tmp_path / "a.json")
+        p_b = str(tmp_path / "b.json")
+
+        tuner_a = self._run(p_a, rule_factory)
+        res_a = tuner_a.run()
+
+        tuner_b = self._run(p_b, rule_factory, crash_after=4)
+        with pytest.raises(_CrashAfter):
+            tuner_b.run()
+        tuner_b2 = self._run(p_b, rule_factory)
+        tuner_b2.restore()
+        res_b = tuner_b2.run()
+
+        a, b = self._curves(res_a), self._curves(res_b)
+        assert [r[:4] for r in a] == [r[:4] for r in b]
+        for ra, rb in zip(a, b):
+            assert ra[4] == pytest.approx(rb[4], abs=1e-6)
+        # the rule's internal tables converged to the same state: replayed
+        # completions/crossings overwrote instead of double-counting
+        sa = tuner_a.stopping_rule.state_dict()
+        sb = tuner_b2.stopping_rule.state_dict()
+        assert json.loads(json.dumps(sa)) == json.loads(json.dumps(sb))
 
 
 class TestObjectiveValidity:
