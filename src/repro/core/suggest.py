@@ -374,9 +374,9 @@ class BOSuggester:
         # suggester in a fresh process (the Sobol shift scramble is drawn at
         # construction and is not part of state_dict).
         self.seed = seed
-        self._rng = np.random.default_rng(seed)
+        self._rng = np.random.default_rng(seed)  # invariant: fresh-rng -- constructor-seeded; the bit-generator state is checkpointed in state_dict and restored on replay
         self._key = jax.random.PRNGKey(seed)
-        self._sobol_init = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))
+        self._sobol_init = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))  # invariant: fresh-rng -- shift scramble is a pure function of the recorded construction seed; rebuilt identically from the snapshot
         self._anchor_gen = SobolSequence(space.encoded_dim)
         self._anchors = jnp.asarray(self._anchor_gen.next(config.acq.num_anchors))
         self._bounds = gpparams.default_bounds(
@@ -520,7 +520,7 @@ class BOSuggester:
         if (
             len(fps) >= len(old) - 1
             and cache.post is not None
-            and cache.token in (None, id(self._wrapper_store))
+            and cache.token in (None, id(self._wrapper_store))  # invariant: id-key -- within-process factor-cache identity check only; the token is never serialized and a fresh process rebuilds the cache from scratch
             and cache.n == len(old)
             # subset backend: store row i is not factor row i once the
             # inducing set is live, so the rank-1 downdate does not apply —
@@ -1050,7 +1050,7 @@ class BOSuggester:
         pool = cache.pool
         n = x_all.shape[0]
         d = self.space.encoded_dim
-        token = id(store)
+        token = id(store)  # invariant: id-key -- within-process factor-cache identity check only; never serialized, rebuilt per process
         cache.store = store  # arena end-to-end accounting
         self._boundary_refit = False  # did this decision re-fit/adopt draws?
 
@@ -1501,7 +1501,7 @@ class RandomSuggester:
 
     def __init__(self, space: SearchSpace, seed: int = 0):
         self.space = space
-        self._rng = np.random.default_rng(seed)
+        self._rng = np.random.default_rng(seed)  # invariant: fresh-rng -- constructor-seeded; bit-generator state round-trips through state_dict/load_state_dict
 
     def suggest(
         self,
@@ -1525,7 +1525,7 @@ class SobolSuggester:
 
     def __init__(self, space: SearchSpace, seed: int = 0):
         self.space = space
-        self._seq = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))
+        self._seq = SobolSequence(space.encoded_dim, shift_rng=np.random.default_rng(seed))  # invariant: fresh-rng -- shift scramble is a pure function of the seed; the sequence position (_count) is the only replay state
         self._count = 0
 
     def suggest(self, history=(), pending=()) -> Dict[str, Any]:

@@ -230,6 +230,7 @@ class RemoteJobHandle:
         self._io_lock = threading.RLock()
         self._stop_heartbeat = threading.Event()
         self._heartbeat_thread: Optional[threading.Thread] = None
+        self._closed = False
 
     # ----------------------------------------------------------- public api
     def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
@@ -298,9 +299,18 @@ class RemoteJobHandle:
 
     def close(self) -> None:
         """Stop the heartbeat renewer and close the connection. The replica
-        keeps the job; the lease simply runs out (making it adoptable)."""
+        keeps the job; the lease simply runs out (making it adoptable).
+
+        Joins the renewer thread (bounded) *before* taking the lock, so a
+        renewal already in flight drains rather than deadlocking against
+        us; the ``_closed`` flag then keeps any renewal that slipped past
+        the stop event from re-adopting (re-leasing) a closed handle."""
         self._stop_heartbeat.set()
+        t = self._heartbeat_thread
+        if t is not None and t is not threading.current_thread():
+            t.join(timeout=5.0)
         with self._io_lock:
+            self._closed = True
             if self._conn is not None:
                 self._conn.close()
                 self._conn = None
@@ -308,21 +318,22 @@ class RemoteJobHandle:
 
     # ------------------------------------------------------ lease renewal
     def _start_heartbeats(self) -> None:
-        if self._heartbeat_thread is not None:
-            return
-        self._heartbeat_thread = threading.Thread(
-            target=self._heartbeat_loop,
-            name=f"lease-renew-{self.name}",
-            daemon=True,
-        )
-        self._heartbeat_thread.start()
+        with self._io_lock:
+            if self._heartbeat_thread is not None or self._closed:
+                return
+            self._heartbeat_thread = threading.Thread(
+                target=self._heartbeat_loop,
+                name=f"lease-renew-{self.name}",
+                daemon=True,
+            )
+            self._heartbeat_thread.start()
 
     def _heartbeat_loop(self) -> None:
         while True:
             interval = self._lease_ttl / 3.0 if self._lease_ttl > 0 else 10.0
             if self._stop_heartbeat.wait(max(0.5, interval)):
                 return
-            if self.stale:
+            if self.stale or self._closed:
                 return
             try:
                 self.heartbeat()
@@ -344,24 +355,29 @@ class RemoteJobHandle:
             decode_snapshot_frames,
         )
 
-        reply = self._rpc(
-            lambda lease: SnapshotRequest(
-                job_name=self.name, lease=lease,
-                include_factors=include_factors,
-                accept_codecs=available_snapshot_codecs(),
-                max_frame_bytes=self.service.snapshot_frame_bytes,
+        # hold the (re-entrant) lock across fetch *and* baseline publish:
+        # the new snapshot must supersede exactly the ops logged before it.
+        with self._io_lock:
+            reply = self._rpc(
+                lambda lease: SnapshotRequest(
+                    job_name=self.name, lease=lease,
+                    include_factors=include_factors,
+                    accept_codecs=available_snapshot_codecs(),
+                    max_frame_bytes=self.service.snapshot_frame_bytes,
+                )
             )
-        )
-        if reply.frames is not None:
-            snap = decode_snapshot_frames(reply.frames, reply.codec)
-        elif reply.codec is not None:
-            snap = decode_snapshot_frame(reply.snapshot["frame"], reply.codec)
-        else:
-            snap = reply.snapshot
-        if not include_factors:
-            self._snapshot = snap
-            self._oplog = []
-        return snap
+            if reply.frames is not None:
+                snap = decode_snapshot_frames(reply.frames, reply.codec)
+            elif reply.codec is not None:
+                snap = decode_snapshot_frame(
+                    reply.snapshot["frame"], reply.codec
+                )
+            else:
+                snap = reply.snapshot
+            if not include_factors:
+                self._snapshot = snap
+                self._oplog = []
+            return snap
 
     # -------------------------------------------------------- store mirrors
     def _observe_push(self, x: np.ndarray, y: float, expect_version: int,
@@ -436,13 +452,19 @@ class RemoteJobHandle:
         last: Optional[BaseException] = None
         with self._io_lock:
             for _ in range(2 * max(1, len(self.service.addresses))):
+                if self._closed:
+                    # a renewal that slipped past close() must not
+                    # re-register the job and leave a fresh lease behind
+                    raise RemoteServiceError(
+                        f"job {self.name!r}: handle is closed"
+                    )
                 try:
                     if self._conn is None or self._lease is None:
                         self._readopt()
                     reply = self._conn.call(make(self._lease))
                 except (OSError, EOFError) as e:
                     last = e
-                    self._drop_replica()
+                    self._drop_replica_locked()
                     continue
                 if isinstance(reply, ErrorReply):
                     if reply.code == ErrorCode.LEASE_EXPIRED:
@@ -455,11 +477,15 @@ class RemoteJobHandle:
         )
 
     def _log(self, op: Tuple[Any, ...]) -> None:
-        self._oplog.append(op)
-        if len(self._oplog) >= self.service.snapshot_every:
-            self.fetch_snapshot()  # refreshes baseline, truncates the log
+        # the heartbeat renewer can trigger a re-adopt (which replays and
+        # truncates the oplog) concurrently with the tuning loop logging —
+        # the baseline and the log must only move together, under the lock.
+        with self._io_lock:
+            self._oplog.append(op)
+            if len(self._oplog) >= self.service.snapshot_every:
+                self.fetch_snapshot()  # refreshes baseline, truncates the log
 
-    def _drop_replica(self) -> None:
+    def _drop_replica_locked(self) -> None:
         if self._conn is not None:
             self._conn.close()
             self._conn = None
@@ -505,7 +531,7 @@ class RemoteJobHandle:
     def _readopt_locked(self) -> None:
         deadline: Optional[float] = None
         while True:
-            held_wait = self._readopt_round()
+            held_wait = self._readopt_round_locked()
             if held_wait is None:
                 return
             # every reachable replica refused with lease-held: another
@@ -524,7 +550,7 @@ class RemoteJobHandle:
                 )
             time.sleep(min(1.0, max(0.05, deadline - now)))
 
-    def _readopt_round(self) -> Optional[float]:
+    def _readopt_round_locked(self) -> Optional[float]:
         """Try every replica once. Returns None on success; the longest
         reported lease-held ``retry_after`` if adoption should be retried
         after waiting; raises on terminal failure."""

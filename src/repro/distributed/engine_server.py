@@ -272,7 +272,10 @@ class EngineServer:
         lease = self._leases.get(job_name)
         now = self._clock()
         if lease is not None and now > lease.expires_at:
-            del self._leases[job_name]
+            # dispatch already serializes handlers, but the lease table's
+            # guard is the re-entrant lock itself — keep it lexical.
+            with self._lock:
+                del self._leases[job_name]
             lease = None
         if lease is None or lease.token != token:
             raise ProtocolError(
@@ -288,7 +291,8 @@ class EngineServer:
         now = self._clock()
         lease = self._leases.get(msg.job_name)
         if lease is not None and now > lease.expires_at:
-            del self._leases[msg.job_name]
+            with self._lock:
+                del self._leases[msg.job_name]
             lease = None
         if lease is not None and msg.takeover_lease != lease.token:
             remaining = lease.expires_at - now
@@ -344,8 +348,9 @@ class EngineServer:
                 metrics=MetricSet.from_wire(msg.metric_specs),
                 multi_fidelity=msg.multi_fidelity,
             )
-        token = uuid.uuid4().hex
-        self._leases[msg.job_name] = _Lease(token, now + self.lease_ttl)
+        token = uuid.uuid4().hex  # invariant: entropy -- lease tokens are opaque capabilities echoed back by the holder; they never enter decision state, snapshots, or the oplog
+        with self._lock:
+            self._leases[msg.job_name] = _Lease(token, now + self.lease_ttl)
         pool = self.service.group_pool(msg.job_name)
         from repro.core.rpc import available_snapshot_codecs
 

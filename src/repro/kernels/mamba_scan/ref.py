@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["selective_scan_ref"]
+__all__ = ["mamba_scan_ref", "selective_scan_ref"]
 
 
 def selective_scan_ref(u, dt, a, b_t, c_t):
@@ -29,3 +29,8 @@ def selective_scan_ref(u, dt, a, b_t, c_t):
          c_t.swapaxes(0, 1)),
     )
     return ys.swapaxes(0, 1)
+
+
+# canonical oracle name paired with the kernel entry `mamba_scan_pallas`
+# (the Mamba-paper name stays as an alias)
+mamba_scan_ref = selective_scan_ref

@@ -1,0 +1,308 @@
+"""Self-tests of the invariant linter (tools/analysis).
+
+Every rule family must flag its seeded-violation fixture and pass its good
+twin; schema-drift is additionally exercised as a mutation test on a copied
+miniature rpc.py. The final test pins the shipped tree itself: the linter
+must exit clean over src + tools.
+"""
+
+import json
+import shutil
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:  # conftest only inserts src/
+    sys.path.insert(0, str(REPO))
+
+from tools.analysis.config import DEFAULT_CONFIG, AnalysisConfig
+from tools.analysis.framework import (
+    AnalysisError,
+    Exemption,
+    Project,
+    run_analysis,
+)
+from tools.analysis.rules import ALL_RULES
+from tools.analysis.rules.kernel_parity import KernelParityRule
+from tools.analysis.rules.lock_discipline import LockDisciplineRule
+from tools.analysis.rules.replay_safety import ReplaySafetyRule
+from tools.analysis.rules.schema_drift import SchemaDriftRule, compute_schema
+from tools.analysis.run import build_project, main, update_schema_lock
+
+FIXTURES = REPO / "tools" / "analysis" / "fixtures"
+
+
+def _project(root, files, **cfg_kwargs):
+    cfg_kwargs.setdefault("exemptions", [])
+    return Project(Path(root), [Path(f) for f in files], AnalysisConfig(**cfg_kwargs))
+
+
+def _schema_config():
+    return dict(
+        rpc_module="rpc.py",
+        service_module="service.py",
+        wire_doc="wire_protocol.md",
+        schema_lock="schema_lock.json",
+    )
+
+
+def _schema_tree(tmp_path):
+    root = tmp_path / "mini"
+    shutil.copytree(FIXTURES / "schema", root)
+    return root
+
+
+def _schema_project(root):
+    return _project(
+        root, [root / "rpc.py", root / "service.py"], **_schema_config()
+    )
+
+
+# ------------------------------------------------------------ replay-safety
+
+
+class TestReplaySafety:
+    def _run(self, name):
+        project = _project(
+            FIXTURES,
+            [FIXTURES / name],
+            decision_paths=("replay_safety_*.py",),
+        )
+        return project, run_analysis(project, [ReplaySafetyRule()])
+
+    def test_bad_fixture_fires_every_check(self):
+        _, report = self._run("replay_safety_bad.py")
+        by_check = {}
+        for f in report.findings:
+            by_check.setdefault(f.check, []).append(f)
+        assert len(by_check["wall-clock"]) == 2
+        assert len(by_check["entropy"]) == 2
+        assert len(by_check["unseeded-rng"]) == 3
+        assert len(by_check["fresh-rng"]) == 1
+        assert len(by_check["id-key"]) == 1
+        assert len(by_check["set-iter"]) == 1
+        assert set(by_check) == set(ReplaySafetyRule.checks)
+
+    def test_good_twin_is_clean(self):
+        _, report = self._run("replay_safety_good.py")
+        assert report.findings == []
+        # the seeded-RNG helper is silenced by a justified suppression,
+        # not by accident
+        assert [f.check for f in report.suppressed] == ["fresh-rng"]
+
+    def test_decision_path_gating(self):
+        # outside the decision path, id-key/set-iter do not apply but
+        # clock/entropy/rng checks still do
+        project = _project(
+            FIXTURES, [FIXTURES / "replay_safety_bad.py"],
+            decision_paths=("nothing/matches/*",),
+        )
+        report = run_analysis(project, [ReplaySafetyRule()])
+        checks = {f.check for f in report.findings}
+        assert "id-key" not in checks and "set-iter" not in checks
+        assert {"wall-clock", "entropy", "unseeded-rng", "fresh-rng"} <= checks
+
+
+# ---------------------------------------------------------- lock-discipline
+
+
+class TestLockDiscipline:
+    def _run(self, name):
+        project = _project(FIXTURES, [FIXTURES / name])
+        return run_analysis(project, [LockDisciplineRule()])
+
+    def test_bad_fixture_flags_unlocked_writes(self):
+        report = self._run("lock_discipline_bad.py")
+        assert [f.check for f in report.findings] == [
+            "unlocked-write", "unlocked-write",
+        ]
+        assert all("evict" in f.message for f in report.findings)
+        # the *_locked method is trusted by convention
+        assert not any("drain" in f.message for f in report.findings)
+
+    def test_good_twin_is_clean(self):
+        report = self._run("lock_discipline_good.py")
+        assert report.findings == []
+
+
+# -------------------------------------------------------------- schema-drift
+
+
+class TestSchemaDrift:
+    def test_good_tree_is_clean(self, tmp_path):
+        root = _schema_tree(tmp_path)
+        report = run_analysis(_schema_project(root), [SchemaDriftRule()])
+        assert report.findings == []
+
+    def test_field_rename_without_bump_fires(self, tmp_path):
+        root = _schema_tree(tmp_path)
+        rpc = root / "rpc.py"
+        rpc.write_text(rpc.read_text().replace("load: float", "latency: float"))
+        report = run_analysis(_schema_project(root), [SchemaDriftRule()])
+        checks = {f.check for f in report.findings}
+        assert "lock-drift" in checks
+        drift = [f for f in report.findings if f.check == "lock-drift"][0]
+        assert "PROTOCOL_VERSION" in drift.message  # names the missing bump
+        # the new field is also undocumented
+        assert any(
+            f.check == "undocumented-field" and "latency" in f.message
+            for f in report.findings
+        )
+
+    def test_bumped_version_asks_for_regen_instead(self, tmp_path):
+        root = _schema_tree(tmp_path)
+        rpc = root / "rpc.py"
+        src = rpc.read_text().replace("load: float", "latency: float")
+        rpc.write_text(src.replace("PROTOCOL_VERSION = 2", "PROTOCOL_VERSION = 3"))
+        report = run_analysis(_schema_project(root), [SchemaDriftRule()])
+        drift = [f for f in report.findings if f.check == "lock-drift"]
+        assert drift and "--update-schema-lock" in drift[0].message
+        assert "PROTOCOL_VERSION" not in drift[0].message
+
+    def test_snapshot_key_change_tracks_engine_version(self, tmp_path):
+        root = _schema_tree(tmp_path)
+        svc = root / "service.py"
+        svc.write_text(
+            svc.read_text().replace('"store": []', '"store": [],\n            "rng": 0')
+        )
+        report = run_analysis(_schema_project(root), [SchemaDriftRule()])
+        drift = [f for f in report.findings if f.check == "lock-drift"]
+        assert drift and "ENGINE_SNAPSHOT_VERSION" in drift[0].message
+
+    def test_update_lock_guard_refuses_without_bump(self, tmp_path, capsys):
+        root = _schema_tree(tmp_path)
+        rpc = root / "rpc.py"
+        rpc.write_text(rpc.read_text().replace("load: float", "latency: float"))
+        cfg = AnalysisConfig(exemptions=[], **_schema_config())
+        before = (root / "schema_lock.json").read_text()
+        assert update_schema_lock(root, cfg) == 2
+        assert (root / "schema_lock.json").read_text() == before  # untouched
+        assert "PROTOCOL_VERSION" in capsys.readouterr().err
+
+    def test_update_lock_regenerates_after_bump(self, tmp_path, capsys):
+        root = _schema_tree(tmp_path)
+        rpc = root / "rpc.py"
+        src = rpc.read_text().replace("load: float", "latency: float")
+        rpc.write_text(src.replace("PROTOCOL_VERSION = 2", "PROTOCOL_VERSION = 3"))
+        cfg = AnalysisConfig(exemptions=[], **_schema_config())
+        assert update_schema_lock(root, cfg) == 0
+        out = capsys.readouterr().out
+        assert "-      \"load\"" in out and "+      \"latency\"" in out  # diff printed
+        lock = json.loads((root / "schema_lock.json").read_text())
+        assert lock["protocol_version"] == 3
+        assert lock["messages"]["ping_reply"] == ["nonce", "latency"]
+
+    def test_compute_schema_matches_lock_fixture(self):
+        schema, _, problems = compute_schema(
+            (FIXTURES / "schema" / "rpc.py").read_text(),
+            (FIXTURES / "schema" / "service.py").read_text(),
+        )
+        assert problems == []
+        assert schema == json.loads(
+            (FIXTURES / "schema" / "schema_lock.json").read_text()
+        )
+
+
+# ------------------------------------------------------------- kernel-parity
+
+
+class TestKernelParity:
+    def _run(self, which):
+        root = FIXTURES / "kernel_parity" / which
+        project = _project(
+            root,
+            [root / "src" / "kernels" / "toy" / "kernel.py",
+             root / "src" / "kernels" / "toy" / "ref.py"],
+            kernels_glob="src/kernels/*/kernel.py",
+        )
+        return run_analysis(project, [KernelParityRule()])
+
+    def test_bad_tree_missing_oracle_and_test(self):
+        report = self._run("bad")
+        checks = sorted(f.check for f in report.findings)
+        assert checks == ["missing-oracle", "missing-test-ref"]
+
+    def test_good_tree_is_clean(self):
+        report = self._run("good")
+        assert report.findings == []
+
+
+# ----------------------------------------------------------------- framework
+
+
+class TestFramework:
+    def test_bad_suppression_is_a_finding(self, tmp_path):
+        f = tmp_path / "mod.py"
+        f.write_text("import time\nx = time.time()  # invariant: wall-clock\n")
+        project = _project(tmp_path, [f])
+        report = run_analysis(project, [ReplaySafetyRule()])
+        checks = {fd.check for fd in report.findings}
+        # the justification-free comment does NOT silence the finding and is
+        # itself flagged
+        assert "bad-suppression" in checks and "wall-clock" in checks
+
+    def test_exemption_requires_justification(self):
+        with pytest.raises(AnalysisError):
+            Exemption(path="x.py", check="wall-clock", justification="  ")
+
+    def test_baseline_forbidden_under_core(self, tmp_path):
+        f = tmp_path / "mod.py"
+        f.write_text("x = 1\n")
+        project = _project(tmp_path, [f])
+        baseline = [{"rule": "replay-safety", "path": "src/repro/core/suggest.py"}]
+        report = run_analysis(project, [], baseline)
+        assert [fd.check for fd in report.findings] == ["baseline-forbidden"]
+
+    def test_baseline_tolerates_elsewhere(self, tmp_path):
+        f = tmp_path / "mod.py"
+        f.write_text("import time\nx = time.time()\n")
+        project = _project(tmp_path, [f])
+        baseline = [{"rule": "replay-safety", "path": "mod.py", "check": "wall-clock"}]
+        report = run_analysis(project, [ReplaySafetyRule()], baseline)
+        assert report.findings == []
+        assert [fd.check for fd in report.baselined] == ["wall-clock"]
+
+    def test_syntax_error_is_reported_not_raised(self, tmp_path):
+        f = tmp_path / "broken.py"
+        f.write_text("def f(:\n")
+        project = _project(tmp_path, [f])
+        report = run_analysis(project, [ReplaySafetyRule(), LockDisciplineRule()])
+        assert [fd.check for fd in report.findings] == ["syntax-error"]
+
+
+# ------------------------------------------------------------- shipped tree
+
+
+class TestShippedTree:
+    def test_linter_clean_over_src_and_tools(self):
+        project = build_project(REPO, ["src", "tools"], DEFAULT_CONFIG)
+        from tools.analysis.framework import load_baseline
+
+        baseline = load_baseline(REPO / "tools" / "analysis" / "baseline.json")
+        report = run_analysis(project, list(ALL_RULES), baseline)
+        assert report.ok, "\n".join(
+            f"{f.path}:{f.line}: [{f.rule}/{f.check}] {f.message}"
+            for f in report.findings
+        )
+        # the committed baseline must be empty for the protected layers
+        assert not any(
+            str(e.get("path", "")).startswith(("src/repro/core", "src/repro/distributed"))
+            for e in baseline
+        )
+
+    def test_cli_json_smoke(self, capsys):
+        rc = main(["--root", str(REPO), "--format=json", "src", "tools"])
+        assert rc == 0
+        payload = json.loads(capsys.readouterr().out)
+        assert payload["ok"] is True and payload["findings"] == []
+
+    def test_schema_lock_in_sync(self):
+        schema, _, problems = compute_schema(
+            (REPO / DEFAULT_CONFIG.rpc_module).read_text(),
+            (REPO / DEFAULT_CONFIG.service_module).read_text(),
+        )
+        assert problems == []
+        lock = json.loads((REPO / DEFAULT_CONFIG.schema_lock).read_text())
+        assert schema == lock

@@ -9,9 +9,9 @@ from repro.core.gp.params import GPHyperParams
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.mamba_scan.ops import selective_scan
-from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
 from repro.kernels.matern52.ops import matern52_cross, matern52_gram
 from repro.kernels.matern52.ref import matern52_cross_ref, matern52_gram_ref
 from repro.kernels.rglru_scan.ops import rglru_scan
@@ -93,7 +93,7 @@ def test_flash_attention_sweep(b, s, hq, hkv, dh, window, softcap):
     v = jnp.asarray(RNG.standard_normal((b, s, hkv, dh)), jnp.float32)
     got = flash_attention(q, k, v, window=window, softcap=softcap, interpret=True)
     tr = lambda x: jnp.transpose(x, (0, 2, 1, 3))  # noqa: E731
-    want = tr(attention_ref(tr(q), tr(k), tr(v), window=window, softcap=softcap))
+    want = tr(flash_attention_ref(tr(q), tr(k), tr(v), window=window, softcap=softcap))
     np.testing.assert_allclose(got, want, atol=3e-5)
 
 
@@ -104,7 +104,7 @@ def test_flash_attention_dtypes(dtype, tol):
     v = jnp.asarray(RNG.standard_normal((1, 256, 2, 128)), dtype)
     got = flash_attention(q, k, v, interpret=True).astype(jnp.float32)
     tr = lambda x: jnp.transpose(x, (0, 2, 1, 3))  # noqa: E731
-    want = tr(attention_ref(tr(q), tr(k), tr(v))).astype(jnp.float32)
+    want = tr(flash_attention_ref(tr(q), tr(k), tr(v))).astype(jnp.float32)
     np.testing.assert_allclose(got, want, atol=tol)
 
 
@@ -133,7 +133,7 @@ def test_mamba_scan_sweep(b, s, di, ds):
     b_t = jnp.asarray(RNG.standard_normal((b, s, ds)), jnp.float32)
     c_t = jnp.asarray(RNG.standard_normal((b, s, ds)), jnp.float32)
     got = selective_scan(u, dt, a, b_t, c_t, interpret=True)
-    want = selective_scan_ref(u, dt, a, b_t, c_t)
+    want = mamba_scan_ref(u, dt, a, b_t, c_t)
     np.testing.assert_allclose(got, want, atol=1e-4)
 
 

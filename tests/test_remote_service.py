@@ -40,6 +40,7 @@ from repro.core.scheduler import SimBackend
 from repro.core.service import PoolConflictError, SnapshotVersionError
 from repro.distributed.engine_client import (
     RemoteService,
+    RemoteServiceError,
     ReplicaDivergenceError,
     _Connection,
 )
@@ -487,6 +488,50 @@ class TestLeases:
             assert isinstance(reply, ErrorReply)
             assert reply.code == ErrorCode.UNKNOWN_JOB
             conn.close()
+
+    def test_close_joins_heartbeat_thread(self):
+        """close() must not leave the daemon renewer running: it is joined
+        (bounded) before the connection is torn down, so no renewal can be
+        in flight once close() returns."""
+        with EngineServer(lease_ttl=1.0) as server:
+            rsvc = RemoteService([server.address])
+            rh = rsvc.register_job("job", _space(), bo_config=_CFG, seed=5)
+            _drive(rh, 1)
+            t = rh._heartbeat_thread
+            assert t is not None and t.is_alive()
+            rh.close()
+            assert not t.is_alive()
+            assert rh._closed
+
+    def test_closed_handle_cannot_release(self):
+        """A renewal that slips past the stop event (or any late RPC) must
+        not re-register the job and leave a fresh lease behind after
+        close() — the regression this pins is a heartbeat racing close and
+        re-adopting a handle the user already shut down."""
+        with EngineServer(lease_ttl=1.0) as server:
+            rsvc = RemoteService([server.address])
+            rh = rsvc.register_job("job", _space(), bo_config=_CFG, seed=5)
+            _drive(rh, 1)
+            with server._lock:
+                token_before = server._leases["job"].token
+            rh.close()
+            with pytest.raises(RemoteServiceError, match="closed"):
+                rh.heartbeat()  # the slipped renewal
+            with pytest.raises(RemoteServiceError, match="closed"):
+                rh.suggest_batch(1)
+            # server side: the old lease merely runs out; no new token was
+            # ever granted to the closed handle
+            with server._lock:
+                assert server._leases["job"].token == token_before
+
+    def test_closed_handle_never_restarts_renewer(self):
+        with EngineServer(lease_ttl=1.0) as server:
+            rsvc = RemoteService([server.address])
+            rh = rsvc.register_job("job", _space(), bo_config=_CFG, seed=5)
+            rh.close()
+            dead = rh._heartbeat_thread
+            rh._start_heartbeats()
+            assert rh._heartbeat_thread is dead  # no fresh thread after close
 
 
 class TestProtocolRefusals:

@@ -1,0 +1,25 @@
+"""AST-based invariant linter for the repro tree.
+
+See ``docs/invariants.md`` for the catalog of enforced invariants and
+``python -m tools.analysis --help`` for the CLI.
+"""
+
+from tools.analysis.framework import (
+    AnalysisError,
+    Exemption,
+    Finding,
+    Project,
+    Report,
+    Rule,
+    run_analysis,
+)
+
+__all__ = [
+    "AnalysisError",
+    "Exemption",
+    "Finding",
+    "Project",
+    "Report",
+    "Rule",
+    "run_analysis",
+]

@@ -1,0 +1,79 @@
+"""Repo-specific configuration of the invariant linter.
+
+Everything path-shaped the rules consult lives here: which modules form the
+engine's *decision path* (where replay-safety is absolute), where the wire
+schema and its documentation live, and the handful of scoped exemptions —
+each carrying the justification that makes it an audit record rather than a
+blanket ignore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from tools.analysis.framework import Exemption
+
+__all__ = ["AnalysisConfig", "DEFAULT_CONFIG"]
+
+
+@dataclasses.dataclass
+class AnalysisConfig:
+    """Knobs shared by the rule families.
+
+    * ``decision_paths`` — fnmatch globs of the modules whose outputs must
+      replay bit-exactly across snapshot/oplog failover (PR 4/7). The
+      strictest replay-safety checks (``id-key``, ``set-iter``) apply only
+      here; RNG/wall-clock/entropy checks apply to every analyzed file.
+    * ``rpc_module`` / ``service_module`` — where the wire messages and the
+      engine-snapshot constructor live (the schema-drift rule parses both).
+    * ``wire_doc`` — the document every wire/snapshot field must appear in.
+    * ``schema_lock`` — committed schema fingerprint; drifting from it
+      without bumping the matching version constant fails CI.
+    * ``kernels_glob`` / ``tests_dir`` — kernel entry points and the test
+      tree that must reference them.
+    * ``exemptions`` — file-scoped, justified opt-outs (see ``Exemption``).
+    """
+
+    decision_paths: Tuple[str, ...] = (
+        "src/repro/core/suggest.py",
+        "src/repro/core/service.py",
+        "src/repro/core/multifidelity.py",
+        "src/repro/core/history.py",
+        "src/repro/core/rpc.py",
+        "src/repro/core/gp/*.py",
+        "src/repro/distributed/*.py",
+    )
+    rpc_module: str = "src/repro/core/rpc.py"
+    service_module: str = "src/repro/core/service.py"
+    wire_doc: str = "docs/wire_protocol.md"
+    schema_lock: str = "tools/analysis/schema_lock.json"
+    kernels_glob: str = "src/repro/kernels/*/kernel.py"
+    tests_dir: str = "tests"
+    exemptions: List[Exemption] = dataclasses.field(default_factory=list)
+
+
+def _default_exemptions() -> List[Exemption]:
+    return [
+        Exemption(
+            path="src/repro/launch/dryrun.py",
+            check="wall-clock",
+            justification=(
+                "presentation-only phase timing of the dry-run compile "
+                "report; the timestamps never feed decision state or any "
+                "serialized artifact"
+            ),
+        ),
+        Exemption(
+            path="src/repro/data/synthetic.py",
+            check="fresh-rng",
+            justification=(
+                "stateless per-step generators re-derived as f(seed, step); "
+                "regeneration is pure, so there is no cross-step RNG state "
+                "to checkpoint or replay"
+            ),
+        ),
+    ]
+
+
+DEFAULT_CONFIG = AnalysisConfig(exemptions=_default_exemptions())

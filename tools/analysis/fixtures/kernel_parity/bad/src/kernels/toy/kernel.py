@@ -1,0 +1,5 @@
+"""Seeded violation: no oracle in ref.py, no test anywhere."""
+
+
+def toy_scan_pallas(x):
+    return x

@@ -1,0 +1,2 @@
+def unrelated_ref(x):
+    return x

@@ -1,0 +1,9 @@
+"""Good twin: the entry has an oracle and a test reference."""
+
+
+def toy_scan_pallas(x):
+    return x
+
+
+def _private_helper(x):
+    return x

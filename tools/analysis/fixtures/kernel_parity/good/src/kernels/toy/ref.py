@@ -1,0 +1,2 @@
+def toy_scan_ref(x):
+    return x

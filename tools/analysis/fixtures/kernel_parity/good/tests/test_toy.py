@@ -1,0 +1,2 @@
+def test_toy_scan_parity():
+    assert "toy_scan_pallas" and "toy_scan_ref"

@@ -1,0 +1,26 @@
+"""Seeded-violation fixture: guarded state written outside the lock."""
+
+import threading
+
+
+class LeakyService:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._table = {}
+        self._count = 0
+
+    def put(self, key, value):
+        with self._lock:
+            self._table[key] = value
+            self._count += 1
+
+    def evict(self, key):
+        # BUG the rule must catch: both writes race put()
+        del self._table[key]
+        self._count -= 1
+
+    def drain_locked(self):
+        # caller-holds-lock convention: even though these writes are
+        # unlocked here, the *_locked name exempts them
+        self._table.clear()
+        self._count = 0

@@ -1,0 +1,29 @@
+"""Good twin: every write to guarded state happens under the lock."""
+
+import threading
+
+
+class TidyService:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._table = {}
+        self._count = 0
+        self._label = "idle"  # never written under the lock -> unguarded
+
+    def put(self, key, value):
+        with self._lock:
+            self._table[key] = value
+            self._count += 1
+
+    def evict(self, key):
+        with self._lock:
+            del self._table[key]
+            self._count -= 1
+
+    def rename(self, label):
+        # _label has no locked writes anywhere, so this is not flagged
+        self._label = label
+
+    def drain_locked(self):
+        self._table.clear()
+        self._count = 0

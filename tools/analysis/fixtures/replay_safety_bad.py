@@ -1,0 +1,42 @@
+"""Seeded-violation fixture: every replay-safety check must fire here."""
+
+import os
+import random
+import time
+import uuid
+from datetime import datetime
+
+import numpy as np
+
+
+def wall_clock_leak():
+    return time.time()  # wall-clock
+
+
+def datetime_leak():
+    return datetime.now()  # wall-clock
+
+
+def entropy_leak():
+    return os.urandom(8) + uuid.uuid4().bytes  # entropy x2
+
+
+def unseeded_rng_leak():
+    rng = np.random.default_rng()  # unseeded-rng
+    np.random.shuffle([1, 2, 3])  # unseeded-rng (module global)
+    random.random()  # unseeded-rng (stdlib global)
+    return rng
+
+
+def fresh_rng_leak(seed):
+    return np.random.default_rng(seed)  # fresh-rng (seeded, unjustified)
+
+
+def id_key_leak(store, cache):
+    cache[id(store)] = store  # id-key
+    return cache
+
+
+def set_iter_leak(names):
+    chosen = {n for n in names if n}
+    return list(chosen)  # set-iter: hash order leaks into the list

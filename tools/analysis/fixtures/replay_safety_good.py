@@ -1,0 +1,25 @@
+"""Good twin: the same shapes, written replay-safely. Zero findings."""
+
+import numpy as np
+
+
+def logical_clock(state):
+    return state["decision_index"] + 1
+
+
+def checkpointed_rng(state):
+    rng = np.random.default_rng(state["seed"])  # invariant: fresh-rng -- fixture: constructor-seeded with checkpointed state
+    rng.bit_generator.state = state["bitgen"]
+    return rng
+
+
+def token_key(store, cache):
+    cache[store.token] = store
+    return cache
+
+
+def set_consumed_safely(names):
+    chosen = {n for n in names if n}
+    total = len(chosen)
+    ordered = sorted(chosen)
+    return total, ordered

@@ -1,0 +1,20 @@
+"""Miniature rpc module for schema-drift fixtures/tests."""
+
+import dataclasses
+
+PROTOCOL_VERSION = 2
+ENGINE_SNAPSHOT_VERSION = 3
+
+
+@dataclasses.dataclass
+class PingRequest:
+    TYPE = "ping"
+    job_name: str
+    nonce: int
+
+
+@dataclasses.dataclass
+class PingReply:
+    TYPE = "ping_reply"
+    nonce: int
+    load: float

@@ -1,0 +1,12 @@
+"""Miniature service module for schema-drift fixtures/tests."""
+
+ENGINE_SNAPSHOT_VERSION = 3
+
+
+class MiniService:
+    def snapshot_job(self, name):
+        return {
+            "snapshot_version": ENGINE_SNAPSHOT_VERSION,
+            "job_name": name,
+            "store": [],
+        }

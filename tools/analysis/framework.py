@@ -1,0 +1,341 @@
+"""Framework of the invariant linter: files, findings, suppressions, baseline.
+
+The repo's correctness rests on invariants no test can state once and for
+all — decision paths must be RNG-free and replayable bit-exactly, service
+state must mutate only under its lock, every wire/snapshot field must be
+versioned and documented. Each *rule* (``tools/analysis/rules``) encodes one
+such invariant as a static check over the AST of the tree; this module is
+the machinery they share:
+
+* **Project** — the analyzed file set with cached source/AST/suppressions.
+* **Finding** — one violation: ``(rule, check, path, line, message)``.
+* **Suppressions** — per-line opt-outs that *must* carry a justification::
+
+      self._rng = np.random.default_rng(seed)  # invariant: fresh-rng -- constructor-seeded; state checkpointed
+
+  A suppression without a justification is itself a finding
+  (``bad-suppression``) — the whole point is that every exemption explains
+  itself at the site.
+* **Scoped exemptions** (``config.py``) — file-level opt-outs for whole
+  checks, again justification-bearing (e.g. ``launch/dryrun.py`` wall-clock
+  timing). Never blanket ignores: an exemption names one path glob and one
+  check.
+* **Baseline** — ``tools/analysis/baseline.json``, a committed list of
+  known findings tolerated while they are burned down. The baseline is
+  *forbidden* under ``src/repro/core`` and ``src/repro/distributed``: the
+  engine and the process boundary carry the replay/failover invariants, so
+  a finding there fails CI immediately (it ships empty and should stay so).
+
+The linter itself must be deterministic (it gates CI): file discovery is
+sorted, findings are sorted, and nothing here consumes entropy or time.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "AnalysisError",
+    "Exemption",
+    "FileInfo",
+    "Finding",
+    "Project",
+    "Report",
+    "Rule",
+    "load_baseline",
+    "run_analysis",
+]
+
+#: Paths where baselined findings are refused outright: these layers carry
+#: the replay/failover invariants, so violations fail CI, always.
+BASELINE_FORBIDDEN_PREFIXES = ("src/repro/core", "src/repro/distributed")
+
+#: ``# invariant: <check>[, <check>...] -- <justification>``
+_SUPPRESSION_RE = re.compile(
+    r"#\s*invariant:\s*(?P<ids>[\w\-*,\s]+?)\s*(?:--\s*(?P<why>.*))?$"
+)
+
+
+class AnalysisError(RuntimeError):
+    """The linter itself cannot proceed (bad config, unparseable input)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation at one site."""
+
+    rule: str  # rule family id, e.g. "replay-safety"
+    check: str  # specific check id, e.g. "unseeded-rng"
+    path: str  # repo-relative posix path
+    line: int  # 1-based line of the offending node (0 = whole file)
+    message: str
+    end_line: int = 0  # last physical line of the node (suppression span)
+
+    def sort_key(self) -> Tuple[str, int, str, str]:
+        return (self.path, self.line, self.rule, self.check)
+
+    def to_json(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d.pop("end_line", None)
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class Exemption:
+    """File-scoped, justification-bearing opt-out for one check.
+
+    ``path`` is an fnmatch glob over repo-relative posix paths; ``check``
+    names a single check (or rule family) id. A missing/empty justification
+    is a configuration error — exemptions exist to *document* why a site is
+    allowed to look like a violation, not to hide it.
+    """
+
+    path: str
+    check: str
+    justification: str
+
+    def __post_init__(self) -> None:
+        if not self.justification.strip():
+            raise AnalysisError(
+                f"exemption ({self.path!r}, {self.check!r}) has no "
+                "justification — blanket ignores are not allowed"
+            )
+
+    def matches(self, finding: Finding) -> bool:
+        return self.check in (finding.check, finding.rule) and fnmatch.fnmatch(
+            finding.path, self.path
+        )
+
+
+class FileInfo:
+    """One analyzed file: source text, AST, per-line suppressions."""
+
+    def __init__(self, root: Path, path: Path):
+        self.abspath = path
+        self.path = path.relative_to(root).as_posix()
+        self.source = path.read_text(encoding="utf-8")
+        try:
+            self.tree: Optional[ast.AST] = ast.parse(self.source, filename=self.path)
+        except SyntaxError as e:
+            self.tree = None
+            self.syntax_error = f"{e.msg} (line {e.lineno})"
+        else:
+            self.syntax_error = None
+        # line -> [(check_or_rule_id, justification)]
+        self.suppressions: Dict[int, List[Tuple[str, str]]] = {}
+        self.bad_suppressions: List[int] = []
+        self._parse_suppressions()
+
+    def _parse_suppressions(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            comments = [
+                (tok.start[0], tok.string)
+                for tok in tokens
+                if tok.type == tokenize.COMMENT
+            ]
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return
+        for line, text in comments:
+            m = _SUPPRESSION_RE.search(text)
+            if m is None:
+                continue
+            ids = [s.strip() for s in m.group("ids").split(",") if s.strip()]
+            why = (m.group("why") or "").strip()
+            if not why or "*" in ids or not ids:
+                # a suppression must name its checks and justify itself
+                self.bad_suppressions.append(line)
+                continue
+            for check in ids:
+                self.suppressions.setdefault(line, []).append((check, why))
+
+    def suppressed(self, finding: Finding) -> bool:
+        """True if a matching suppression comment sits on any line the
+        finding's node spans (multi-line statements carry the comment on
+        whichever physical line holds it)."""
+        last = max(finding.line, finding.end_line or finding.line)
+        for line in range(finding.line, last + 1):
+            for check, _ in self.suppressions.get(line, ()):
+                if check in (finding.check, finding.rule):
+                    return True
+        return False
+
+
+class Project:
+    """The analyzed file set plus repo-level context rules may consult."""
+
+    def __init__(self, root: Path, files: Sequence[Path], config):
+        self.root = Path(root)
+        self.config = config
+        self.files: List[FileInfo] = [
+            FileInfo(self.root, p) for p in sorted(files)
+        ]
+        self._by_path = {f.path: f for f in self.files}
+
+    def file(self, relpath: str) -> Optional[FileInfo]:
+        return self._by_path.get(relpath)
+
+    def glob(self, pattern: str) -> List[FileInfo]:
+        return [f for f in self.files if fnmatch.fnmatch(f.path, pattern)]
+
+    def read_text(self, relpath: str) -> Optional[str]:
+        """Read a repo file that may sit outside the analyzed set (docs,
+        lock files, tests)."""
+        p = self.root / relpath
+        if not p.is_file():
+            return None
+        return p.read_text(encoding="utf-8")
+
+
+class Rule:
+    """Base class of one invariant rule family.
+
+    Subclasses set ``id`` (the family id), ``checks`` (every check id the
+    family can emit — what suppression comments and exemptions name), and
+    implement ``run(project) -> Iterable[Finding]``. Findings are emitted
+    raw; suppression/exemption/baseline filtering happens centrally in
+    ``run_analysis``.
+    """
+
+    id: str = ""
+    checks: Tuple[str, ...] = ()
+
+    def run(self, project: Project) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    # Helper: find node end line for suppression span matching.
+    @staticmethod
+    def span(node: ast.AST) -> Tuple[int, int]:
+        line = getattr(node, "lineno", 0)
+        return line, getattr(node, "end_lineno", line) or line
+
+
+@dataclasses.dataclass
+class Report:
+    """Outcome of one analysis run."""
+
+    findings: List[Finding]  # active: fail CI
+    suppressed: List[Finding]  # silenced by a justified per-line comment
+    exempted: List[Finding]  # silenced by a scoped config exemption
+    baselined: List[Finding]  # tolerated by the committed baseline
+    num_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "version": 1,
+            "ok": self.ok,
+            "num_files": self.num_files,
+            "findings": [f.to_json() for f in self.findings],
+            "suppressed": [f.to_json() for f in self.suppressed],
+            "exempted": [f.to_json() for f in self.exempted],
+            "baselined": [f.to_json() for f in self.baselined],
+        }
+
+
+def load_baseline(path: Path) -> List[Dict[str, object]]:
+    if not path.is_file():
+        return []
+    data = json.loads(path.read_text(encoding="utf-8"))
+    entries = data.get("findings", []) if isinstance(data, dict) else data
+    if not isinstance(entries, list):
+        raise AnalysisError(f"baseline {path} must hold a list of findings")
+    return entries
+
+
+def _baseline_matches(entry: Dict[str, object], finding: Finding) -> bool:
+    if entry.get("rule") != finding.rule or entry.get("path") != finding.path:
+        return False
+    if "check" in entry and entry["check"] != finding.check:
+        return False
+    if "line" in entry and int(entry["line"]) != finding.line:
+        return False
+    return True
+
+
+def run_analysis(
+    project: Project,
+    rules: Sequence[Rule],
+    baseline: Sequence[Dict[str, object]] = (),
+) -> Report:
+    """Run every rule over the project and classify each finding as active,
+    suppressed, exempted, or baselined. Also emits framework-level findings:
+    syntax errors, malformed suppressions, and forbidden baseline entries."""
+    raw: List[Finding] = []
+
+    for f in project.files:
+        if f.syntax_error is not None:
+            raw.append(
+                Finding(
+                    "framework", "syntax-error", f.path, 0,
+                    f"cannot parse: {f.syntax_error}",
+                )
+            )
+        for line in f.bad_suppressions:
+            raw.append(
+                Finding(
+                    "framework", "bad-suppression", f.path, line,
+                    "suppression comment must name its checks and carry "
+                    "a justification: `# invariant: <check> -- <why>`",
+                )
+            )
+
+    for rule in rules:
+        raw.extend(rule.run(project))
+
+    # forbidden baseline entries are findings themselves
+    for entry in baseline:
+        path = str(entry.get("path", ""))
+        if path.startswith(BASELINE_FORBIDDEN_PREFIXES):
+            raw.append(
+                Finding(
+                    "framework", "baseline-forbidden", path, 0,
+                    "baseline entries are forbidden under "
+                    f"{' and '.join(BASELINE_FORBIDDEN_PREFIXES)} — fix the "
+                    "finding instead",
+                )
+            )
+
+    active: List[Finding] = []
+    suppressed: List[Finding] = []
+    exempted: List[Finding] = []
+    baselined: List[Finding] = []
+    exemptions = list(getattr(project.config, "exemptions", ()))
+
+    for finding in raw:
+        info = project.file(finding.path)
+        if (
+            info is not None
+            and finding.rule != "framework"
+            and info.suppressed(finding)
+        ):
+            suppressed.append(finding)
+            continue
+        if finding.rule != "framework" and any(
+            e.matches(finding) for e in exemptions
+        ):
+            exempted.append(finding)
+            continue
+        if finding.rule != "framework" and not finding.path.startswith(
+            BASELINE_FORBIDDEN_PREFIXES
+        ) and any(_baseline_matches(e, finding) for e in baseline):
+            baselined.append(finding)
+            continue
+        active.append(finding)
+
+    active.sort(key=Finding.sort_key)
+    suppressed.sort(key=Finding.sort_key)
+    exempted.sort(key=Finding.sort_key)
+    baselined.sort(key=Finding.sort_key)
+    return Report(active, suppressed, exempted, baselined, len(project.files))

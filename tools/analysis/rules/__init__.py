@@ -1,0 +1,24 @@
+"""Rule registry: the four invariant families the linter enforces."""
+
+from __future__ import annotations
+
+from tools.analysis.rules.kernel_parity import KernelParityRule
+from tools.analysis.rules.lock_discipline import LockDisciplineRule
+from tools.analysis.rules.replay_safety import ReplaySafetyRule
+from tools.analysis.rules.schema_drift import SchemaDriftRule
+
+__all__ = [
+    "ALL_RULES",
+    "KernelParityRule",
+    "LockDisciplineRule",
+    "ReplaySafetyRule",
+    "SchemaDriftRule",
+]
+
+#: Instantiated in deterministic order; run_analysis sorts findings anyway.
+ALL_RULES = (
+    ReplaySafetyRule(),
+    LockDisciplineRule(),
+    SchemaDriftRule(),
+    KernelParityRule(),
+)

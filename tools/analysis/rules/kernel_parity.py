@@ -1,0 +1,126 @@
+"""Kernel-parity: every Pallas entry point has an oracle and a test.
+
+The repo's accelerator kernels are only trusted through their jnp oracles —
+every bench and parity test pins ``*_pallas`` output against the sibling
+``ref.py`` implementation. This rule makes that contract structural:
+
+* ``missing-oracle`` — a public module-level ``<stem>_pallas`` function in
+  ``kernels/*/kernel.py`` has no ``<stem>_ref`` symbol (def or alias
+  assignment) in the sibling ``ref.py``.
+* ``missing-test-ref`` — no file under ``tests/`` mentions the entry (by
+  its full name, its stem, or ``<stem>_ref``) — an unparity-tested kernel
+  is an unverified kernel.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import PurePosixPath
+from typing import Iterable, List, Optional, Set
+
+from tools.analysis.framework import FileInfo, Finding, Project, Rule
+
+__all__ = ["KernelParityRule"]
+
+
+def _public_defs(tree: ast.AST) -> List[ast.FunctionDef]:
+    return [
+        node
+        for node in getattr(tree, "body", [])
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and not node.name.startswith("_")
+    ]
+
+
+def _exported_symbols(tree: ast.AST) -> Set[str]:
+    """Module-level function defs plus simple alias assignments
+    (``foo_ref = bar_ref``)."""
+    out: Set[str] = set()
+    for node in getattr(tree, "body", []):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.add(tgt.id)
+    return out
+
+
+class KernelParityRule(Rule):
+    id = "kernel-parity"
+    checks = ("missing-oracle", "missing-test-ref")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        cfg = project.config
+        kernel_files = project.glob(cfg.kernels_glob)
+        if not kernel_files:
+            return
+        test_corpus = self._test_corpus(project)
+        for info in kernel_files:
+            if info.tree is None:
+                continue
+            yield from self._check_kernel(project, info, test_corpus)
+
+    def _test_corpus(self, project: Project) -> str:
+        """Concatenated text of every test module (read from disk: tests
+        are usually outside the analyzed path set)."""
+        tests_dir = project.root / project.config.tests_dir
+        if not tests_dir.is_dir():
+            return ""
+        parts = []
+        for p in sorted(tests_dir.rglob("*.py")):
+            parts.append(p.read_text(encoding="utf-8"))
+        return "\n".join(parts)
+
+    def _ref_symbols(self, project: Project, info: FileInfo) -> Optional[Set[str]]:
+        ref_path = str(PurePosixPath(info.path).with_name("ref.py"))
+        ref_info = project.file(ref_path)
+        if ref_info is not None:
+            return _exported_symbols(ref_info.tree) if ref_info.tree else set()
+        src = project.read_text(ref_path)
+        if src is None:
+            return None
+        try:
+            return _exported_symbols(ast.parse(src))
+        except SyntaxError:
+            return set()
+
+    def _check_kernel(
+        self, project: Project, info: FileInfo, test_corpus: str
+    ) -> Iterable[Finding]:
+        entries = [
+            fn for fn in _public_defs(info.tree) if fn.name.endswith("_pallas")
+        ]
+        if not entries:
+            return
+        ref_symbols = self._ref_symbols(project, info)
+        for fn in entries:
+            stem = fn.name[: -len("_pallas")]
+            line, end = self.span(fn)
+            if ref_symbols is None:
+                yield Finding(
+                    self.id, "missing-oracle", info.path, line,
+                    f"kernel entry `{fn.name}` has no sibling ref.py to "
+                    "hold its oracle",
+                    end_line=line,
+                )
+            elif f"{stem}_ref" not in ref_symbols:
+                yield Finding(
+                    self.id, "missing-oracle", info.path, line,
+                    f"kernel entry `{fn.name}` has no `{stem}_ref` oracle "
+                    "in the sibling ref.py — add the jnp reference (an "
+                    "alias assignment to an existing oracle is fine)",
+                    end_line=line,
+                )
+            names = "|".join(
+                re.escape(n) for n in (fn.name, stem, f"{stem}_ref")
+            )
+            if not re.search(rf"\b(?:{names})\b", test_corpus):
+                yield Finding(
+                    self.id, "missing-test-ref", info.path, line,
+                    f"kernel entry `{fn.name}` is not referenced by any "
+                    f"test under {project.config.tests_dir}/ — add a "
+                    "parity test against its oracle",
+                    end_line=line,
+                )

@@ -1,0 +1,200 @@
+"""Lock-discipline: guarded service state must only mutate under its lock.
+
+For every class that *owns* a lock (``self.X = threading.Lock()`` /
+``RLock()`` in any method), the rule learns which ``self._*`` attributes are
+*guarded* — written at least once inside a lexical ``with self.<lock>:``
+block — and then flags every write to a guarded attribute that happens
+outside such a block (check ``unlocked-write``).
+
+"Write" covers plain/aug/annotated assignment, ``del``, subscript stores
+(``self._x[k] = v``, ``del self._x[k]``), and calls to the standard mutator
+methods (``self._x.append(...)``, ``.update``, ``.pop``, …).
+
+Two conventional escapes keep the rule honest rather than noisy:
+
+* ``__init__`` may establish state before the object is shared;
+* methods named ``*_locked`` declare the **caller holds the lock** — the
+  rule trusts the convention at the definition, and any call site inside the
+  class must itself sit under the lock for its own writes.
+
+Everything else needs the lock taken lexically in the same method (dynamic
+protection via "my only caller holds it" is exactly the unstated invariant
+this rule exists to surface — rename the method ``*_locked`` to state it).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from tools.analysis.framework import FileInfo, Finding, Project, Rule
+
+__all__ = ["LockDisciplineRule"]
+
+_MUTATORS = {
+    "add", "append", "clear", "discard", "extend", "insert", "pop",
+    "popitem", "remove", "reverse", "setdefault", "sort", "update",
+}
+_LOCK_CTORS = {"Lock", "RLock"}
+
+
+def _is_lock_ctor(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    func = node.func
+    if isinstance(func, ast.Attribute) and func.attr in _LOCK_CTORS:
+        return True
+    return isinstance(func, ast.Name) and func.id in _LOCK_CTORS
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.<name>`` -> ``name``."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _written_attrs(node: ast.AST) -> List[Tuple[str, ast.AST]]:
+    """Private ``self._*`` attributes this single statement/expr writes."""
+    out: List[Tuple[str, ast.AST]] = []
+
+    def consider(target: ast.AST) -> None:
+        attr = _self_attr(target)
+        if attr is None and isinstance(target, ast.Subscript):
+            attr = _self_attr(target.value)
+        if attr is None and isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                consider(elt)
+            return
+        if attr is not None and attr.startswith("_"):
+            out.append((attr, node))
+
+    if isinstance(node, ast.Assign):
+        for tgt in node.targets:
+            consider(tgt)
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        consider(node.target)
+    elif isinstance(node, ast.Delete):
+        for tgt in node.targets:
+            consider(tgt)
+    elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        if node.func.attr in _MUTATORS:
+            attr = _self_attr(node.func.value)
+            if attr is not None and attr.startswith("_"):
+                out.append((attr, node))
+    return out
+
+
+class _MethodScan:
+    """Writes inside one method, split by lexical lock protection."""
+
+    def __init__(self, method: ast.FunctionDef, lock_attrs: Set[str]):
+        self.method = method
+        self.locked: List[Tuple[str, ast.AST]] = []
+        self.unlocked: List[Tuple[str, ast.AST]] = []
+        self._lock_attrs = lock_attrs
+        self._visit(method.body, under_lock=False)
+
+    def _holds_lock(self, item: ast.withitem) -> bool:
+        expr = item.context_expr
+        if isinstance(expr, ast.Call):  # e.g. ``self._lock.acquire_timeout()``
+            expr = expr.func
+            if isinstance(expr, ast.Attribute):
+                expr = expr.value
+        attr = _self_attr(expr)
+        return attr in self._lock_attrs
+
+    def _visit(self, body: List[ast.stmt], under_lock: bool) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                locked = under_lock or any(
+                    self._holds_lock(i) for i in stmt.items
+                )
+                self._visit(stmt.body, locked)
+                continue
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue  # nested defs have their own discipline story
+            sink = self.locked if under_lock else self.unlocked
+            for node in _walk_outside_with(stmt):
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    # With nested inside e.g. try/if — recurse with the
+                    # correct lock state; its subtree was pruned below
+                    locked = under_lock or any(
+                        self._holds_lock(i) for i in node.items
+                    )
+                    self._visit(node.body, locked)
+                    continue
+                for attr, site in _written_attrs(node):
+                    sink.append((attr, site))
+
+
+def _walk_outside_with(stmt: ast.stmt) -> Iterable[ast.AST]:
+    """Yield the statement's nodes, yielding nested With nodes themselves
+    but not descending into them (the caller recurses with the right lock
+    state); nested function subtrees are skipped entirely."""
+    stack: List[ast.AST] = [stmt]
+    while stack:
+        node = stack.pop()
+        yield node
+        if node is not stmt and isinstance(
+            node,
+            (ast.With, ast.AsyncWith, ast.FunctionDef, ast.AsyncFunctionDef),
+        ):
+            continue
+        for child in ast.iter_child_nodes(node):
+            stack.append(child)
+
+
+class LockDisciplineRule(Rule):
+    id = "lock-discipline"
+    checks = ("unlocked-write",)
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        for info in project.files:
+            if info.tree is None:
+                continue
+            for node in ast.walk(info.tree):
+                if isinstance(node, ast.ClassDef):
+                    yield from self._check_class(info, node)
+
+    def _check_class(
+        self, info: FileInfo, cls: ast.ClassDef
+    ) -> Iterable[Finding]:
+        methods = [
+            n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        lock_attrs: Set[str] = set()
+        for m in methods:
+            for node in ast.walk(m):
+                for attr, site in _written_attrs(node):
+                    if isinstance(site, ast.Assign) and _is_lock_ctor(site.value):
+                        lock_attrs.add(attr)
+        if not lock_attrs:
+            return
+
+        scans = {m.name: _MethodScan(m, lock_attrs) for m in methods}
+        guarded: Set[str] = set()
+        for scan in scans.values():
+            guarded.update(attr for attr, _ in scan.locked)
+        guarded -= lock_attrs  # the lock itself is created unlocked
+
+        for m in methods:
+            if m.name == "__init__" or m.name.endswith("_locked"):
+                continue
+            for attr, site in scans[m.name].unlocked:
+                if attr not in guarded or attr in lock_attrs:
+                    continue
+                line, end = self.span(site)
+                yield Finding(
+                    self.id, "unlocked-write", info.path, line,
+                    f"`{cls.name}.{m.name}` writes `self.{attr}` outside "
+                    "the lock, but other sites guard it with `with "
+                    "self.<lock>:` — take the lock here, or rename the "
+                    "method `*_locked` if the caller holds it",
+                    end_line=end,
+                )

@@ -1,0 +1,319 @@
+"""Replay-safety: decision paths must be pure functions of checkpointed state.
+
+The engine's failover story (PR 4/7) replays an oplog against a snapshot and
+demands bit-identical suggestions. Anything that injects entropy, wall-clock
+time, process-lifetime identity, or hash-order nondeterminism into a decision
+path silently breaks that contract. Checks:
+
+* ``wall-clock``  — ``time.time()``, ``datetime.now()``/``utcnow``/``today``,
+  ``date.today()`` (every analyzed file).
+* ``entropy``     — ``os.urandom``, ``uuid.uuid1/uuid4``, any ``secrets.*``
+  (every analyzed file).
+* ``unseeded-rng``— ``np.random.default_rng()`` with no seed, the legacy
+  ``np.random.*`` module-global generators, ``RandomState()`` with no seed,
+  and any use of the stdlib ``random`` module (every analyzed file).
+* ``fresh-rng``   — constructing *any* RNG, even seeded
+  (``default_rng(seed)``, ``Generator(...)``, ``RandomState(seed)``,
+  ``random.Random(...)``). Seeded construction is fine only where the
+  bit-generator state is checkpointed or re-derived statelessly — which is
+  exactly what the mandatory suppression/exemption justification documents.
+* ``id-key``      — any ``id()`` call in a decision-path module: process
+  identities must never key state that is serialized or replayed.
+* ``set-iter``    — in decision-path modules, iterating a set-typed value
+  where the iteration order can leak into output (for-loops, list/dict/
+  generator comprehensions, ``list(s)``/``tuple(s)``/``"".join(s)``).
+  Order-insensitive consumption (``sorted``, ``len``, ``sum``, ``min``,
+  ``max``, ``any``, ``all``, ``set``, ``frozenset``, set comprehensions)
+  passes.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Dict, Iterable, List, Optional, Set
+
+from tools.analysis.framework import FileInfo, Finding, Project, Rule
+
+__all__ = ["ReplaySafetyRule"]
+
+_WALL_CLOCK = {
+    "time.time",
+    "time.time_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "datetime.date.today",
+}
+_ENTROPY = {"os.urandom", "uuid.uuid1", "uuid.uuid4"}
+#: legacy numpy module-global generator functions (implicit global state)
+_NP_RANDOM_GLOBALS = {
+    "beta", "binomial", "bytes", "chisquare", "choice", "dirichlet",
+    "exponential", "gamma", "geometric", "gumbel", "laplace", "logistic",
+    "lognormal", "multinomial", "multivariate_normal", "normal",
+    "permutation", "poisson", "rand", "randint", "randn", "random",
+    "random_sample", "ranf", "sample", "seed", "shuffle", "standard_cauchy",
+    "standard_exponential", "standard_gamma", "standard_normal",
+    "standard_t", "triangular", "uniform", "vonmises", "weibull", "zipf",
+}
+#: consumers for which set iteration order cannot be observed
+_ORDER_INSENSITIVE = {
+    "len", "sum", "min", "max", "any", "all", "sorted", "set", "frozenset",
+}
+_SET_METHODS = {
+    "union", "intersection", "difference", "symmetric_difference", "copy",
+}
+
+
+def _resolve_imports(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to fully-qualified dotted module/attribute paths."""
+    table: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                table[(alias.asname or alias.name.split(".")[0])] = (
+                    alias.name if alias.asname else alias.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for alias in node.names:
+                table[alias.asname or alias.name] = f"{node.module}.{alias.name}"
+    return table
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _qualify(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Resolve a call target to a dotted name with import aliases expanded
+    (``np.random.default_rng`` -> ``numpy.random.default_rng``)."""
+    dotted = _dotted(node)
+    if dotted is None:
+        return None
+    head, _, rest = dotted.partition(".")
+    head = imports.get(head, head)
+    return f"{head}.{rest}" if rest else head
+
+
+def _norm(qual: str) -> str:
+    # numpy.random.default_rng and numpy.random._generator.default_rng etc.
+    return qual.replace("np.", "numpy.", 1) if qual.startswith("np.") else qual
+
+
+def _scoped_walk(scope: ast.AST) -> Iterable[ast.AST]:
+    """Walk a scope's statements without descending into nested function
+    (or lambda) bodies — those are their own scopes."""
+    stack: List[ast.AST] = list(getattr(scope, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue  # its body is a separate scope
+        for child in ast.iter_child_nodes(node):
+            stack.append(child)
+
+
+class _SetTracker:
+    """Per-scope tracking of names bound to set-typed expressions."""
+
+    def __init__(self, imports: Dict[str, str]):
+        self.imports = imports
+        self.names: Set[str] = set()
+
+    def is_set(self, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.BinOp) and isinstance(
+            node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+        ):
+            return self.is_set(node.left) or self.is_set(node.right)
+        if isinstance(node, ast.Call):
+            qual = _qualify(node.func, self.imports)
+            if qual in ("set", "frozenset"):
+                return True
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _SET_METHODS
+                and self.is_set(node.func.value)
+            ):
+                return True
+        return False
+
+    def observe_assign(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign) and self.is_set(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.names.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if self.is_set(node.value) and isinstance(node.target, ast.Name):
+                self.names.add(node.target.id)
+
+
+class ReplaySafetyRule(Rule):
+    id = "replay-safety"
+    checks = (
+        "wall-clock", "entropy", "unseeded-rng", "fresh-rng",
+        "id-key", "set-iter",
+    )
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        decision_globs = tuple(project.config.decision_paths)
+        for info in project.files:
+            if info.tree is None:
+                continue
+            in_decision_path = any(
+                fnmatch.fnmatch(info.path, g) for g in decision_globs
+            )
+            yield from self._check_file(info, in_decision_path)
+
+    # ------------------------------------------------------------------
+
+    def _check_file(
+        self, info: FileInfo, in_decision_path: bool
+    ) -> Iterable[Finding]:
+        imports = _resolve_imports(info.tree)
+        yield from self._check_calls(info, imports, in_decision_path)
+        if in_decision_path:
+            yield from self._check_set_iteration(info, imports)
+
+    def _finding(self, info: FileInfo, node: ast.AST, check: str, msg: str) -> Finding:
+        line, end = self.span(node)
+        return Finding(self.id, check, info.path, line, msg, end_line=end)
+
+    def _check_calls(
+        self, info: FileInfo, imports: Dict[str, str], in_decision_path: bool
+    ) -> Iterable[Finding]:
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qual = _qualify(node.func, imports)
+            if qual is None:
+                continue
+            qual = _norm(qual)
+
+            if qual in _WALL_CLOCK:
+                yield self._finding(
+                    info, node, "wall-clock",
+                    f"`{qual}()` reads the wall clock; replayed runs will "
+                    "observe different values — derive timing from "
+                    "checkpointed state or exempt with justification",
+                )
+            elif qual in _ENTROPY or qual.startswith("secrets."):
+                yield self._finding(
+                    info, node, "entropy",
+                    f"`{qual}()` draws OS entropy; the result can never "
+                    "replay — thread a seeded generator through instead",
+                )
+            elif qual == "numpy.random.default_rng":
+                if not (node.args or node.keywords):
+                    yield self._finding(
+                        info, node, "unseeded-rng",
+                        "`default_rng()` without a seed is entropy-seeded "
+                        "and unreplayable — pass an explicit seed",
+                    )
+                else:
+                    yield self._finding(
+                        info, node, "fresh-rng",
+                        "seeded `default_rng(...)` constructs RNG state "
+                        "outside the checkpoint — justify how this state "
+                        "survives snapshot/replay",
+                    )
+            elif qual in ("numpy.random.Generator", "numpy.random.RandomState"):
+                if qual.endswith("RandomState") and not (node.args or node.keywords):
+                    yield self._finding(
+                        info, node, "unseeded-rng",
+                        "`RandomState()` without a seed is entropy-seeded "
+                        "and unreplayable — pass an explicit seed",
+                    )
+                else:
+                    yield self._finding(
+                        info, node, "fresh-rng",
+                        f"`{qual}(...)` constructs RNG state outside the "
+                        "checkpoint — justify how this state survives "
+                        "snapshot/replay",
+                    )
+            elif qual.startswith("numpy.random.") and qual.rpartition(".")[2] in _NP_RANDOM_GLOBALS:
+                yield self._finding(
+                    info, node, "unseeded-rng",
+                    f"`{qual}()` uses numpy's hidden module-global "
+                    "generator — use an explicit seeded Generator",
+                )
+            elif qual == "random.Random":
+                yield self._finding(
+                    info, node, "fresh-rng",
+                    "`random.Random(...)` constructs RNG state outside the "
+                    "checkpoint — prefer numpy Generators whose state is "
+                    "snapshot-managed, or justify",
+                )
+            elif qual.startswith("random.") and qual.count(".") == 1:
+                yield self._finding(
+                    info, node, "unseeded-rng",
+                    f"`{qual}()` uses the stdlib global RNG — decision "
+                    "paths must draw from checkpointed generators",
+                )
+            elif (
+                in_decision_path
+                and qual == "id"
+                and "id" not in imports
+            ):
+                yield self._finding(
+                    info, node, "id-key",
+                    "`id()` is a process-lifetime identity; keying or "
+                    "comparing state with it breaks replay across "
+                    "processes — use an explicit token",
+                )
+
+    # ------------------------------------------------------------------
+
+    def _check_set_iteration(
+        self, info: FileInfo, imports: Dict[str, str]
+    ) -> Iterable[Finding]:
+        # one tracker per function scope (plus module scope); nested
+        # function bodies are pruned from the enclosing scope's walk
+        scopes: List[ast.AST] = [info.tree]
+        for node in ast.walk(info.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append(node)
+        for scope in scopes:
+            tracker = _SetTracker(imports)
+            for node in _scoped_walk(scope):
+                tracker.observe_assign(node)
+            yield from self._scan_scope(info, scope, tracker)
+
+    def _scan_scope(
+        self, info: FileInfo, scope: ast.AST, tracker: _SetTracker
+    ) -> Iterable[Finding]:
+        own_nodes = list(_scoped_walk(scope))
+        msg = (
+            "iteration over a set observes hash order, which is not stable "
+            "across processes — sort it (`sorted(...)`) or consume it "
+            "order-insensitively"
+        )
+        for node in own_nodes:
+            if isinstance(node, (ast.For, ast.AsyncFor)) and tracker.is_set(node.iter):
+                yield self._finding(info, node, "set-iter", msg)
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.DictComp)):
+                for gen in node.generators:
+                    if tracker.is_set(gen.iter):
+                        yield self._finding(info, node, "set-iter", msg)
+            elif isinstance(node, ast.Call):
+                qual = _qualify(node.func, tracker.imports)
+                if qual in _ORDER_INSENSITIVE:
+                    continue
+                is_join = (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "join"
+                )
+                if qual in ("list", "tuple") or is_join:
+                    for arg in node.args:
+                        if tracker.is_set(arg):
+                            yield self._finding(info, node, "set-iter", msg)

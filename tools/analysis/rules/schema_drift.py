@@ -1,0 +1,262 @@
+"""Schema-drift: wire/snapshot fields are versioned, locked, and documented.
+
+The RPC protocol (``core/rpc.py``) and the engine snapshot
+(``service.py:snapshot_job``) have each been bumped four times by hand
+(``PROTOCOL_VERSION``/``ENGINE_SNAPSHOT_VERSION`` are at 4), and every bump
+was audited against ``docs/wire_protocol.md``. This rule mechanizes that
+audit:
+
+* ``compute_schema`` parses the message dataclasses (classes carrying a
+  ``TYPE`` tag; fields are the annotated assignments) and the snapshot key
+  set (string keys of the dict literals ``snapshot_job`` returns).
+* ``lock-drift`` — the computed schema must equal the committed
+  ``tools/analysis/schema_lock.json``. If fields changed but the matching
+  version constant did not, the message says so explicitly (that is the
+  bug); if the constant was bumped, it tells you to regenerate the lock
+  (``python -m tools.analysis --update-schema-lock``).
+* ``undocumented-field`` — every message type, message field, and snapshot
+  key must appear as a code token in ``docs/wire_protocol.md``.
+* ``schema-parse`` — the rule could not locate the constants/classes/keys
+  it audits (a refactor moved them: teach ``config.py`` the new home).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.analysis.framework import Finding, Project, Rule
+
+__all__ = ["SchemaDriftRule", "compute_schema"]
+
+_CODE_SPAN_RE = re.compile(r"`+([^`]+?)`+")
+_FENCE_RE = re.compile(r"```.*?\n(.*?)```", re.DOTALL)
+_TOKEN_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def compute_schema(
+    rpc_source: str, service_source: str
+) -> Tuple[Dict[str, object], Dict[str, int], List[str]]:
+    """Parse the wire schema out of the two source files.
+
+    Returns ``(schema, sites, problems)`` where ``schema`` is the
+    lock-file-shaped dict, ``sites`` maps ``"Type.field"``/``"Type"`` to the
+    rpc.py line it was declared on (for findings), and ``problems`` lists
+    anything the parser expected but could not find.
+    """
+    problems: List[str] = []
+    sites: Dict[str, int] = {}
+
+    rpc_tree = ast.parse(rpc_source)
+    versions: Dict[str, int] = {}
+    messages: Dict[str, List[str]] = {}
+    for node in rpc_tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id in (
+                "PROTOCOL_VERSION", "ENGINE_SNAPSHOT_VERSION",
+            ):
+                if isinstance(node.value, ast.Constant) and isinstance(
+                    node.value.value, int
+                ):
+                    versions[tgt.id] = node.value.value
+                else:
+                    problems.append(f"{tgt.id} is not an integer literal")
+        elif isinstance(node, ast.ClassDef):
+            type_tag: Optional[str] = None
+            fields: List[Tuple[str, int]] = []
+            for item in node.body:
+                if (
+                    isinstance(item, ast.Assign)
+                    and len(item.targets) == 1
+                    and isinstance(item.targets[0], ast.Name)
+                    and item.targets[0].id == "TYPE"
+                    and isinstance(item.value, ast.Constant)
+                    and isinstance(item.value.value, str)
+                ):
+                    type_tag = item.value.value
+                elif isinstance(item, ast.AnnAssign) and isinstance(
+                    item.target, ast.Name
+                ):
+                    fields.append((item.target.id, item.lineno))
+            if type_tag is not None:
+                messages[type_tag] = [name for name, _ in fields]
+                sites[type_tag] = node.lineno
+                for name, lineno in fields:
+                    sites[f"{type_tag}.{name}"] = lineno
+    for const in ("PROTOCOL_VERSION", "ENGINE_SNAPSHOT_VERSION"):
+        if const not in versions:
+            problems.append(f"constant {const} not found")
+    if not messages:
+        problems.append("no message classes (with a TYPE tag) found")
+
+    snapshot_keys: List[str] = []
+    seen: Set[str] = set()
+    service_tree = ast.parse(service_source)
+    found_fn = False
+    for node in ast.walk(service_tree):
+        if (
+            isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and node.name == "snapshot_job"
+        ):
+            found_fn = True
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) and isinstance(
+                    sub.value, ast.Dict
+                ):
+                    for key in sub.value.keys:
+                        if isinstance(key, ast.Constant) and isinstance(
+                            key.value, str
+                        ):
+                            if key.value not in seen:
+                                seen.add(key.value)
+                                snapshot_keys.append(key.value)
+    if not found_fn:
+        problems.append("snapshot_job not found in the service module")
+    elif not snapshot_keys:
+        problems.append("snapshot_job returns no dict literal to fingerprint")
+
+    schema: Dict[str, object] = {
+        "protocol_version": versions.get("PROTOCOL_VERSION"),
+        "engine_snapshot_version": versions.get("ENGINE_SNAPSHOT_VERSION"),
+        "messages": {t: list(f) for t, f in sorted(messages.items())},
+        "snapshot_keys": snapshot_keys,
+    }
+    return schema, sites, problems
+
+
+def _doc_tokens(doc: str) -> Set[str]:
+    """Every identifier token that appears in inline code spans or fenced
+    code blocks of the document."""
+    chunks = _FENCE_RE.findall(doc)
+    chunks += _CODE_SPAN_RE.findall(_FENCE_RE.sub("", doc))
+    tokens: Set[str] = set()
+    for chunk in chunks:
+        tokens.update(_TOKEN_RE.findall(chunk))
+    return tokens
+
+
+class SchemaDriftRule(Rule):
+    id = "schema-drift"
+    checks = ("lock-drift", "undocumented-field", "schema-parse")
+
+    def _source(self, project: Project, relpath: str) -> Optional[str]:
+        info = project.file(relpath)
+        if info is not None:
+            return info.source
+        return project.read_text(relpath)
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        cfg = project.config
+        rpc_src = self._source(project, cfg.rpc_module)
+        svc_src = self._source(project, cfg.service_module)
+        if rpc_src is None or svc_src is None:
+            missing = cfg.rpc_module if rpc_src is None else cfg.service_module
+            yield Finding(
+                self.id, "schema-parse", missing, 0,
+                "schema source module is missing — update "
+                "tools/analysis/config.py if it moved",
+            )
+            return
+        try:
+            schema, sites, problems = compute_schema(rpc_src, svc_src)
+        except SyntaxError:
+            return  # the framework already reports syntax-error findings
+        for p in problems:
+            yield Finding(self.id, "schema-parse", cfg.rpc_module, 0, p)
+        if problems:
+            return
+
+        yield from self._check_lock(project, schema)
+        yield from self._check_doc(project, schema, sites)
+
+    # ------------------------------------------------------------------
+
+    def _check_lock(
+        self, project: Project, schema: Dict[str, object]
+    ) -> Iterable[Finding]:
+        cfg = project.config
+        raw = project.read_text(cfg.schema_lock)
+        if raw is None:
+            yield Finding(
+                self.id, "lock-drift", cfg.schema_lock, 0,
+                "schema lock file is missing — run `python -m "
+                "tools.analysis --update-schema-lock`",
+            )
+            return
+        try:
+            lock = json.loads(raw)
+        except ValueError:
+            yield Finding(
+                self.id, "lock-drift", cfg.schema_lock, 0,
+                "schema lock file is not valid JSON — regenerate it with "
+                "`python -m tools.analysis --update-schema-lock`",
+            )
+            return
+
+        pairs = (
+            ("messages", "protocol_version", "PROTOCOL_VERSION"),
+            ("snapshot_keys", "engine_snapshot_version",
+             "ENGINE_SNAPSHOT_VERSION"),
+        )
+        for fields_key, version_key, const in pairs:
+            fields_changed = lock.get(fields_key) != schema[fields_key]
+            version_changed = lock.get(version_key) != schema[version_key]
+            if fields_changed and not version_changed:
+                yield Finding(
+                    self.id, "lock-drift", cfg.rpc_module, 0,
+                    f"{fields_key} changed relative to the schema lock but "
+                    f"{const} did not — bump the version constant, update "
+                    "docs/wire_protocol.md, then run `python -m "
+                    "tools.analysis --update-schema-lock`",
+                )
+            elif fields_changed or version_changed:
+                yield Finding(
+                    self.id, "lock-drift", cfg.schema_lock, 0,
+                    f"{fields_key}/{version_key} drifted from the schema "
+                    "lock — run `python -m tools.analysis "
+                    "--update-schema-lock` to regenerate and review the "
+                    "printed diff",
+                )
+
+    def _check_doc(
+        self,
+        project: Project,
+        schema: Dict[str, object],
+        sites: Dict[str, int],
+    ) -> Iterable[Finding]:
+        cfg = project.config
+        doc = project.read_text(cfg.wire_doc)
+        if doc is None:
+            yield Finding(
+                self.id, "undocumented-field", cfg.wire_doc, 0,
+                "wire protocol document is missing",
+            )
+            return
+        tokens = _doc_tokens(doc)
+        messages: Dict[str, List[str]] = schema["messages"]  # type: ignore[assignment]
+        for type_tag in sorted(messages):
+            if type_tag not in tokens:
+                yield Finding(
+                    self.id, "undocumented-field", cfg.rpc_module,
+                    sites.get(type_tag, 0),
+                    f"message type `{type_tag}` is not documented in "
+                    f"{cfg.wire_doc}",
+                )
+            for field in messages[type_tag]:
+                if field not in tokens:
+                    yield Finding(
+                        self.id, "undocumented-field", cfg.rpc_module,
+                        sites.get(f"{type_tag}.{field}", 0),
+                        f"wire field `{type_tag}.{field}` is not documented "
+                        f"in {cfg.wire_doc}",
+                    )
+        for key in schema["snapshot_keys"]:  # type: ignore[union-attr]
+            if key not in tokens:
+                yield Finding(
+                    self.id, "undocumented-field", cfg.rpc_module, 0,
+                    f"engine-snapshot key `{key}` is not documented in "
+                    f"{cfg.wire_doc}",
+                )

@@ -1,0 +1,188 @@
+"""CLI of the invariant linter.
+
+Usage (from the repo root)::
+
+    python -m tools.analysis [paths ...] [--format=text|json]
+    python -m tools.analysis --update-schema-lock
+    python tools/analysis/run.py src tools
+
+Default paths are ``src`` and ``tools``. Exit codes: 0 — clean (suppressed/
+exempted/baselined findings do not fail), 1 — active findings, 2 — the
+linter itself could not run (bad config, refused lock update).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+if __package__ in (None, ""):  # direct `python tools/analysis/run.py`
+    sys.path.insert(0, str(Path(__file__).resolve().parents[2]))
+
+from tools.analysis.config import DEFAULT_CONFIG, AnalysisConfig
+from tools.analysis.framework import (
+    AnalysisError,
+    Project,
+    Report,
+    load_baseline,
+    run_analysis,
+)
+from tools.analysis.rules import ALL_RULES
+from tools.analysis.rules.schema_drift import compute_schema
+
+__all__ = ["build_project", "main", "update_schema_lock"]
+
+#: directory parts that never hold analyzable production code
+_EXCLUDED_PARTS = {"__pycache__", "fixtures", ".git"}
+
+
+def discover(root: Path, paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for rel in paths:
+        p = (root / rel).resolve()
+        if p.is_file() and p.suffix == ".py":
+            out.append(p)
+            continue
+        if not p.is_dir():
+            raise AnalysisError(f"no such path: {rel}")
+        for f in sorted(p.rglob("*.py")):
+            if any(part in _EXCLUDED_PARTS for part in f.parts):
+                continue
+            out.append(f)
+    # dedupe, keep deterministic order
+    seen = set()
+    unique = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            unique.append(f)
+    return unique
+
+
+def build_project(
+    root: Path,
+    paths: Sequence[str],
+    config: Optional[AnalysisConfig] = None,
+) -> Project:
+    return Project(root, discover(root, paths), config or DEFAULT_CONFIG)
+
+
+def _render_text(report: Report) -> str:
+    lines: List[str] = []
+    for f in report.findings:
+        loc = f"{f.path}:{f.line}" if f.line else f.path
+        lines.append(f"{loc}: [{f.rule}/{f.check}] {f.message}")
+    lines.append(
+        f"{len(report.findings)} finding(s) · "
+        f"{len(report.suppressed)} suppressed · "
+        f"{len(report.exempted)} exempted · "
+        f"{len(report.baselined)} baselined · "
+        f"{report.num_files} file(s) analyzed"
+    )
+    return "\n".join(lines)
+
+
+def update_schema_lock(root: Path, config: AnalysisConfig) -> int:
+    """Regenerate schema_lock.json, refusing when fields changed without the
+    matching version-constant bump (that bump is the audit trail)."""
+    rpc_src = (root / config.rpc_module).read_text(encoding="utf-8")
+    svc_src = (root / config.service_module).read_text(encoding="utf-8")
+    schema, _, problems = compute_schema(rpc_src, svc_src)
+    if problems:
+        for p in problems:
+            print(f"error: {p}", file=sys.stderr)
+        return 2
+
+    lock_path = root / config.schema_lock
+    old = {}
+    if lock_path.is_file():
+        old = json.loads(lock_path.read_text(encoding="utf-8"))
+
+    guard_failures = []
+    for fields_key, version_key, const in (
+        ("messages", "protocol_version", "PROTOCOL_VERSION"),
+        ("snapshot_keys", "engine_snapshot_version", "ENGINE_SNAPSHOT_VERSION"),
+    ):
+        if old and old.get(fields_key) != schema[fields_key] and (
+            old.get(version_key) == schema[version_key]
+        ):
+            guard_failures.append(
+                f"refusing: {fields_key} changed but {const} was not bumped "
+                f"(still {schema[version_key]}) — bump the constant in "
+                f"{config.rpc_module} and document the change in "
+                f"{config.wire_doc} first"
+            )
+    if guard_failures:
+        for msg in guard_failures:
+            print(msg, file=sys.stderr)
+        return 2
+
+    new_text = json.dumps(schema, indent=2, sort_keys=False) + "\n"
+    old_text = json.dumps(old, indent=2, sort_keys=False) + "\n" if old else ""
+    if old_text == new_text:
+        print(f"{config.schema_lock} already up to date")
+        return 0
+    import difflib
+
+    diff = difflib.unified_diff(
+        old_text.splitlines(keepends=True),
+        new_text.splitlines(keepends=True),
+        fromfile=f"a/{config.schema_lock}",
+        tofile=f"b/{config.schema_lock}",
+    )
+    sys.stdout.writelines(diff)
+    lock_path.write_text(new_text, encoding="utf-8")
+    print(f"wrote {config.schema_lock}")
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="tools.analysis",
+        description="AST-based invariant linter (replay-safety, "
+        "lock-discipline, schema-drift, kernel-parity)",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=None,
+        help="files/directories to analyze, relative to --root "
+        "(default: src tools)",
+    )
+    parser.add_argument("--format", choices=("text", "json"), default="text")
+    parser.add_argument(
+        "--root", default=".",
+        help="repository root (default: current directory)",
+    )
+    parser.add_argument(
+        "--baseline", default="tools/analysis/baseline.json",
+        help="baseline file, relative to --root",
+    )
+    parser.add_argument(
+        "--update-schema-lock", action="store_true",
+        help="regenerate tools/analysis/schema_lock.json and print the diff",
+    )
+    args = parser.parse_args(argv)
+    root = Path(args.root).resolve()
+    config = DEFAULT_CONFIG
+
+    try:
+        if args.update_schema_lock:
+            return update_schema_lock(root, config)
+        project = build_project(root, args.paths or ["src", "tools"], config)
+        baseline = load_baseline(root / args.baseline)
+        report = run_analysis(project, ALL_RULES, baseline)
+    except AnalysisError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps(report.to_json(), indent=2))
+    else:
+        print(_render_text(report))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
