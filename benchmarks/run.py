@@ -19,13 +19,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig2,fig4,fig5,async,gp,"
                          "suggest,multijob,remote,multimetric,multifidelity,"
-                         "large_n,roofline")
+                         "large_n,cost_aware,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import async_strategies, bo_vs_random, early_stopping
     from benchmarks import gp_perf, log_scaling, roofline_report, warm_start
-    from benchmarks import large_n, multi_job, multifidelity, multimetric
+    from benchmarks import cost_aware, large_n, multi_job, multifidelity
+    from benchmarks import multimetric
     from benchmarks import remote_service
     from benchmarks import suggest_throughput
 
@@ -59,6 +60,9 @@ def main() -> None:
         suites.append(("multifidelity", multifidelity.run))
     if only is None or "large_n" in only:
         suites.append(("large_n", large_n.run))
+    if only is None or "cost_aware" in only:
+        suites.append(("cost_aware", lambda: cost_aware.run(
+            num_seeds=5 if args.full else 3)))
     if only is None or "roofline" in only:
         suites.append(("roofline", roofline_report.run))
 

@@ -107,6 +107,11 @@ class ObservationStore:
         # the multi-fidelity layer uses to join store rows with rung tables.
         # None for callers that don't track keys — the GP never reads them.
         self._own_keys: List[Optional[Hashable]] = []
+        # per-own-row trial costs (simulated seconds, from backend event
+        # times). None for cost-less callers; the list stays all-None — and
+        # every serialized form omits it — unless a cost is ever pushed, so
+        # cost-off jobs serialize byte-identically to the pre-cost store.
+        self._own_costs: List[Optional[float]] = []
         self._pending: Dict[Hashable, Tuple[Dict[str, Any], np.ndarray]] = {}
 
     # ------------------------------------------------------------- counters
@@ -138,16 +143,25 @@ class ObservationStore:
 
     # ------------------------------------------------------------ mutation
     def push(
-        self, config: Mapping[str, Any], y: float, key: Optional[Hashable] = None
+        self,
+        config: Mapping[str, Any],
+        y: float,
+        key: Optional[Hashable] = None,
+        cost: Optional[float] = None,
     ) -> bool:
         """Append one finished observation. Non-finite objectives are dropped
         (they must neither seed the GP nor shift the standardization).
         ``key`` (optional) tags the row with the caller's trial id — the
-        join handle of the multi-fidelity rung tables."""
-        return self.push_encoded(self.space.encode(config), y, key=key)
+        join handle of the multi-fidelity rung tables. ``cost`` (optional)
+        records the trial's simulated cost for the cost head."""
+        return self.push_encoded(self.space.encode(config), y, key=key, cost=cost)
 
     def push_encoded(
-        self, x: np.ndarray, y: float, key: Optional[Hashable] = None
+        self,
+        x: np.ndarray,
+        y: float,
+        key: Optional[Hashable] = None,
+        cost: Optional[float] = None,
     ) -> bool:
         if self.num_metrics > 1:
             raise ValueError(
@@ -164,6 +178,7 @@ class ObservationStore:
         self._y[n] = y
         self._n_own += 1
         self._own_keys.append(key)
+        self._own_costs.append(None if cost is None else float(cost))
         return True
 
     def push_metrics(
@@ -204,6 +219,7 @@ class ObservationStore:
         self._yx[n] = yvec[1:]
         self._n_own += 1
         self._own_keys.append(key)
+        self._own_costs.append(None)
         return True
 
     def rewrite_own_y(self, own_index: int, y: float) -> None:
@@ -235,6 +251,7 @@ class ObservationStore:
         self._yx[n - 1] = 0.0
         self._n_own -= 1
         del self._own_keys[own_index]
+        del self._own_costs[own_index]
         return removed
 
     def _grow(self, cap: int) -> None:
@@ -258,6 +275,20 @@ class ObservationStore:
         the multi-fidelity layer joins store rows to rung tables with. None
         entries are rows pushed by key-less callers."""
         return list(self._own_keys)
+
+    def own_costs(self) -> List[Optional[float]]:
+        """Per-own-row simulated trial costs, in push order (None entries are
+        rows pushed by cost-less callers) — what the cost head standardizes
+        over. Parent rows never carry costs (a sibling's spend is not this
+        job's)."""
+        return list(self._own_costs)
+
+    @property
+    def has_costs(self) -> bool:
+        """True iff any own row carries a recorded cost. Gates every
+        serialized ``own_costs`` key so cost-off state stays byte-identical
+        to the pre-cost schema."""
+        return any(c is not None for c in self._own_costs)
 
     def x_rows(self, start: int, stop: int) -> np.ndarray:
         """Encoded rows [start, stop) — the append log a cached posterior
@@ -392,6 +423,11 @@ class ObservationStore:
         )
         if self.num_metrics > 1:
             fp += f":{array_fingerprint(self._yx[:n])}"
+        if self.has_costs:
+            fp += ":" + array_fingerprint(np.asarray(
+                [math.nan if c is None else c for c in self._own_costs],
+                dtype=np.float64,
+            ))
         return fp
 
     # ---------------------------------------------------------- persistence
@@ -406,6 +442,8 @@ class ObservationStore:
         }
         if self.num_metrics > 1:
             state["own_yx"] = self._yx[npar:n].tolist()
+        if self.has_costs:
+            state["own_costs"] = list(self._own_costs)
         return state
 
     def snapshot(self) -> Dict[str, Any]:
@@ -437,6 +475,8 @@ class ObservationStore:
         }
         if self.num_metrics > 1:
             snap["own_yx"] = array_to_wire(self._yx[npar:n])
+        if self.has_costs:
+            snap["own_costs"] = list(self._own_costs)
         return snap
 
     def load_snapshot(self, snap: Mapping[str, Any]) -> None:
@@ -457,25 +497,29 @@ class ObservationStore:
         self._y[: self._num_parents] = pz
         self._n_own = 0
         self._own_keys = []
+        self._own_costs = []
         self._pending = {}
         own_x = array_from_wire(snap["own_x"]).reshape(-1, d)
         own_y = array_from_wire(snap["own_y"])
         keys = snap.get("own_keys") or [None] * len(own_x)
+        costs = snap.get("own_costs") or [None] * len(own_x)
         if m_extra > 0:
             own_yx = array_from_wire(snap["own_yx"]).reshape(-1, m_extra)
             for x, y, yx, k in zip(own_x, own_y, own_yx, keys):
                 self.push_vector_encoded(x, np.concatenate(([y], yx)), key=k)
         else:
-            for x, y, k in zip(own_x, own_y, keys):
-                self.push_encoded(x, float(y), key=k)
+            for x, y, k, c in zip(own_x, own_y, keys, costs):
+                self.push_encoded(x, float(y), key=k, cost=c)
         for key, cfg, x in snap["pending"]:
             self._pending[key] = (dict(cfg), array_from_wire(x))
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
         self._n_own = 0
         self._own_keys = []
+        self._own_costs = []
         self._pending.clear()
         keys = state.get("own_keys") or [None] * len(state["own_x"])
+        costs = state.get("own_costs") or [None] * len(state["own_x"])
         if self.num_metrics > 1:
             for x, y, yx, k in zip(
                 state["own_x"], state["own_y"], state["own_yx"], keys
@@ -486,5 +530,6 @@ class ObservationStore:
                     key=k,
                 )
             return
-        for x, y, k in zip(state["own_x"], state["own_y"], keys):
-            self.push_encoded(np.asarray(x, dtype=np.float64), float(y), key=k)
+        for x, y, k, c in zip(state["own_x"], state["own_y"], keys, costs):
+            self.push_encoded(np.asarray(x, dtype=np.float64), float(y),
+                              key=k, cost=c)

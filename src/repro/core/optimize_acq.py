@@ -188,9 +188,14 @@ class MultiAcqSpec(NamedTuple):
     [objective, rung 0, …, rung R−1] over the shared factor, scored as a
     weighted per-head EI (``repro.core.gp.per_resource.rung_weighted_ei``);
     ``num_objectives`` is then the head count 1+R and there are no
-    constraints."""
+    constraints.
 
-    mode: str  # "constrained" | "pareto" | "rungs"
+    ``mode="cost"`` is EI-per-unit-cost (``BOConfig.cost_aware``): heads are
+    [objective, standardized log-cost] over the shared factor, scored as
+    EI(head 0) · exp(−η · mean(head 1)) with η in ``weights[0, 0]``;
+    ``num_objectives`` is 2 and there are no constraints."""
+
+    mode: str  # "constrained" | "pareto" | "rungs" | "cost"
     num_objectives: int
     num_constraints: int
 
@@ -246,6 +251,12 @@ def _acq_values_multi(
             # weights is the (1, R+1) acquisition row; y_best_w the (R+1,)
             # per-head incumbents (shared variance: var is (S, m)).
             return rung_weighted_ei(mu, var, head.y_best_w, head.weights[0])
+        if spec.mode == "cost":
+            # EI on the objective head discounted by the predicted
+            # standardized log-cost (head 1 mean); eta rides weights[0, 0].
+            return A.expected_improvement(
+                mu[:, 0, :], var, head.y_best
+            ) * jnp.exp(-head.weights[0, 0] * mu[:, 1, :])
         return scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
 
     if head.head_posts:

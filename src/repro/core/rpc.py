@@ -105,7 +105,11 @@ __all__ = [
 #: v4: multi-fidelity verbs — ``report_rung`` (in-service ASHA promote/stop
 #: decisions) and ``promotion`` (rung-table readback) — plus
 #: ``RegisterRequest.multi_fidelity`` (the job's ASHA config wire dict).
-PROTOCOL_VERSION = 4
+#: v5: cost/budget fields — ``RegisterRequest.max_cost`` (the job's budget
+#: cap), ``ObserveRequest.cost`` (per-observation trial cost) and the
+#: ``"charge"`` observe kind (budget spend without a store row, e.g. failed
+#: trials), plus the ``budget-exhausted`` refusal code.
+PROTOCOL_VERSION = 5
 
 #: Engine-snapshot schema version (``SelectionService.snapshot_job`` output).
 #: v2: ``metrics`` (the job's MetricSpec list) + the store's ``own_yx``
@@ -117,7 +121,11 @@ PROTOCOL_VERSION = 4
 #: v4: ``multi_fidelity`` (ASHA config + rung tables + memoized decisions)
 #: and the store's ``own_keys`` row-key list (rows join rung tables by
 #: trial id).
-ENGINE_SNAPSHOT_VERSION = 4
+#: v5: the store's ``own_costs`` per-row trial-cost list and the
+#: suggester's ``budget`` ledger state (``{"max_cost", "spent"}``) — both
+#: keys present only on jobs that track cost, so cost-off snapshots are
+#: byte-identical to v4 content under the v5 tag.
+ENGINE_SNAPSHOT_VERSION = 5
 
 
 # --------------------------------------------------------------------------
@@ -224,6 +232,7 @@ class ErrorCode:
     LEASE_HELD = "lease-held"  # another live lease owns the job
     STALE_STATE = "stale-state"  # client/server store versions disagree
     STALE_DRAWS = "stale-draws"  # resident GPHP pool conflicts with snapshot
+    BUDGET_EXHAUSTED = "budget-exhausted"  # job's max_cost budget is spent
     BAD_REQUEST = "bad-request"  # malformed or unknown message
 
 
@@ -267,6 +276,9 @@ class RegisterRequest:
     ``metric_specs`` (``MetricSet.to_wire``) declares a multi-metric job;
     ``multi_fidelity`` (the ASHA config as a field dict) turns on in-service
     ASHA promotion + per-rung acquisition heads for the job;
+    ``max_cost`` caps the job's cumulative trial cost (the replica creates
+    the budget ledger and refuses further ``suggest_batch`` requests with
+    ``BUDGET_EXHAUSTED`` once it is spent);
     ``capabilities`` advertises optional client features — currently
     ``"snapshot-zstd"`` / ``"snapshot-zlib"`` (the compressed-snapshot
     codecs this client decodes; see the module docstring).
@@ -283,6 +295,7 @@ class RegisterRequest:
     takeover_lease: Optional[str] = None
     metric_specs: Optional[List[Dict[str, Any]]] = None
     multi_fidelity: Optional[Dict[str, Any]] = None
+    max_cost: Optional[float] = None
     capabilities: List[str] = dataclasses.field(default_factory=list)
 
 
@@ -344,7 +357,11 @@ class ObserveRequest:
     ``kind`` selects the transition:
       * ``"push"`` — finished observation: encoded row ``x`` (exact byte
         image) + objective ``y``, or the full signed metric vector ``ys``
-        (wire image of (M,) float64) for multi-metric jobs;
+        (wire image of (M,) float64) for multi-metric jobs; ``cost`` carries
+        the trial's cost (budget-tracking jobs) into the store's cost
+        column — it does *not* charge the ledger (``"charge"`` does);
+      * ``"charge"`` — ledger spend, one per terminal trial (failed trials
+        charge too — the spend happened, there is just no row): ``cost``;
       * ``"pending"`` — candidate submitted: ``key`` + decoded ``config``;
       * ``"clear"`` — candidate reached terminality: ``key``.
     """
@@ -358,6 +375,7 @@ class ObserveRequest:
     key: Any = None
     config: Optional[Dict[str, Any]] = None
     ys: Optional[Dict[str, Any]] = None  # exact (M,) byte image, multi-metric
+    cost: Optional[float] = None  # trial cost (budget-tracking jobs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -635,6 +653,8 @@ def bo_config_to_wire(cfg: BOConfig) -> Dict[str, Any]:
         "n_switch": cfg.n_switch,
         "max_inducing": cfg.max_inducing,
         "per_head_gphp": cfg.per_head_gphp,
+        "cost_aware": cfg.cost_aware,
+        "cost_cooling": cfg.cost_cooling,
     }
 
 
@@ -659,4 +679,6 @@ def bo_config_from_wire(blob: Dict[str, Any]) -> BOConfig:
         n_switch=int(blob.get("n_switch", 2048)),
         max_inducing=int(blob.get("max_inducing", 1024)),
         per_head_gphp=bool(blob.get("per_head_gphp", False)),
+        cost_aware=bool(blob.get("cost_aware", False)),
+        cost_cooling=float(blob.get("cost_cooling", 1.0)),
     )

@@ -297,12 +297,25 @@ class JobHandle:
             re-fold siblings' moved histories.
         multi_fidelity: the job's in-service ASHA state
             (``MultiFidelityState``), or None for jobs without it.
+        budget_ledger: the job's ``BudgetLedger`` (created when the job was
+            registered with ``max_cost`` or a cost-aware engine config), or
+            None. The ledger gates *new* suggestion batches only — in-flight
+            trials run to completion, bounding overspend by one trial per
+            slot (see ``docs/cost_aware.md``).
         stale: set when another registration takes this name; a stale handle
             raises instead of silently serving the new job's engine.
     """
 
     def __init__(
-        self, name, space, suggester, store, service, warm_pool, multi_fidelity=None
+        self,
+        name,
+        space,
+        suggester,
+        store,
+        service,
+        warm_pool,
+        multi_fidelity=None,
+        budget_ledger=None,
     ):
         self.name = name
         self.space = space
@@ -311,6 +324,7 @@ class JobHandle:
         self.service: "SelectionService" = service
         self.warm_pool: Optional[WarmStartPool] = warm_pool
         self.multi_fidelity = multi_fidelity
+        self.budget_ledger = budget_ledger
         self.stale = False  # set when another registration takes this name
 
     def suggest_batch(self, k: int) -> List[Dict[str, Any]]:
@@ -324,7 +338,19 @@ class JobHandle:
                 f"JobHandle {self.name!r} is stale: the name was re-registered"
                 " (give concurrent jobs distinct TuningJobConfig.job_name s)"
             )
+        if self.budget_ledger is not None:
+            # typed refusal: the caller distinguishes "budget spent" from a
+            # malformed request and can drain in-flight trials gracefully.
+            self.budget_ledger.check(self.name)
         return self.service.suggest_batch(self.name, k)
+
+    def observe_charge(self, cost: float) -> float:
+        """Charge a finished trial's cost (backend-clock seconds, or the
+        user's cost unit) against the job's budget ledger. Returns the total
+        spent so far. No-op for jobs without a ledger."""
+        if self.budget_ledger is None:
+            return 0.0
+        return self.budget_ledger.charge(cost)
 
     def observe(self, config, y: float) -> bool:
         """Record a finished observation (direct-drive API; the Tuner pushes
@@ -394,6 +420,7 @@ class SelectionService:
         fold_siblings: bool = True,
         metrics=None,
         multi_fidelity=None,
+        max_cost: Optional[float] = None,
     ) -> JobHandle:
         """Register (or re-register, e.g. after a checkpoint restore) a
         tuning job. Creates the job's observation store (sibling + user
@@ -415,6 +442,13 @@ class SelectionService:
         in-service ASHA promotion + the per-rung f(x, r) acquisition heads
         for this job; rung crossings then arrive via
         ``JobHandle.report_rung``. Single-metric jobs only.
+
+        ``max_cost`` caps the job's cumulative trial cost: a ``BudgetLedger``
+        is created, charged via ``JobHandle.observe_charge``, and once
+        exhausted ``suggest_batch`` raises ``BudgetExhaustedError`` (typed,
+        so the wire layer can refuse with ``budget-exhausted``). A ledger is
+        also created (uncapped) for cost-aware engine configs, which need it
+        for cost-cooling.
         """
         sig = space_signature(space)
         group = self._groups.get(sig)
@@ -481,8 +515,29 @@ class SelectionService:
         if mf_state is not None:
             suggester.multi_fidelity_state = mf_state
 
+        # budget ledger: created for capped jobs, and for cost-aware engines
+        # (whose cost-cooling schedule reads ledger.spent). None keeps the
+        # decision stream bit-identical to a budget-free engine.
+        ledger = None
+        cost_aware = bool(
+            getattr(getattr(suggester, "config", None), "cost_aware", False)
+        )
+        if max_cost is not None or cost_aware:
+            from repro.core.budget import BudgetLedger
+
+            ledger = BudgetLedger(max_cost)
+            if hasattr(suggester, "budget_ledger"):
+                suggester.budget_ledger = ledger
+
         handle = JobHandle(
-            name, space, suggester, store, self, warm_pool, multi_fidelity=mf_state
+            name,
+            space,
+            suggester,
+            store,
+            self,
+            warm_pool,
+            multi_fidelity=mf_state,
+            budget_ledger=ledger,
         )
         group.jobs.append(name)
         self._jobs[name] = handle
@@ -614,6 +669,9 @@ class SelectionService:
         from repro.core.multimetric import MetricSet
 
         mf_snap = snap.get("multi_fidelity")
+        # budget state rides the suggester snapshot; re-create the ledger
+        # with the recorded cap so load_state_dict can restore `spent`.
+        bud_snap = snap["suggester"].get("budget")
         handle = self.register_job(
             snap["job_name"],
             space,
@@ -623,6 +681,7 @@ class SelectionService:
             fold_siblings=False,  # the snapshot's parent rows are authoritative
             metrics=MetricSet.from_wire(snap.get("metrics")),
             multi_fidelity=None if mf_snap is None else mf_snap["config"],
+            max_cost=None if bud_snap is None else bud_snap.get("max_cost"),
         )
         if mf_snap is not None:
             handle.multi_fidelity.load_snapshot(mf_snap)

@@ -48,6 +48,7 @@ identity block rather than refactorizing.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -139,6 +140,12 @@ class BOConfig:
     per_head_gphp: bool = False  # M>1 jobs: give every constraint/latency
     # head its own GPHP chain (and factor) instead of sharing the objective's
     # draws; default off — the shared-factor layout of PR 5
+    cost_aware: bool = False  # EI-per-unit-cost: a log-cost head rides the
+    # shared factor and EI is discounted by exp(-eta * zc(x)); off (the
+    # default) is bit-identical to the cost-blind engine
+    cost_cooling: float = 1.0  # eta scale for the cost discount; with a
+    # capped budget ledger attached the effective eta decays linearly with
+    # spend, so the cheap-first bias fades as the job closes on its budget
 
     def __post_init__(self):
         if self.backend is not None:
@@ -154,6 +161,8 @@ class BOConfig:
             )
         if self.max_inducing < 2:
             raise ValueError("max_inducing must be at least 2")
+        if self.cost_cooling < 0:
+            raise ValueError("cost_cooling must be non-negative")
 
     def fast(self) -> "BOConfig":
         """Cheaper MCMC settings for many-seed benchmark sweeps."""
@@ -399,6 +408,10 @@ class BOSuggester:
         # SelectionService when the job declares multi_fidelity. None (the
         # default) keeps every decision bit-identical to the exact path.
         self.multi_fidelity_state = None
+        # budget ledger (``repro.core.budget``) — attached by the Tuner or
+        # SelectionService when the job declares max_cost or cost_aware.
+        # None (the default) keeps state_dict byte-identical to cost-off.
+        self.budget_ledger = None
         self._wrapper_store: Optional[ObservationStore] = None
         self._wrapper_fps: List[Tuple[float, bytes]] = []
         # the cache block is an object of its own so a SelectionService can
@@ -430,6 +443,18 @@ class BOSuggester:
                 "multi-metric jobs support acq='ei' only (constrained EI / "
                 f"random-scalarization EI), got {self.config.acq.acq!r}"
             )
+        if self.config.cost_aware:
+            if ms is not None and ms.num_metrics > 1:
+                raise ValueError(
+                    "cost_aware jobs are single-metric (the log-cost head "
+                    "rides the objective factor; M > 1 stores already spend "
+                    "the extra head slots on metrics)"
+                )
+            if self.config.acq.acq != "ei":
+                raise ValueError(
+                    "cost_aware jobs support acq='ei' only (EI-per-unit-"
+                    f"cost), got {self.config.acq.acq!r}"
+                )
 
     def bind_store(self, store: ObservationStore) -> None:
         """Attach the engine to a live observation store (the Tuner does this
@@ -583,11 +608,28 @@ class BOSuggester:
             return self._decide_multi(store, k, pend_np, ms)
 
         mf = self.multi_fidelity_state
+        if cfg.cost_aware and mf is not None:
+            raise ValueError(
+                "cost_aware jobs do not support multi_fidelity (the rung "
+                "heads already own the extra head slots)"
+            )
         if mf is not None and mf.num_active_rungs() > 0:
             # multi-fidelity jobs score (x, r) jointly once rung tables hold
             # data; with empty tables (or multi_fidelity off) the exact
             # single-metric path below is untouched.
             return self._decide_rungs(store, k, pend_np, mf)
+
+        if cfg.cost_aware:
+            costs = store.own_costs()
+            n_fin = sum(
+                1 for c in costs
+                if c is not None and math.isfinite(c) and c > 0.0
+            )
+            if n_fin >= 2:
+                # the cost head needs two finite costs before its z-scoring
+                # is meaningful; below that the decision falls through to the
+                # exact cost-blind path (bit-identical — same RNG stream).
+                return self._decide_cost(store, k, pend_np, costs)
 
         x_all, y_std, _, _ = store.standardized()
         post = self._posterior_for(store, x_all, y_std)
@@ -882,6 +924,164 @@ class BOSuggester:
         y_best_w = np.concatenate(([y_best], rung_t.min(axis=1)))
         spec = MultiAcqSpec(
             mode="rungs", num_objectives=m_all, num_constraints=0
+        )
+
+        def make_head(alphas_now):
+            return MultiMetricHead(
+                alphas=alphas_now,
+                t_std=jnp.zeros((0,)),
+                y_best=jnp.asarray(y_best),
+                has_feasible=jnp.asarray(True),
+                weights=jnp.asarray(weights),
+                y_best_w=jnp.asarray(y_best_w),
+                head_posts=(),
+            )
+
+        def refold_head(work_now, yh_now):
+            """Rebuild the head block after a fantasy fold."""
+            return make_head(
+                solve_head_alphas(
+                    work_now, jnp.asarray(self._pad_heads(yh_now, work_now))
+                )
+            )
+
+        # --- pending (§4.4) + scratch posterior for fantasies ---------------
+        d = space.encoded_dim
+        pend_buf = np.zeros((cfg.max_pending, d))
+        pend_mask = np.zeros(cfg.max_pending, dtype=bool)
+        n_excl = 0
+        work = post
+        head = make_head(alphas)
+        yh_work = [list(y_heads[j, :n_live]) for j in range(m_all)]
+        if cfg.pending_strategy in ("liar", "kb") and len(pend_np) > 0:
+            for xp in pend_np:
+                work, yh_work, _ = self._fantasy_append_multi(
+                    work, yh_work, xp, []
+                )
+            head = refold_head(work, yh_work)
+        elif len(pend_np) > 0:
+            n_excl = min(len(pend_np), cfg.max_pending)
+            pend_buf[:n_excl] = pend_np[:n_excl]
+            pend_mask[:n_excl] = True
+
+        picks: List[np.ndarray] = []
+        out: List[Dict[str, Any]] = []
+        for slot in range(k):
+            cands, _ = optimize_acquisition_multi(
+                work,
+                head,
+                self._anchors,
+                jnp.asarray(pend_buf),
+                jnp.asarray(pend_mask),
+                self._next_key(),
+                cfg.acq,
+                spec,
+            )
+            seen = self._seen_matrix(x_all, pend_np, picks)
+            config = vec = None
+            for cand in np.asarray(cands):
+                snapped = space.round_trip(cand)
+                if len(seen) == 0 or np.min(
+                    np.max(np.abs(seen - snapped[None, :]), axis=1)
+                ) > cfg.dedupe_tol:
+                    config, vec = space.decode(snapped), snapped
+                    break
+            if config is None:
+                config, vec = self._quasi_random(seen)
+            out.append(config)
+            picks.append(vec)
+            if slot + 1 < k:
+                if cfg.pending_strategy in ("liar", "kb"):
+                    work, yh_work, _ = self._fantasy_append_multi(
+                        work, yh_work, vec, []
+                    )
+                    head = refold_head(work, yh_work)
+                elif n_excl < cfg.max_pending:
+                    pend_buf[n_excl] = vec
+                    pend_mask[n_excl] = True
+                    n_excl += 1
+        self.cache.touched()  # LRU bump + arena budget enforcement
+        return out
+
+    # ------------------------------------------------- cost-aware decisions
+    def _decide_cost(
+        self,
+        store: ObservationStore,
+        k: int,
+        pend_np: np.ndarray,
+        costs: List[Optional[float]],
+    ) -> List[Dict[str, Any]]:
+        """One batched decision under EI-per-unit-cost (``BOConfig.
+        cost_aware``): a GP head over *standardized log-cost* rides the
+        shared Cholesky factor (one extra alpha solve per decision, the
+        multi-metric/rung layout), and anchors score
+
+            EIpu(x) = EI(x) · exp(−η · ẑc(x))
+
+        where ẑc is the posterior mean of the log-cost head and η =
+        ``cost_cooling`` · max(0, 1 − spent/max_cost) when a capped budget
+        ledger is attached (constant ``cost_cooling`` otherwise) — the
+        cheap-first bias cools as the budget spends, so late decisions
+        converge to plain EI near the incumbent. Because ẑc is standardized,
+        uniform observed costs give ẑc ≡ 0 and EIpu == EI exactly.
+
+        Own rows without a recorded cost — and warm-start parent rows, which
+        never carry one — impute target 0 (the head mean): they exert no
+        discount pressure in either direction. Head targets are a pure
+        function of store rows, so every replay-rehydration invariant
+        (arena eviction, snapshot restore, oplog failover) holds for the
+        cost head for free."""
+        from repro.core.gp.multi import solve_head_alphas
+
+        cfg = self.config
+        space = self.space
+        if cfg.acq.acq != "ei":
+            raise ValueError(
+                f"cost_aware jobs support acq='ei' only, got {cfg.acq.acq!r}"
+            )
+        n = store.num_observations
+        m_all = 2  # objective head + log-cost head
+
+        x_all, y_std, _, _ = store.standardized()
+        post = self._posterior_for(store, x_all, y_std)
+        rows = self.cache.live_rows(n)  # factor rows, in store order
+        n_live = len(rows)
+        size = post.x_train.shape[0]
+        y_live = np.zeros(size)
+        y_live[:n_live] = y_std[rows]
+        post = refresh_alpha(post, jnp.asarray(y_live))
+        self.cache.post = post
+
+        # standardized log-cost targets over the full store prefix
+        zc = np.zeros(n)
+        npar = n - len(costs)
+        fin = np.asarray(
+            [c is not None and math.isfinite(c) and c > 0.0 for c in costs],
+            dtype=bool,
+        )
+        logs = np.asarray(
+            [math.log(c) if ok else 0.0 for c, ok in zip(costs, fin)]
+        )
+        mean = float(logs[fin].mean())
+        std = float(logs[fin].std())
+        scale = std if std > 1e-12 else 1.0
+        zc[npar:][fin] = (logs[fin] - mean) / scale
+
+        y_heads = np.zeros((m_all, size))
+        y_heads[0, :n_live] = y_std[rows]
+        y_heads[1, :n_live] = zc[rows]
+        alphas = solve_head_alphas(post, jnp.asarray(y_heads))
+        self.cache.head_alphas = alphas  # arena accounting (factor_nbytes)
+
+        ledger = self.budget_ledger
+        eta = cfg.cost_cooling
+        if ledger is not None and ledger.max_cost is not None:
+            eta *= max(0.0, 1.0 - ledger.spent / ledger.max_cost)
+        weights = np.asarray([[eta]])  # (1, 1): eta travels the weights slot
+        y_best = float(y_std[:n].min())
+        y_best_w = np.zeros((1,))  # unused in cost mode (EI on head 0 only)
+        spec = MultiAcqSpec(
+            mode="cost", num_objectives=m_all, num_constraints=0
         )
 
         def make_head(alphas_now):
@@ -1456,6 +1656,11 @@ class BOSuggester:
         # checkpoints byte-identical.
         if self.multi_fidelity_state is not None:
             state["multi_fidelity"] = self.multi_fidelity_state.snapshot()
+        # budget ledger spend rides the same channel (checkpoints, engine
+        # snapshots, EngineState RPC); key absent when budgets are off keeps
+        # cost-off state byte-identical to the pre-budget schema.
+        if self.budget_ledger is not None:
+            state["budget"] = self.budget_ledger.snapshot()
         return state
 
     def load_state_dict(self, state: Mapping[str, Any]) -> None:
@@ -1492,6 +1697,9 @@ class BOSuggester:
         mf = state.get("multi_fidelity")
         if mf is not None and self.multi_fidelity_state is not None:
             self.multi_fidelity_state.load_snapshot(mf)
+        bud = state.get("budget")
+        if bud is not None and self.budget_ledger is not None:
+            self.budget_ledger.load_snapshot(bud)
         self._wrapper_store = None
         self._wrapper_fps = []
 

@@ -108,6 +108,15 @@ class TuningJobConfig:
     # ``stopping_rule``. None (default) disables — bit-identical to the
     # fixed-fidelity engine.
     multi_fidelity: Optional[Any] = None  # ASHAConfig
+    # budget enforcement (``repro.core.budget``): max_cost caps the summed
+    # per-trial cost (backend seconds between start and terminal events —
+    # virtual under SimBackend); max_wallclock caps the backend clock itself.
+    # Both gate *new* launches only: in-flight trials and retry re-runs finish
+    # (bounded overspend — at most one in-flight trial per slot). None
+    # (default) disables; cost-off jobs are bit-identical to the pre-budget
+    # engine.
+    max_cost: Optional[float] = None
+    max_wallclock: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -271,7 +280,16 @@ class Tuner:
         self._timeline: List[Tuple[float, float]] = []
         self._num_failed_attempts = 0
         self.max_parallel = job_config.max_parallel
+        # budget ledger (repro.core.budget): created by _new_store when the
+        # job declares max_cost or a cost-aware suggester; charged from
+        # backend event times at trial terminality. None keeps every code
+        # path bit-identical to the pre-budget engine.
+        self.budget_ledger = None
         self.store = self._new_store()
+        # track per-trial costs (pushed into the store, feeding the cost
+        # head) only when something consumes them — cost-off jobs keep
+        # byte-identical store/checkpoint state.
+        self._track_cost = self.budget_ledger is not None
 
     # ------------------------------------------------------- stopping rules
     @staticmethod
@@ -331,17 +349,35 @@ class Tuner:
                 fold_siblings=not self._warm_start_restored,
                 metrics=self.metric_set,
                 multi_fidelity=self.multi_fidelity,
+                max_cost=self.config.max_cost,
             )
             self._service_handle = handle
             self.suggester = handle.suggester
             if handle.warm_pool is not None:
                 self.warm_start = handle.warm_pool
+            # the service owns the ledger (in-process: the live object;
+            # remote: the client's lock-step mirror) — the tuner gates
+            # launches against it and charges through the handle.
+            self.budget_ledger = getattr(handle, "budget_ledger", None)
             return handle.store
         store = ObservationStore(
             self.space, warm_start=self.warm_start, metrics=self.metric_set
         )
         if hasattr(self.suggester, "bind_store"):
             self.suggester.bind_store(store)
+        cost_aware = bool(
+            getattr(getattr(self.suggester, "config", None), "cost_aware", False)
+        )
+        if self.config.max_cost is not None or cost_aware:
+            from repro.core.budget import BudgetLedger
+
+            self.budget_ledger = BudgetLedger(self.config.max_cost)
+            if hasattr(self.suggester, "budget_ledger"):
+                # rides BOSuggester.state_dict()["budget"]: checkpoints and
+                # engine snapshots carry the spend with no new channel
+                self.suggester.budget_ledger = self.budget_ledger
+        else:
+            self.budget_ledger = None
         return store
 
     def _observe_terminal(self, trial: Trial) -> None:
@@ -353,6 +389,20 @@ class Tuner:
         (early-stopped, or a misbehaving objective) cannot seed the GP —
         constraint heads have no value to impute."""
         self.store.clear_pending(trial.trial_id)
+        # per-trial cost: backend event time between start and terminality —
+        # never a wall clock (the budget-clock invariant; replayed runs must
+        # observe identical spend). Charged for every terminal trial (failed
+        # ones spent the budget too), pushed into the store only for rows
+        # that seed the GP.
+        cost = None
+        if (
+            self._track_cost
+            and trial.start_time is not None
+            and trial.end_time is not None
+        ):
+            cost = max(0.0, trial.end_time - trial.start_time)
+        if cost is not None and cost > 0.0:
+            self._charge_cost(cost)
         if trial.state not in (TrialState.COMPLETED, TrialState.STOPPED):
             return
         if self.metric_set is not None and self.metric_set.num_metrics > 1:
@@ -366,7 +416,20 @@ class Tuner:
                 pass  # missing metric name: row cannot seed the GP
             return
         if self._objective_usable(trial) and math.isfinite(trial.objective):
-            self.store.push(trial.config, trial.objective, key=trial.trial_id)
+            self.store.push(
+                trial.config, trial.objective, key=trial.trial_id, cost=cost
+            )
+
+    def _charge_cost(self, cost: float) -> None:
+        """Record one terminal trial's spend on the job's ledger. In remote
+        service mode the charge crosses the wire (the replica's ledger rides
+        its snapshots) and the handle keeps its mirror in lock-step."""
+        if self._service_handle is not None and hasattr(
+            self._service_handle, "observe_charge"
+        ):
+            self._service_handle.observe_charge(cost)
+        elif self.budget_ledger is not None:
+            self.budget_ledger.charge(cost)
 
     def _objective_usable(self, trial: Trial) -> bool:
         """Is ``trial.objective`` trustworthy for ranking/seeding? For a
@@ -435,6 +498,10 @@ class Tuner:
     def _refill_slots(self) -> None:
         """Compute all free slots up front and fill them with one batched
         suggester pass (one GP pipeline for K freed slots instead of K)."""
+        if self._budget_stop():
+            # budgets gate *new* launches only — in-flight trials and queued
+            # retries run to completion (bounded overspend).
+            return
         free = min(
             self.max_parallel - self.backend.active_count(),
             self.config.max_trials - self._submitted,
@@ -600,9 +667,21 @@ class Tuner:
         )
         self._timeline.append((t, best))
 
+    def _budget_stop(self) -> bool:
+        """Has the job run out of budget? max_cost via the ledger; the
+        wall-clock cap reads the *backend* clock (virtual under SimBackend) —
+        budget code never reads a real clock."""
+        if self.budget_ledger is not None and self.budget_ledger.exhausted:
+            return True
+        return (
+            self.config.max_wallclock is not None
+            and self.backend.now() >= self.config.max_wallclock
+        )
+
     def _all_done(self) -> bool:
-        if self._submitted < self.config.max_trials:
-            return False
+        if not self._budget_stop():
+            if self._submitted < self.config.max_trials:
+                return False
         if self._retry_queue:
             return False
         return all(t.is_terminal for t in self.trials.values())
@@ -698,6 +777,12 @@ class Tuner:
             if self.warm_start is not None
             else None,
         }
+        # budget ledger (key absent when budgets are off — cost-off
+        # checkpoints stay byte-identical). For a BOSuggester the same values
+        # also ride suggester_state["budget"]; this copy covers suggesters
+        # without ledger state (random/Sobol under max_cost).
+        if self.budget_ledger is not None:
+            state["budget"] = self.budget_ledger.snapshot()
         # atomic write: never leave a torn checkpoint behind (paper §3:
         # resiliency as a guiding principle)
         d = os.path.dirname(os.path.abspath(path))
@@ -780,3 +865,5 @@ class Tuner:
             self.suggester.load_state_dict(state["suggester_state"])
         if state.get("stopping_rule_state") and self.stopping_rule is not None:
             self.stopping_rule.load_state_dict(state["stopping_rule_state"])
+        if state.get("budget") and self.budget_ledger is not None:
+            self.budget_ledger.load_snapshot(state["budget"])

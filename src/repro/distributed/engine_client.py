@@ -127,12 +127,12 @@ class MirroredStore(ObservationStore):
         super().__init__(space, warm_start=warm_start, metrics=metrics)
         self._handle = handle
 
-    def push_encoded(self, x: np.ndarray, y: float, key=None) -> bool:
-        accepted = super().push_encoded(x, y, key=key)
+    def push_encoded(self, x: np.ndarray, y: float, key=None, cost=None) -> bool:
+        accepted = super().push_encoded(x, y, key=key, cost=cost)
         if accepted and self._handle is not None:
             self._handle._observe_push(np.asarray(x), float(y),
                                        expect_version=self.num_observations,
-                                       key=key)
+                                       key=key, cost=cost)
         return accepted
 
     def push_vector_encoded(self, x: np.ndarray, yvec: np.ndarray, key=None) -> bool:
@@ -203,6 +203,7 @@ class RemoteJobHandle:
         fold_siblings: bool,
         metrics=None,
         multi_fidelity=None,
+        max_cost=None,
     ):
         self.name = name
         self.space = space
@@ -210,6 +211,16 @@ class RemoteJobHandle:
         self.metrics = metrics  # Optional[MetricSet] (multi-metric jobs)
         # ASHA config wire dict (or None) — the replica owns the live state.
         self.multi_fidelity = multi_fidelity
+        self.max_cost = max_cost
+        # client-side mirror of the replica's budget ledger (same reason the
+        # store is mirrored: the Tuner reads spend synchronously, and the
+        # failover replay re-charges the replica from the oplog).
+        self.budget_ledger = None
+        cost_aware = bool(getattr(bo_config, "cost_aware", False))
+        if max_cost is not None or cost_aware:
+            from repro.core.budget import BudgetLedger
+
+            self.budget_ledger = BudgetLedger(max_cost)
         self.stale = False
         self.warm_pool: Optional[WarmStartPool] = None
         self.store: Optional[MirroredStore] = None
@@ -242,16 +253,44 @@ class RemoteJobHandle:
                 f"RemoteJobHandle {self.name!r} is stale: the name was "
                 "re-registered (give concurrent jobs distinct job names)"
             )
+        if self.budget_ledger is not None:
+            # mirror-side refusal, same type the in-process handle raises;
+            # the replica enforces it independently (``budget-exhausted``).
+            self.budget_ledger.check(self.name)
         sv, npend = self.store.num_observations, self.store.num_pending
-        reply = self._rpc(
-            lambda lease: SuggestBatchRequest(
-                job_name=self.name, lease=lease, k=k,
-                store_version=sv, num_pending=npend,
+        try:
+            reply = self._rpc(
+                lambda lease: SuggestBatchRequest(
+                    job_name=self.name, lease=lease, k=k,
+                    store_version=sv, num_pending=npend,
+                )
             )
-        )
+        except ProtocolError as e:
+            if e.code == ErrorCode.BUDGET_EXHAUSTED:
+                from repro.core.budget import BudgetExhaustedError
+
+                raise BudgetExhaustedError(e.message) from e
+            raise
         configs = [dict(c) for c in reply.configs]
         self._log(("suggest", k, sv, npend, configs))
         return configs
+
+    def observe_charge(self, cost: float) -> float:
+        """Charge a terminal trial's cost against the budget: the mirror
+        ledger synchronously, the replica's via a ``"charge"`` observe (the
+        only wire path that spends budget). Logged, so failover replays the
+        spend onto a snapshot-restored replica."""
+        if self.budget_ledger is None:
+            return 0.0
+        spent = self.budget_ledger.charge(cost)
+        self._rpc(
+            lambda lease: ObserveRequest(
+                job_name=self.name, lease=lease, kind="charge",
+                cost=float(cost),
+            )
+        )
+        self._log(("charge", float(cost)))
+        return spent
 
     def observe(self, config: Mapping[str, Any], y: float) -> bool:
         """Record a finished observation (direct-drive API; the Tuner pushes
@@ -381,14 +420,14 @@ class RemoteJobHandle:
 
     # -------------------------------------------------------- store mirrors
     def _observe_push(self, x: np.ndarray, y: float, expect_version: int,
-                      key=None) -> None:
+                      key=None, cost=None) -> None:
         from repro.core.gp.serialize import array_to_wire
 
         wire = array_to_wire(x)
         reply = self._rpc(
             lambda lease: ObserveRequest(
                 job_name=self.name, lease=lease, kind="push", x=wire, y=y,
-                key=key,
+                key=key, cost=cost,
             )
         )
         if not reply.accepted or reply.store_version != expect_version:
@@ -396,7 +435,7 @@ class RemoteJobHandle:
                 f"replica store at {reply.store_version} obs after push, "
                 f"client mirror at {expect_version}"
             )
-        self._log(("push", wire, y, key))
+        self._log(("push", wire, y, key, cost))
 
     def _observe_push_vector(
         self, x: np.ndarray, yvec: np.ndarray, expect_version: int, key=None
@@ -517,6 +556,7 @@ class RemoteJobHandle:
             if self.metrics is None
             else self.metrics.to_wire(),
             multi_fidelity=self.multi_fidelity,
+            max_cost=self.max_cost,
             capabilities=caps,
         )
 
@@ -679,10 +719,17 @@ class RemoteJobHandle:
                         "diverged from the original suggestions"
                     )
             elif kind == "push":
-                _, wire, y, key = op
+                _, wire, y, key, cost = op
                 reply = self._conn.call(
                     ObserveRequest(job_name=self.name, lease=self._lease,
-                                   kind="push", x=wire, y=y, key=key)
+                                   kind="push", x=wire, y=y, key=key,
+                                   cost=cost)
+                )
+                self._check_replay(reply)
+            elif kind == "charge":
+                reply = self._conn.call(
+                    ObserveRequest(job_name=self.name, lease=self._lease,
+                                   kind="charge", cost=op[1])
                 )
                 self._check_replay(reply)
             elif kind == "pushv":
@@ -807,6 +854,7 @@ class RemoteService:
         fold_siblings: bool = True,
         metrics=None,
         multi_fidelity=None,
+        max_cost=None,
     ) -> RemoteJobHandle:
         """Register a tuning job onto the fleet; same signature and handle
         surface as ``SelectionService.register_job``. Re-registering a name
@@ -836,6 +884,7 @@ class RemoteService:
             fold_siblings,
             metrics=metrics,
             multi_fidelity=mf_wire,
+            max_cost=max_cost,
         )
         prior = self._handles.get(name)
         if prior is not None and not prior.stale:

@@ -347,6 +347,7 @@ class EngineServer:
                 fold_siblings=msg.fold_siblings,
                 metrics=MetricSet.from_wire(msg.metric_specs),
                 multi_fidelity=msg.multi_fidelity,
+                max_cost=msg.max_cost,
             )
         token = uuid.uuid4().hex  # invariant: entropy -- lease tokens are opaque capabilities echoed back by the holder; they never enter decision state, snapshots, or the oplog
         with self._lock:
@@ -383,7 +384,14 @@ class EngineServer:
                 f"({store.num_observations} obs, {store.num_pending} pending) "
                 "— refusing to suggest from diverged state",
             )
-        configs = handle.suggest_batch(msg.k)
+        from repro.core.budget import BudgetExhaustedError
+
+        try:
+            configs = handle.suggest_batch(msg.k)
+        except BudgetExhaustedError as e:
+            # typed refusal (the generic handler would blur it into
+            # bad-request); the client maps it back to BudgetExhaustedError.
+            raise ProtocolError(ErrorCode.BUDGET_EXHAUSTED, str(e))
         pool = self.service.group_pool(msg.job_name)
         return SuggestBatchReply(configs=configs, pool_version=pool.version)
 
@@ -399,8 +407,16 @@ class EngineServer:
                 )
             else:
                 accepted = store.push_encoded(
-                    array_from_wire(msg.x), float(msg.y), key=msg.key
+                    array_from_wire(msg.x), float(msg.y), key=msg.key,
+                    cost=msg.cost,
                 )
+        elif msg.kind == "charge":
+            # ledger spend: the *only* path that charges the budget (push's
+            # ``cost`` lands in the store column, it never charges — the
+            # client sends one charge per terminal trial, rows or not).
+            if handle.budget_ledger is not None and msg.cost is not None:
+                handle.budget_ledger.charge(float(msg.cost))
+            accepted = True
         elif msg.kind == "pending":
             store.mark_pending(msg.key, msg.config)
             accepted = True

@@ -227,6 +227,13 @@ def _acq_multi_kernel(
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=s1.dtype,
         )  # (1, tile_a)
+    elif mode == "cost":
+        # EI-per-unit-cost: EI on the objective head discounted by the
+        # predicted standardized log-cost (head 1 mean); eta rides the
+        # (1, 1) weights slot. Same fused gram/solve — the cost head is one
+        # extra matvec, like any other head.
+        e0 = _ei_closed_form(mu[0:1, :], sigma, ybest_ref[0, 0])
+        out_ref[...] = e0 * jnp.exp(-weights_ref[0, 0] * mu[1:2, :])
     else:  # "pareto" — random-scalarization EI averaged over the W draws
         weights = weights_ref[...]  # (W, K)
         num_obj = weights.shape[1]

@@ -154,7 +154,9 @@ def acq_score_multi(
     better. ``mode``: "constrained" (EI₀ · Π Φ feasibility) | "pareto"
     (random-scalarization EI averaged over the head's weight draws) |
     "rungs" (resource-weighted per-head EI over the multi-fidelity rung
-    heads — scores f(x, r) jointly across the rung grid).
+    heads — scores f(x, r) jointly across the rung grid) | "cost"
+    (EI-per-unit-cost: EI on head 0 discounted by exp(−η · mean of the
+    standardized log-cost head 1), η in ``weights[0, 0]``).
 
     ``backend="xla"`` is the production composition
     (``gp.multi.predict_heads`` + ``multimetric.acquisition`` /
@@ -162,7 +164,7 @@ def acq_score_multi(
     warp + cross-gram + cached-factor solve once per (GPHP-sample ×
     anchor-tile), the extra heads amortized as matvecs against the shared
     gram."""
-    if mode not in ("constrained", "pareto", "rungs"):
+    if mode not in ("constrained", "pareto", "rungs", "cost"):
         raise ValueError(f"unsupported mode {mode!r}")
     if backend == "xla":
         from repro.core.gp.multi import MultiOutputPosterior, predict_heads
@@ -181,6 +183,10 @@ def acq_score_multi(
             )
         if mode == "rungs":
             return rung_weighted_ei(mu, var, head.y_best_w, head.weights[0])
+        if mode == "cost":
+            return A.expected_improvement(
+                mu[:, 0, :], var, head.y_best
+            ) * jnp.exp(-head.weights[0, 0] * mu[:, 1, :])
         return scalarized_ei(mu, var, head.weights, head.y_best_w, head.t_std)
     if backend != "pallas":
         raise ValueError(f"unknown acq_score backend {backend!r}")
@@ -229,11 +235,11 @@ def acq_score_multi(
         tcon = jnp.zeros((1, 1), dt)
     y_b = jnp.asarray(head.y_best, dt).reshape(1, 1)
     feas = jnp.asarray(head.has_feasible, dt).reshape(1, 1)
-    if mode in ("pareto", "rungs"):
+    if mode in ("pareto", "rungs", "cost"):
         # pareto: weights (W, K) draws with ybw (W, 1) scalarized incumbents;
         # rungs: weights (1, M) rung-weight row with ybw (M, 1) per-head
-        # incumbents — the kernel keys its BlockSpecs off each array's own
-        # row count.
+        # incumbents; cost: weights (1, 1) eta with ybw a (1, 1) dummy —
+        # the kernel keys its BlockSpecs off each array's own row count.
         weights = head.weights.astype(dt)
         ybw = head.y_best_w.astype(dt).reshape(-1, 1)
     else:

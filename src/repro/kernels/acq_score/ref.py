@@ -75,7 +75,7 @@ def acq_score_multi_ref(
     deliberately NOT implemented via ``gp.multi.predict_heads`` + the
     production acquisition composition, so the parity suite triangulates
     three code paths."""
-    if mode not in ("constrained", "pareto", "rungs"):
+    if mode not in ("constrained", "pareto", "rungs", "cost"):
         raise ValueError(f"unsupported mode {mode!r}")
     mask = post.mask.astype(x_star.dtype)
     t_std = jnp.zeros((0,)) if t_std is None else jnp.asarray(t_std)
@@ -110,6 +110,11 @@ def acq_score_multi_ref(
             # resource-weight contraction over heads.
             ei_h = ei(mu, sigma[None, :], jnp.asarray(y_best_w)[:, None])
             return jnp.asarray(weights)[0] @ ei_h  # (m,)
+        if mode == "cost":
+            # EI-per-unit-cost: objective-head EI discounted by the predicted
+            # standardized log-cost (head 1 mean); eta in weights[0, 0].
+            e0 = ei(mu[0], sigma, y_best)
+            return e0 * jnp.exp(-jnp.asarray(weights)[0, 0] * mu[1])
         w = jnp.asarray(weights)  # (W, K)
         mu_s = w @ mu[: w.shape[1]]  # (W, m)
         sigma_s = sigma[None, :] * jnp.sqrt(

@@ -25,6 +25,7 @@ from tools.analysis.framework import (
     run_analysis,
 )
 from tools.analysis.rules import ALL_RULES
+from tools.analysis.rules.budget_clock import BudgetClockRule
 from tools.analysis.rules.kernel_parity import KernelParityRule
 from tools.analysis.rules.lock_discipline import LockDisciplineRule
 from tools.analysis.rules.replay_safety import ReplaySafetyRule
@@ -227,6 +228,53 @@ class TestKernelParity:
     def test_good_tree_is_clean(self):
         report = self._run("good")
         assert report.findings == []
+
+
+# -------------------------------------------------------------- budget-clock
+
+
+class TestBudgetClock:
+    def _run(self, name, **cfg_kwargs):
+        cfg_kwargs.setdefault("budget_paths", ("budget_clock_*.py",))
+        project = _project(FIXTURES, [FIXTURES / name], **cfg_kwargs)
+        return run_analysis(project, [BudgetClockRule()])
+
+    def test_bad_fixture_flags_every_host_clock(self):
+        report = self._run("budget_clock_bad.py")
+        assert [f.check for f in report.findings] == ["own-clock"] * 6
+        # the full clock family fires: wall, monotonic, datetime, and CPU
+        hit = {f.message.split("`")[1] for f in report.findings}
+        assert hit == {
+            "time.monotonic()", "time.time()", "datetime.datetime.now()",
+            "time.perf_counter()",
+        }
+        assert all("backend" in f.message for f in report.findings)
+
+    def test_good_twin_is_clean(self):
+        report = self._run("budget_clock_good.py")
+        assert report.findings == []
+
+    def test_only_budget_paths_are_in_scope(self):
+        # the same clock reads are legal outside budget_paths — the lease
+        # manager's time.monotonic must never trip this rule
+        report = self._run(
+            "budget_clock_bad.py", budget_paths=("nothing/matches/*",)
+        )
+        assert report.findings == []
+
+    def test_shipped_budget_paths_match_real_modules(self):
+        # the default globs must actually cover the shipped ledger/simulator
+        import fnmatch
+
+        defaults = DEFAULT_CONFIG.budget_paths
+        for mod in ("src/repro/core/budget.py", "src/repro/core/blackbox.py"):
+            assert (REPO / mod).is_file()
+            assert any(fnmatch.fnmatch(mod, g) for g in defaults)
+        # ...and must exclude the lease machinery, which runs on monotonic
+        assert not any(
+            fnmatch.fnmatch("src/repro/distributed/engine_server.py", g)
+            for g in defaults
+        )
 
 
 # ----------------------------------------------------------------- framework

@@ -1,0 +1,132 @@
+"""Optimizer-quality gates on the tabulated blackbox harness.
+
+These are the "is the optimizer any good" assertions the paper's §6
+benchmarks make at scale, shrunk onto ``repro.core.blackbox`` tables so
+they run in the CI fast tier (< 1 min total): every trial replays a
+pre-recorded surface through the ``TabulatedBackend`` discrete-event
+clock, so the assertions are deterministic per seed — no live training,
+no wall clock, no network.
+
+Two gates:
+
+* **BO beats random** on the benign quadratic bowl — the fig-3 claim at
+  quality-gate size. If a suggester regression makes BO no better than
+  uniform sampling, this fails before any paper-scale benchmark runs.
+* **Cost-aware beats cost-blind on spend** on the deceptive two-basin
+  surface (global optimum cheap, runner-up ~10× more expensive):
+  EI-per-unit-cost must match cost-blind EI's answer while spending
+  materially less simulated cost — the PR-9 acceptance claim, gated.
+
+Thresholds are calibrated with margin against the pinned seeds below;
+the surfaces and seeds are fixed, so drift here means the optimizer
+changed, not the harness.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import BOConfig, BOSuggester
+from repro.core.blackbox import (
+    TabulatedBackend,
+    deceptive_cheap_table,
+    quadratic_table,
+)
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+from repro.core.tuner import Tuner, TuningJobConfig
+
+TINY_SLICE = SliceSamplerConfig(num_samples=12, burn_in=6, thin=2)
+
+
+class _RandomSuggester:
+    def __init__(self, space, seed):
+        self.space = space
+        self._rng = np.random.default_rng(seed)
+
+    def suggest_batch(self, k):
+        return self.space.sample(self._rng, k)
+
+
+def _gate_config(cost_aware=False):
+    return BOConfig(
+        num_init=6,
+        slice_config=TINY_SLICE,
+        refit_every=3,
+        incremental=True,
+        cost_aware=cost_aware,
+        cost_cooling=2.0,
+    )
+
+
+def _run(table, suggester, seed, max_trials=20):
+    """One replayed tuning run → (best objective, simulated cost spent)."""
+    backend = TabulatedBackend(table, startup_cost=0.05)
+    result = Tuner(
+        table.space,
+        table.objective,
+        suggester,
+        backend,
+        TuningJobConfig(
+            max_trials=max_trials,
+            max_parallel=2,
+            seed=seed,
+            job_name=f"gate-{seed}",
+        ),
+    ).run()
+    assert backend.evaluations == max_trials
+    return float(result.best_trial.objective), float(backend.now())
+
+
+def test_bo_beats_random_on_quadratic():
+    """fig-3 at gate size: mean best-found over pinned seeds, BO < random."""
+    table = quadratic_table()
+    seeds = (0, 1, 2)
+    bo = [_run(table, BOSuggester(table.space, _gate_config(), seed=s), s)[0]
+          for s in seeds]
+    rand = [_run(table, _RandomSuggester(table.space, s), s)[0]
+            for s in seeds]
+    bo_mean, rand_mean = float(np.mean(bo)), float(np.mean(rand))
+    # calibrated: BO lands ~1e-3 from the optimum on every pinned seed,
+    # random best-of-20 on the 576-point grid hovers ~2e-2.
+    assert bo_mean < rand_mean, (bo, rand)
+    assert bo_mean < 0.05, f"BO should nearly solve the bowl, got {bo}"
+
+
+def test_cost_aware_matches_ei_at_lower_spend():
+    """PR-9 acceptance, gated: on the deceptive surface eipu's answer is
+    within 5% (of the value span) of cost-blind EI's, for less total
+    simulated cost."""
+    table = deceptive_cheap_table()
+    span = abs(table.best_value())
+    seeds = (0, 1)
+    ei, eipu = [], []
+    for s in seeds:
+        ei.append(_run(
+            table, BOSuggester(table.space, _gate_config(), seed=s), s))
+        eipu.append(_run(
+            table,
+            BOSuggester(table.space, _gate_config(cost_aware=True), seed=s),
+            s))
+    ei_best = float(np.mean([b for b, _ in ei]))
+    pu_best = float(np.mean([b for b, _ in eipu]))
+    ei_cost = float(np.mean([c for _, c in ei]))
+    pu_cost = float(np.mean([c for _, c in eipu]))
+    assert pu_best <= ei_best + 0.05 * span, (ei, eipu)
+    assert pu_cost < ei_cost, (
+        f"cost-aware spent {pu_cost:.1f} >= cost-blind {ei_cost:.1f}"
+    )
+    # both arms must actually find a basin — a gate that passes with both
+    # arms lost in the flats would be vacuous.
+    assert ei_best < -0.5 and pu_best < -0.5, (ei, eipu)
+
+
+def test_deceptive_table_cost_contrast():
+    """The acceptance surface's premise: the global basin is cheap, the
+    runner-up ~10× more expensive — guard the fixture itself."""
+    table = deceptive_cheap_table()
+    cheap = table.lookup({"x": 0.2, "y": 0.2})
+    exp = table.lookup({"x": 0.8, "y": 0.8})
+    assert table.curves[cheap, -1] < table.curves[exp, -1] < -0.8
+    assert table.total_cost(exp) > 8.0 * table.total_cost(cheap)
+    assert table.best_value() == pytest.approx(
+        float(table.curves[cheap, -1]), abs=0.05
+    )

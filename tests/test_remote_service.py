@@ -341,6 +341,83 @@ class TestSocketEquivalence:
         ]
 
 
+class TestBudgetFailover:
+    """PR 9: the budget ledger survives replica death. The client mirror
+    re-charges the restored replica during oplog replay, so after a
+    mid-spend SIGKILL-style failover the run completes with the same trial
+    table and every ledger — mirror, surviving replica, in-process
+    reference — agreeing on the spend."""
+
+    _CA_CFG = BOConfig(
+        num_init=3,
+        slice_config=SliceSamplerConfig(num_samples=4, burn_in=2, thin=1),
+        refit_every=3,
+        incremental=True,
+        cost_aware=True,
+        cost_cooling=1.5,
+    )
+
+    @classmethod
+    def _make(cls, service, callbacks=()):
+        def objective(cfg):
+            # config-dependent cost: the ledger totals differ run-shape by
+            # run-shape, so agreement below is not vacuous
+            return (_obj(cfg) + 0.5 * np.exp(-0.4 * np.arange(1, 6)),
+                    0.5 + cfg["x"])
+
+        return Tuner(
+            _space(), objective, None, SimBackend(startup_cost=2.0),
+            TuningJobConfig(max_trials=8, max_parallel=2, job_name="job",
+                            seed=3, max_cost=500.0),
+            service=service, callbacks=callbacks,
+        )
+
+    @pytest.mark.slow
+    def test_replica_kill_mid_spend_ledger_and_table_agree(self):
+        ref_tuner = self._make(
+            SelectionService(ServiceConfig(default_bo_config=self._CA_CFG)))
+        ref = ref_tuner.run()
+        assert ref_tuner.budget_ledger.spent > 0.0
+
+        sc = ServiceConfig(default_bo_config=self._CA_CFG)
+        s1 = EngineServer(service_config=sc).start()
+        s2 = EngineServer(service_config=sc).start()
+        killed = []
+
+        def kill_after_third(tuner, trial):
+            done = sum(1 for t in tuner.trials.values() if t.is_terminal)
+            if done == 3 and not killed:
+                assert tuner.budget_ledger.spent > 0.0  # mid-spend
+                # SIGKILL semantics: stop the listener AND sever the live
+                # connection (daemon handler threads outlive shutdown())
+                s1.shutdown()
+                conn = tuner._service_handle._conn
+                if conn is not None:
+                    conn.close()
+                killed.append(True)
+
+        try:
+            tuner = self._make(
+                RemoteService([s1.address, s2.address], snapshot_every=4),
+                callbacks=[kill_after_third],
+            )
+            got = tuner.run()
+            replica_led = s2.service.job("job").budget_ledger
+        finally:
+            s2.shutdown()
+        assert killed, "kill callback never fired"
+        table = TestSocketEquivalence._table
+        assert table(got) == table(ref)
+        # three-way ledger agreement: client mirror == surviving replica
+        # (re-charged via oplog replay) == uninterrupted in-process run
+        mirror = tuner.budget_ledger
+        assert mirror is not None and replica_led is not None
+        assert mirror.spent == pytest.approx(replica_led.spent, abs=1e-9)
+        assert mirror.spent == pytest.approx(
+            ref_tuner.budget_ledger.spent, abs=1e-9)
+        assert mirror.max_cost == replica_led.max_cost == 500.0
+
+
 class TestLeases:
     def _register(self, conn, name="job", **kw):
         reply = conn.call(RegisterRequest(

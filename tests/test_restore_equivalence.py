@@ -268,6 +268,82 @@ class TestStoppingRuleRestoreEquivalence:
         assert json.loads(json.dumps(sa)) == json.loads(json.dumps(sb))
 
 
+class TestCostAwareRestoreEquivalence:
+    """PR 9: the budget ledger and the cost head ride the checkpoint — a
+    cost-aware job under ``max_cost`` killed mid-spend and restored must
+    reproduce the uninterrupted run's trial table *and* its ledger
+    exactly (spend replays from backend event times, never a wall clock)."""
+
+    def _make(self, path, seed=3, crash_after=None):
+        from repro.core.blackbox import TabulatedBackend, deceptive_cheap_table
+
+        table = deceptive_cheap_table()
+        sugg = BOSuggester(
+            table.space,
+            BOConfig(num_init=3, refit_every=2, cost_aware=True,
+                     cost_cooling=2.0).fast(),
+            seed=seed,
+        )
+        callbacks = []
+        if crash_after is not None:
+            done = {"n": 0}
+
+            def boom(tuner, trial):
+                done["n"] += 1
+                if done["n"] == crash_after:
+                    raise _CrashAfter()
+
+            callbacks.append(boom)
+        return Tuner(
+            table.space, table.objective, sugg,
+            TabulatedBackend(table, startup_cost=0.05),
+            TuningJobConfig(max_trials=12, max_parallel=2, seed=seed,
+                            max_cost=40.0, checkpoint_path=path,
+                            job_name="cost-restore"),
+            callbacks=callbacks,
+        )
+
+    def test_kill_restore_reproduces_table_and_ledger(self, tmp_path):
+        p_a = str(tmp_path / "a.json")
+        p_b = str(tmp_path / "b.json")
+
+        tuner_a = self._make(p_a)
+        res_a = tuner_a.run()
+        assert tuner_a.budget_ledger is not None
+        assert tuner_a.budget_ledger.spent > 0.0
+
+        tuner_b = self._make(p_b, crash_after=3)
+        with pytest.raises(_CrashAfter):
+            tuner_b.run()
+        # mid-spend at the crash: the checkpointed ledger is partial
+        assert 0.0 < tuner_b.budget_ledger.spent < tuner_a.budget_ledger.spent
+        tuner_b2 = self._make(p_b)
+        tuner_b2.restore()
+        # the restored ledger rolls back to the last checkpoint — work lost
+        # after it re-runs and re-charges, so spend never double-counts
+        assert 0.0 < tuner_b2.budget_ledger.spent <= tuner_b.budget_ledger.spent
+        res_b = tuner_b2.run()
+
+        # table equality to float tolerance (restored posterior is
+        # refactorized where the uninterrupted one was rank-1-appended);
+        # every trial snaps to the same table row, so costs — and therefore
+        # the ledger — replay exactly.
+        space = tuner_a.space
+        assert len(res_a.trials) == len(res_b.trials)
+        for ta, tb in zip(res_a.trials, res_b.trials):
+            assert (ta.trial_id, ta.state, ta.attempts) == (
+                tb.trial_id, tb.state, tb.attempts
+            )
+            np.testing.assert_allclose(
+                space.encode(ta.config), space.encode(tb.config), atol=1e-6
+            )
+            assert ta.objective == pytest.approx(tb.objective, abs=1e-9)
+        assert tuner_b2.budget_ledger.spent == pytest.approx(
+            tuner_a.budget_ledger.spent, abs=1e-9
+        )
+        assert tuner_b2.budget_ledger.max_cost == 40.0
+
+
 class TestObjectiveValidity:
     def test_nan_final_completed_trial_cannot_seed_gp_or_win(self):
         """COMPLETED with a non-finite final value must not fall back to the

@@ -25,6 +25,11 @@ class AnalysisConfig:
       replay bit-exactly across snapshot/oplog failover (PR 4/7). The
       strictest replay-safety checks (``id-key``, ``set-iter``) apply only
       here; RNG/wall-clock/entropy checks apply to every analyzed file.
+    * ``budget_paths`` — fnmatch globs of the budget/cost-accounting
+      modules (PR 9) that must source time exclusively from the backend's
+      discrete-event clock. Deliberately excludes the lease machinery in
+      ``src/repro/distributed/`` — lease expiry legitimately runs on
+      ``time.monotonic``.
     * ``rpc_module`` / ``service_module`` — where the wire messages and the
       engine-snapshot constructor live (the schema-drift rule parses both).
     * ``wire_doc`` — the document every wire/snapshot field must appear in.
@@ -43,6 +48,11 @@ class AnalysisConfig:
         "src/repro/core/rpc.py",
         "src/repro/core/gp/*.py",
         "src/repro/distributed/*.py",
+    )
+    budget_paths: Tuple[str, ...] = (
+        "src/repro/core/budget.py",
+        "src/repro/core/blackbox.py",
+        "src/repro/core/tuner.py",
     )
     rpc_module: str = "src/repro/core/rpc.py"
     service_module: str = "src/repro/core/service.py"

@@ -1,0 +1,39 @@
+"""Seeded-violation fixture: budget accounting reading host clocks.
+
+Every clock read below is the bug the budget-clock rule must catch — a
+ledger or stopping rule coupling simulated spend to the machine it happens
+to run on instead of the backend's discrete-event clock.
+"""
+
+import time
+from datetime import datetime
+from time import perf_counter
+
+
+class WallLedger:
+    def __init__(self, max_cost):
+        self.max_cost = max_cost
+        self.spent = 0.0
+        # BUG the rule must catch: budget epoch pinned to the host clock
+        self._started = time.monotonic()
+
+    def exhausted(self):
+        # BUG the rule must catch: wall elapsed time, not simulated spend
+        elapsed = time.monotonic() - self._started
+        return elapsed > self.max_cost
+
+    def charge(self, cost):
+        self.spent += cost
+        # BUG the rule must catch: wall timestamp rides the ledger state
+        return {"cost": cost, "at": time.time()}
+
+    def snapshot(self):
+        # BUG the rule must catch: host datetime serialized into a snapshot
+        return {"spent": self.spent, "saved_at": datetime.now().isoformat()}
+
+
+def trial_cost(fn, config):
+    # BUG the rule must catch: timing the objective with a CPU clock
+    start = perf_counter()
+    value = fn(config)
+    return value, perf_counter() - start

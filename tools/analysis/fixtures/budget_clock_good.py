@@ -1,0 +1,32 @@
+"""Good twin: budget accounting sourced from the backend's simulated clock.
+
+Every time-shaped quantity below comes from charges or ``backend.now()`` —
+nothing reads a host clock, so runs replay bit-identically anywhere.
+"""
+
+
+class SimLedger:
+    def __init__(self, backend, max_cost):
+        self._backend = backend
+        self.max_cost = max_cost
+        self.spent = 0.0
+        self._started = backend.now()
+
+    def exhausted(self):
+        return self.spent >= self.max_cost
+
+    def charge(self, cost):
+        self.spent += cost
+        return {"cost": cost, "at": self._backend.now()}
+
+    def elapsed(self):
+        return self._backend.now() - self._started
+
+    def snapshot(self):
+        return {"spent": self.spent, "saved_at": self._backend.now()}
+
+
+def trial_cost(fn, config, backend):
+    start = backend.now()
+    value = fn(config)
+    return value, backend.now() - start

@@ -1,7 +1,8 @@
-"""Rule registry: the four invariant families the linter enforces."""
+"""Rule registry: the five invariant families the linter enforces."""
 
 from __future__ import annotations
 
+from tools.analysis.rules.budget_clock import BudgetClockRule
 from tools.analysis.rules.kernel_parity import KernelParityRule
 from tools.analysis.rules.lock_discipline import LockDisciplineRule
 from tools.analysis.rules.replay_safety import ReplaySafetyRule
@@ -9,6 +10,7 @@ from tools.analysis.rules.schema_drift import SchemaDriftRule
 
 __all__ = [
     "ALL_RULES",
+    "BudgetClockRule",
     "KernelParityRule",
     "LockDisciplineRule",
     "ReplaySafetyRule",
@@ -21,4 +23,5 @@ ALL_RULES = (
     LockDisciplineRule(),
     SchemaDriftRule(),
     KernelParityRule(),
+    BudgetClockRule(),
 )

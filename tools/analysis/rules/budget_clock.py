@@ -1,0 +1,91 @@
+"""Budget-clock: budget/cost accounting must run on the simulation clock.
+
+PR 9's budget enforcement (``max_cost`` / ``max_wallclock``) is defined
+against the *backend's* discrete-event clock (``backend.now()``): that is
+what makes a tuning run's budget decisions deterministic per seed,
+bit-replayable across failover, and testable against tabulated blackbox
+surfaces. A single ``time.monotonic()`` read inside the ledger or the
+stopping rule silently re-couples budget decisions to the host — runs stop
+at different trial counts on different machines and restore-equivalence
+tests turn flaky.
+
+Note this is deliberately stricter than replay-safety's ``wall-clock``
+check: monotonic/CPU clocks (``time.monotonic``, ``time.perf_counter``,
+``time.process_time``, …) are replay-*safe* in general code (the lease
+manager legitimately times out dead workers with ``time.monotonic``), but
+inside budget paths they are still the wrong clock — simulated spend must
+come from charges and ``backend.now()``, never from host elapsed time.
+
+Checks:
+
+* ``own-clock`` — any host clock read (``time.time``/``monotonic``/
+  ``perf_counter``/``process_time``/``thread_time`` and ``_ns`` variants,
+  ``datetime.now``/``utcnow``/``today``, ``date.today``) in a module
+  matched by ``config.budget_paths``.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterable
+
+from tools.analysis.framework import FileInfo, Finding, Project, Rule
+from tools.analysis.rules.replay_safety import _norm, _qualify, _resolve_imports
+
+__all__ = ["BudgetClockRule"]
+
+#: every stdlib way to read a host clock — wall, monotonic, or CPU
+_HOST_CLOCKS = {
+    "time.time",
+    "time.time_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "time.process_time",
+    "time.process_time_ns",
+    "time.thread_time",
+    "time.thread_time_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "datetime.date.today",
+}
+
+
+class BudgetClockRule(Rule):
+    id = "budget-clock"
+    checks = ("own-clock",)
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        globs = tuple(getattr(project.config, "budget_paths", ()))
+        for info in project.files:
+            if info.tree is None:
+                continue
+            if not any(fnmatch.fnmatch(info.path, g) for g in globs):
+                continue
+            yield from self._check_file(info)
+
+    def _check_file(self, info: FileInfo) -> Iterable[Finding]:
+        imports = _resolve_imports(info.tree)
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qual = _qualify(node.func, imports)
+            if qual is None:
+                continue
+            qual = _norm(qual)
+            if qual in _HOST_CLOCKS:
+                line, end = self.span(node)
+                yield Finding(
+                    self.id,
+                    "own-clock",
+                    info.path,
+                    line,
+                    f"`{qual}()` inside a budget/cost path: simulated "
+                    "spend and budget stopping rules must read time only "
+                    "from the backend's discrete-event clock "
+                    "(`backend.now()`), never a host clock",
+                    end_line=end,
+                )
