@@ -4,6 +4,9 @@ from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
+import time
 from typing import Any, Dict
 
 
@@ -22,10 +25,55 @@ def rss_bytes() -> int:
     return 0
 
 
+def _git_sha() -> str:
+    """The checked-out commit, or "unknown" outside a git checkout / without
+    a git binary — a bench artifact must never fail to write over metadata."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def provenance() -> Dict[str, Any]:
+    """Where and when this artifact was produced: git sha, interpreter and
+    jax versions, and a wall-clock UTC timestamp. Benchmarks are host
+    measurements, not engine decisions, so wall-clock here is fine (and
+    ``benchmarks/`` is outside the linted decision tree)."""
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:  # noqa: BLE001 — provenance must never sink a bench
+        jax_version = None
+    return {
+        "git_sha": _git_sha(),
+        "python_version": platform.python_version(),
+        "jax_version": jax_version,
+        "platform": platform.platform(),
+        "run_at_unix": time.time(),
+        "run_at_utc": time.strftime(
+            "%Y-%m-%dT%H:%M:%SZ", time.gmtime()
+        ),
+    }
+
+
 def merge_bench_json(out_path: str, updates: Dict[str, Any]) -> None:
     """Read-merge-write top-level sections of a bench artifact, preserving
     sections written by other suites. A missing or torn file (e.g. from an
-    interrupted earlier run) starts fresh instead of crashing."""
+    interrupted earlier run) starts fresh instead of crashing.
+
+    Every merge also refreshes a top-level ``provenance`` section (git sha,
+    python/jax versions, run timestamp) so any artifact can be traced back
+    to the commit and toolchain that produced it. Section payloads passed by
+    callers are stored untouched — provenance is a sibling section, not a
+    field injected into theirs."""
     merged: Dict[str, Any] = {}
     if os.path.exists(out_path):
         try:
@@ -34,5 +82,29 @@ def merge_bench_json(out_path: str, updates: Dict[str, Any]) -> None:
         except (OSError, json.JSONDecodeError):
             merged = {}
     merged.update(updates)
+    merged["provenance"] = provenance()
     with open(out_path, "w") as f:
         json.dump(merged, f, indent=2)
+    export_telemetry_artifacts(os.path.dirname(os.path.abspath(out_path)))
+
+
+def export_telemetry_artifacts(out_dir: str) -> bool:
+    """When the run is instrumented (``REPRO_TELEMETRY=1`` or
+    ``telemetry.set_enabled``), drop the observation artifacts next to the
+    bench JSON: the span trace as ``BENCH_telemetry_trace.jsonl`` (rendered
+    by ``tools/obs_report.py``) and the registry dump as
+    ``BENCH_telemetry_metrics.json``. No-op (returns False) when telemetry
+    is off or the engine isn't importable. Benchmarks sit outside the linted
+    decision tree, so reading the registry here is legal."""
+    try:
+        from repro.core import telemetry
+    except ImportError:
+        return False
+    if not telemetry.enabled():
+        return False
+    telemetry.get().export_trace(
+        os.path.join(out_dir, "BENCH_telemetry_trace.jsonl")
+    )
+    with open(os.path.join(out_dir, "BENCH_telemetry_metrics.json"), "w") as f:
+        json.dump(telemetry.get().metrics(), f, indent=2)
+    return True

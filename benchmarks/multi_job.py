@@ -208,6 +208,14 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         rows = run(n_jobs_list=(2,), rounds=3, out_path=None)
+        # the smoke skips the bench JSON, but an instrumented run
+        # (REPRO_TELEMETRY=1) still ships its trace/metrics for CI upload
+        try:
+            from benchmarks.bench_io import export_telemetry_artifacts
+        except ImportError:
+            from bench_io import export_telemetry_artifacts
+        export_telemetry_artifacts(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
     else:
         rows = run()
     for r in rows:

@@ -251,6 +251,8 @@ def run(sizes=SIZES, out_path: str | None = None) -> List[Tuple[str, float, str]
         out_path = os.path.join(os.path.dirname(os.path.dirname(
             os.path.abspath(__file__))), "BENCH_suggest.json")
     merge_bench_json(out_path, report)  # preserve other suites' sections
+    # (an instrumented run — REPRO_TELEMETRY=1 — also gets its trace and
+    # metrics dumped next to the JSON; see bench_io.export_telemetry_artifacts)
     return rows
 
 

@@ -82,6 +82,8 @@ __all__ = [
     "EngineStateReply",
     "EngineRestoreRequest",
     "EngineRestoreReply",
+    "MetricsRequest",
+    "MetricsReply",
     "ErrorReply",
     "encode_message",
     "decode_message",
@@ -109,7 +111,10 @@ __all__ = [
 #: cap), ``ObserveRequest.cost`` (per-observation trial cost) and the
 #: ``"charge"`` observe kind (budget spend without a store row, e.g. failed
 #: trials), plus the ``budget-exhausted`` refusal code.
-PROTOCOL_VERSION = 5
+#: v6: the read-only ``metrics`` observability verb — ``MetricsRequest``
+#: (no job, no lease: it reads the replica's telemetry registry, never
+#: engine state) and ``MetricsReply`` (the registry dump + service stats).
+PROTOCOL_VERSION = 6
 
 #: Engine-snapshot schema version (``SelectionService.snapshot_job`` output).
 #: v2: ``metrics`` (the job's MetricSpec list) + the store's ``own_yx``
@@ -515,6 +520,29 @@ class EngineRestoreReply:
 
 
 @dataclasses.dataclass(frozen=True)
+class MetricsRequest:
+    """Read-only observability verb: fetch the replica's telemetry registry
+    dump (counters/gauges/histograms) and service stats. Carries no job name
+    and no lease — it renews nothing, mutates nothing, and reads *telemetry*
+    state only (plus the service's own insight counters), never decision
+    state. Serving it cannot perturb any suggestion stream."""
+
+    TYPE = "metrics"
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsReply:
+    """``metrics`` is ``Telemetry.metrics()`` (``{"enabled", "counters",
+    "gauges", "histograms"}``); ``service_stats`` is
+    ``SelectionService.stats()`` (arena residency + per-group pool
+    counters)."""
+
+    TYPE = "metrics_reply"
+    metrics: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    service_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
 class ErrorReply:
     """Loud refusal: ``code`` is an ``ErrorCode`` the client matches on.
     ``retry_after`` (seconds) accompanies refusals that resolve by waiting
@@ -546,6 +574,8 @@ Message = Union[
     EngineStateReply,
     EngineRestoreRequest,
     EngineRestoreReply,
+    MetricsRequest,
+    MetricsReply,
     ErrorReply,
 ]
 
@@ -570,6 +600,8 @@ _REGISTRY: Dict[str, Type[Any]] = {
         EngineStateReply,
         EngineRestoreRequest,
         EngineRestoreReply,
+        MetricsRequest,
+        MetricsReply,
         ErrorReply,
     )
 }

@@ -58,6 +58,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.history import ObservationStore
 from repro.core.search_space import Categorical, Integer, SearchSpace
 from repro.core.suggest import BOConfig, BOSuggester, EngineCache
@@ -257,6 +258,7 @@ class FactorArena:
             cache = self._entries.pop(victim)
             cache.drop_factors()
             self.evictions += 1
+            telemetry.count("arena.evictions")
 
     def stats(self) -> Dict[str, Any]:
         return {
@@ -557,7 +559,27 @@ class SelectionService:
         """Serve k candidates for ``name`` — the multiplexed decision entry
         point (arena LRU accounting happens inside the engine's decision)."""
         handle = self._jobs[name]
-        return handle.suggester.suggest_batch(k)
+        # observation only: engine counters are read *before/after* the
+        # decision, never fed back into it (telemetry-oneway invariant).
+        pool = getattr(getattr(handle.suggester, "cache", None), "pool", None)
+        fits_before = pool.publishes if pool is not None else 0
+        with telemetry.span("service.suggest_batch", job=name, k=k):
+            out = handle.suggester.suggest_batch(k)
+        if telemetry.enabled():
+            if pool is not None:
+                telemetry.count(
+                    "service.pool.miss"
+                    if pool.publishes > fits_before
+                    else "service.pool.hit"
+                )
+            telemetry.gauge("arena.resident_bytes", self.arena.resident_bytes())
+            telemetry.gauge("arena.factor_bytes", self.arena.factor_bytes())
+            telemetry.gauge("arena.evictions_total", self.arena.evictions)
+            if handle.budget_ledger is not None:
+                telemetry.gauge(
+                    f"budget.spent.{name}", handle.budget_ledger.spent
+                )
+        return out
 
     # ------------------------------------------------------------ snapshots
     def snapshot_job(self, name: str, include_factors: bool = False) -> Dict[str, Any]:

@@ -72,6 +72,7 @@ from repro.core.gp.slice_sampler import (
     SliceSamplerConfig,
 )
 from repro.core.gp.sparse import select_inducing
+from repro.core import telemetry
 from repro.core.history import ObservationStore, bucket_size
 from repro.core.optimize_acq import (
     AcqOptConfig,
@@ -579,10 +580,20 @@ class BOSuggester:
         """Fill k freed slots in one engine pass (batched slot refill)."""
         if self._store is None:
             raise RuntimeError("suggest_batch requires a bound ObservationStore")
-        return self._decide(self._store, k, self._store.pending_encoded())
+        with telemetry.span("suggest.encode"):
+            pend_np = self._store.pending_encoded()
+        return self._decide(self._store, k, pend_np)
 
     # ------------------------------------------------------------ decisions
     def _decide(
+        self, store: ObservationStore, k: int, pend_np: np.ndarray
+    ) -> List[Dict[str, Any]]:
+        with telemetry.span(
+            "suggest.decide", n=store.num_observations, k=k
+        ):
+            return self._decide_impl(store, k, pend_np)
+
+    def _decide_impl(
         self, store: ObservationStore, k: int, pend_np: np.ndarray
     ) -> List[Dict[str, Any]]:
         cfg = self.config
@@ -632,7 +643,8 @@ class BOSuggester:
                 return self._decide_cost(store, k, pend_np, costs)
 
         x_all, y_std, _, _ = store.standardized()
-        post = self._posterior_for(store, x_all, y_std)
+        with telemetry.span("suggest.posterior", n=n):
+            post = self._posterior_for(store, x_all, y_std)
         rows = self.cache.live_rows(n)  # factor rows, in store order
         n_live = len(rows)
         size = post.x_train.shape[0]
@@ -669,26 +681,30 @@ class BOSuggester:
 
         # --- batched refill: one pipeline pass fills all k slots -------------
         for slot in range(k):
-            cands, _ = optimize_acquisition(
-                work,
-                self._anchors,
-                y_best,
-                jnp.asarray(pend_buf),
-                jnp.asarray(pend_mask),
-                self._next_key(),
-                cfg.acq,
-            )
-            seen = self._seen_matrix(x_all, pend_np, picks)
-            config = vec = None
-            for cand in np.asarray(cands):
-                snapped = space.round_trip(cand)
-                if len(seen) == 0 or np.min(
-                    np.max(np.abs(seen - snapped[None, :]), axis=1)
-                ) > cfg.dedupe_tol:
-                    config, vec = space.decode(snapped), snapped
-                    break
-            if config is None:
-                config, vec = self._quasi_random(seen)
+            with telemetry.span(
+                "suggest.acq_opt", backend=cfg.acq.backend, slot=slot
+            ):
+                cands, _ = optimize_acquisition(
+                    work,
+                    self._anchors,
+                    y_best,
+                    jnp.asarray(pend_buf),
+                    jnp.asarray(pend_mask),
+                    self._next_key(),
+                    cfg.acq,
+                )
+            with telemetry.span("suggest.dedup", slot=slot):
+                seen = self._seen_matrix(x_all, pend_np, picks)
+                config = vec = None
+                for cand in np.asarray(cands):
+                    snapped = space.round_trip(cand)
+                    if len(seen) == 0 or np.min(
+                        np.max(np.abs(seen - snapped[None, :]), axis=1)
+                    ) > cfg.dedupe_tol:
+                        config, vec = space.decode(snapped), snapped
+                        break
+                if config is None:
+                    config, vec = self._quasi_random(seen)
             out.append(config)
             picks.append(vec)
             if slot + 1 < k:
@@ -728,9 +744,10 @@ class BOSuggester:
         num_obj = ms.num_objectives
 
         x_all, ystd, means, scales = store.standardized_metrics()
-        post = self._posterior_for(
-            store, x_all, np.ascontiguousarray(ystd[:, 0])
-        )
+        with telemetry.span("suggest.posterior", n=n):
+            post = self._posterior_for(
+                store, x_all, np.ascontiguousarray(ystd[:, 0])
+            )
         rows = self.cache.live_rows(n)  # factor rows, in store order
         n_live = len(rows)
         size = post.x_train.shape[0]
@@ -831,27 +848,31 @@ class BOSuggester:
         picks: List[np.ndarray] = []
         out: List[Dict[str, Any]] = []
         for slot in range(k):
-            cands, _ = optimize_acquisition_multi(
-                work,
-                head,
-                self._anchors,
-                jnp.asarray(pend_buf),
-                jnp.asarray(pend_mask),
-                self._next_key(),
-                cfg.acq,
-                spec,
-            )
-            seen = self._seen_matrix(x_all, pend_np, picks)
-            config = vec = None
-            for cand in np.asarray(cands):
-                snapped = space.round_trip(cand)
-                if len(seen) == 0 or np.min(
-                    np.max(np.abs(seen - snapped[None, :]), axis=1)
-                ) > cfg.dedupe_tol:
-                    config, vec = space.decode(snapped), snapped
-                    break
-            if config is None:
-                config, vec = self._quasi_random(seen)
+            with telemetry.span(
+                "suggest.acq_opt", backend=cfg.acq.backend, slot=slot
+            ):
+                cands, _ = optimize_acquisition_multi(
+                    work,
+                    head,
+                    self._anchors,
+                    jnp.asarray(pend_buf),
+                    jnp.asarray(pend_mask),
+                    self._next_key(),
+                    cfg.acq,
+                    spec,
+                )
+            with telemetry.span("suggest.dedup", slot=slot):
+                seen = self._seen_matrix(x_all, pend_np, picks)
+                config = vec = None
+                for cand in np.asarray(cands):
+                    snapped = space.round_trip(cand)
+                    if len(seen) == 0 or np.min(
+                        np.max(np.abs(seen - snapped[None, :]), axis=1)
+                    ) > cfg.dedupe_tol:
+                        config, vec = space.decode(snapped), snapped
+                        break
+                if config is None:
+                    config, vec = self._quasi_random(seen)
             out.append(config)
             picks.append(vec)
             if slot + 1 < k:
@@ -900,7 +921,8 @@ class BOSuggester:
         m_all = 1 + num_rungs
 
         x_all, y_std, _, _ = store.standardized()
-        post = self._posterior_for(store, x_all, y_std)
+        with telemetry.span("suggest.posterior", n=n):
+            post = self._posterior_for(store, x_all, y_std)
         rows = self.cache.live_rows(n)  # factor rows, in store order
         n_live = len(rows)
         size = post.x_train.shape[0]
@@ -967,27 +989,31 @@ class BOSuggester:
         picks: List[np.ndarray] = []
         out: List[Dict[str, Any]] = []
         for slot in range(k):
-            cands, _ = optimize_acquisition_multi(
-                work,
-                head,
-                self._anchors,
-                jnp.asarray(pend_buf),
-                jnp.asarray(pend_mask),
-                self._next_key(),
-                cfg.acq,
-                spec,
-            )
-            seen = self._seen_matrix(x_all, pend_np, picks)
-            config = vec = None
-            for cand in np.asarray(cands):
-                snapped = space.round_trip(cand)
-                if len(seen) == 0 or np.min(
-                    np.max(np.abs(seen - snapped[None, :]), axis=1)
-                ) > cfg.dedupe_tol:
-                    config, vec = space.decode(snapped), snapped
-                    break
-            if config is None:
-                config, vec = self._quasi_random(seen)
+            with telemetry.span(
+                "suggest.acq_opt", backend=cfg.acq.backend, slot=slot
+            ):
+                cands, _ = optimize_acquisition_multi(
+                    work,
+                    head,
+                    self._anchors,
+                    jnp.asarray(pend_buf),
+                    jnp.asarray(pend_mask),
+                    self._next_key(),
+                    cfg.acq,
+                    spec,
+                )
+            with telemetry.span("suggest.dedup", slot=slot):
+                seen = self._seen_matrix(x_all, pend_np, picks)
+                config = vec = None
+                for cand in np.asarray(cands):
+                    snapped = space.round_trip(cand)
+                    if len(seen) == 0 or np.min(
+                        np.max(np.abs(seen - snapped[None, :]), axis=1)
+                    ) > cfg.dedupe_tol:
+                        config, vec = space.decode(snapped), snapped
+                        break
+                if config is None:
+                    config, vec = self._quasi_random(seen)
             out.append(config)
             picks.append(vec)
             if slot + 1 < k:
@@ -1043,7 +1069,8 @@ class BOSuggester:
         m_all = 2  # objective head + log-cost head
 
         x_all, y_std, _, _ = store.standardized()
-        post = self._posterior_for(store, x_all, y_std)
+        with telemetry.span("suggest.posterior", n=n):
+            post = self._posterior_for(store, x_all, y_std)
         rows = self.cache.live_rows(n)  # factor rows, in store order
         n_live = len(rows)
         size = post.x_train.shape[0]
@@ -1125,27 +1152,31 @@ class BOSuggester:
         picks: List[np.ndarray] = []
         out: List[Dict[str, Any]] = []
         for slot in range(k):
-            cands, _ = optimize_acquisition_multi(
-                work,
-                head,
-                self._anchors,
-                jnp.asarray(pend_buf),
-                jnp.asarray(pend_mask),
-                self._next_key(),
-                cfg.acq,
-                spec,
-            )
-            seen = self._seen_matrix(x_all, pend_np, picks)
-            config = vec = None
-            for cand in np.asarray(cands):
-                snapped = space.round_trip(cand)
-                if len(seen) == 0 or np.min(
-                    np.max(np.abs(seen - snapped[None, :]), axis=1)
-                ) > cfg.dedupe_tol:
-                    config, vec = space.decode(snapped), snapped
-                    break
-            if config is None:
-                config, vec = self._quasi_random(seen)
+            with telemetry.span(
+                "suggest.acq_opt", backend=cfg.acq.backend, slot=slot
+            ):
+                cands, _ = optimize_acquisition_multi(
+                    work,
+                    head,
+                    self._anchors,
+                    jnp.asarray(pend_buf),
+                    jnp.asarray(pend_mask),
+                    self._next_key(),
+                    cfg.acq,
+                    spec,
+                )
+            with telemetry.span("suggest.dedup", slot=slot):
+                seen = self._seen_matrix(x_all, pend_np, picks)
+                config = vec = None
+                for cand in np.asarray(cands):
+                    snapped = space.round_trip(cand)
+                    if len(seen) == 0 or np.min(
+                        np.max(np.abs(seen - snapped[None, :]), axis=1)
+                    ) > cfg.dedupe_tol:
+                        config, vec = space.decode(snapped), snapped
+                        break
+                if config is None:
+                    config, vec = self._quasi_random(seen)
             out.append(config)
             picks.append(vec)
             if slot + 1 < k:
@@ -1296,6 +1327,7 @@ class BOSuggester:
             if self._chain_state is None and pool.chain_state is not None:
                 self._chain_state = np.array(pool.chain_state)
             pool.adoptions += 1
+            telemetry.count("suggest.gphp.adopt")
             resample = False
             post_valid = False  # factors (if any) describe the old draws
             new_obs = 0  # the adopted draws cover all current rows
@@ -1307,15 +1339,18 @@ class BOSuggester:
 
         if resample:
             self._boundary_refit = True
+            telemetry.count("suggest.gphp.refit")
             rows = self._boundary_rows(x_all, n)
             xj, yj, mj = self._pad_rows(x_all, y_std, rows, d)
-            samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
+            with telemetry.span("suggest.gphp_fit", n=n):
+                samples = self._fit_gphps(xj, yj, mj)  # consumes one RNG key
             cache.samples = np.asarray(samples)
             cache.obs_since_refit = 0
             if pool is not None:
                 pool.publish(cache.samples, self._chain_state)
                 cache.pool_version = pool.version
-            post = self._factorize(xj, yj, mj)
+            with telemetry.span("suggest.factorize", n=n):
+                post = self._factorize(xj, yj, mj)
         elif not post_valid:
             # Cached draws (restored from a checkpoint/snapshot, adopted from
             # the pool, or arena-evicted factors) but no live factorization.
@@ -1334,15 +1369,17 @@ class BOSuggester:
             cache.obs_since_refit += new_obs
             rows = self._boundary_rows(x_all[:r], r)
             xj, yj, mj = self._pad_rows(x_all, y_std, rows, d)
-            post = self._factorize(xj, yj, mj)
-            post = self._append_rows(post, store, r, n, live0=len(rows))
+            with telemetry.span("suggest.factor_rebuild", n=n, boundary=r):
+                post = self._factorize(xj, yj, mj)
+                post = self._append_rows(post, store, r, n, live0=len(rows))
         else:
             live0 = (
                 acct
                 if cache.inducing_sel is None
                 else len(cache.inducing_sel) + (acct - cache.inducing_n0)
             )
-            post = self._append_rows(cache.post, store, acct, n, live0=live0)
+            with telemetry.span("suggest.rank1_append", n=n, new=new_obs):
+                post = self._append_rows(cache.post, store, acct, n, live0=live0)
             cache.obs_since_refit += new_obs
 
         cache.n = n

@@ -36,6 +36,7 @@ without extra round trips.
 
 from __future__ import annotations
 
+import logging
 import socket
 import threading
 import time
@@ -43,6 +44,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.history import ObservationStore
 from repro.core.rpc import (
     EngineRestoreRequest,
@@ -74,6 +76,8 @@ __all__ = [
     "RemoteSuggester",
     "ReplicaDivergenceError",
 ]
+
+_LOG = logging.getLogger(__name__)
 
 
 class RemoteServiceError(RuntimeError):
@@ -374,11 +378,22 @@ class RemoteJobHandle:
                 return
             if self.stale or self._closed:
                 return
-            try:
-                self.heartbeat()
-            except Exception:  # noqa: BLE001 — the renewer must never crash
-                # the client; the next real request owns recovery/failover.
-                pass
+            self._renew_once()
+
+    def _renew_once(self) -> None:
+        """One background lease renewal. The renewer must never crash the
+        client — the next real request owns recovery/failover — but a failed
+        renewal must never vanish either: it is counted and logged so a
+        flapping fleet shows up in telemetry before it shows up as a stall."""
+        try:
+            self.heartbeat()
+        except Exception as e:  # noqa: BLE001 — see docstring
+            telemetry.count("client.heartbeat_error")
+            _LOG.warning(
+                "job %r: background lease renewal failed (%s: %s); "
+                "next request will re-adopt",
+                self.name, type(e).__name__, e,
+            )
 
     def fetch_snapshot(self, include_factors: bool = False) -> Dict[str, Any]:
         """Fetch the replica's current engine snapshot for this job (also
@@ -503,10 +518,12 @@ class RemoteJobHandle:
                     reply = self._conn.call(make(self._lease))
                 except (OSError, EOFError) as e:
                     last = e
+                    telemetry.count("client.failover")
                     self._drop_replica_locked()
                     continue
                 if isinstance(reply, ErrorReply):
                     if reply.code == ErrorCode.LEASE_EXPIRED:
+                        telemetry.count("client.lease_expired")
                         self._lease = None  # re-adopt (same replica first)
                         continue
                     raise ProtocolError(reply.code, reply.message)
@@ -630,6 +647,7 @@ class RemoteJobHandle:
                 self._lease_ttl = float(reply.lease_ttl)
                 self._takeover = None
                 self._after_register(reply)
+                telemetry.count("client.readopt")
                 if reply.adopted_resident:
                     # the replica still hosts the live job (lease had merely
                     # lapsed): its state is snapshot+oplog already applied —
@@ -650,6 +668,11 @@ class RemoteJobHandle:
                 if conn is not None:
                     conn.close()
                 last = e
+                telemetry.count("client.readopt_error")
+                _LOG.warning(
+                    "job %r: readopt attempt on %s failed (%s: %s)",
+                    self.name, address, type(e).__name__, e,
+                )
                 self._replica_idx = (
                     self._replica_idx + 1
                 ) % len(self.service.addresses)
@@ -702,6 +725,9 @@ class RemoteJobHandle:
         """Re-apply the logged requests on a freshly adopted replica. The
         engine is deterministic, so replayed suggestions must reproduce the
         exact configs already handed to the caller — verified, not assumed."""
+        if self._oplog:
+            telemetry.count("client.oplog.replayed_ops", len(self._oplog))
+            telemetry.observe("client.oplog.replay_len", len(self._oplog))
         for op in self._oplog:
             kind = op[0]
             if kind == "suggest":
@@ -841,6 +867,29 @@ class RemoteService:
 
     def job(self, name: str) -> RemoteJobHandle:
         return self._handles[name]
+
+    def fetch_metrics(
+        self, address: Optional[Tuple[str, int]] = None
+    ) -> Dict[str, Any]:
+        """Fetch one replica's telemetry dump via the read-only ``metrics``
+        verb (no job, no lease). This reads the *replica's* registry over the
+        wire for operators and tests; nothing here feeds back into any
+        decision path. Returns ``{"metrics": ..., "service_stats": ...}``."""
+        from repro.core.rpc import MetricsReply, MetricsRequest
+
+        addr = tuple(address) if address is not None else self.addresses[0]
+        conn = _Connection(addr, self.connect_timeout, self.call_timeout)
+        try:
+            reply = conn.call(MetricsRequest())
+        finally:
+            conn.close()
+        if isinstance(reply, ErrorReply):
+            raise ProtocolError(reply.code, reply.message)
+        assert isinstance(reply, MetricsReply)
+        return {
+            "metrics": reply.metrics,
+            "service_stats": reply.service_stats,
+        }
 
     def register_job(
         self,

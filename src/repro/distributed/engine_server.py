@@ -43,6 +43,7 @@ import time
 import uuid
 from typing import Any, Dict, Optional, Tuple
 
+from repro.core import telemetry
 from repro.core.rpc import (
     EngineRestoreReply,
     EngineRestoreRequest,
@@ -52,6 +53,8 @@ from repro.core.rpc import (
     ErrorReply,
     HeartbeatReply,
     HeartbeatRequest,
+    MetricsReply,
+    MetricsRequest,
     ObserveReply,
     ObserveRequest,
     PromotionReply,
@@ -178,23 +181,41 @@ class EngineServer:
         try:
             msg = decode_message(line)
         except ProtocolError as e:
+            telemetry.count("server.refusal." + e.code)
             return encode_message(
                 ErrorReply(code=e.code, message=e.message,
                            retry_after=e.retry_after)
             )
-        try:
-            with self._lock:
-                reply = self._dispatch(msg)
-        except ProtocolError as e:
-            reply = ErrorReply(code=e.code, message=e.message,
-                               retry_after=e.retry_after)
-        except Exception as e:  # noqa: BLE001 — refuse loudly, never hang
-            reply = ErrorReply(
-                code=ErrorCode.BAD_REQUEST, message=f"{type(e).__name__}: {e}"
-            )
-        return encode_message(reply)
+        verb = getattr(msg, "TYPE", "unknown")
+        with telemetry.span("rpc." + verb):
+            try:
+                with self._lock:
+                    reply = self._dispatch(msg)
+            except ProtocolError as e:
+                reply = ErrorReply(code=e.code, message=e.message,
+                                   retry_after=e.retry_after)
+            except Exception as e:  # noqa: BLE001 — refuse loudly, never hang
+                reply = ErrorReply(
+                    code=ErrorCode.BAD_REQUEST, message=f"{type(e).__name__}: {e}"
+                )
+        out = encode_message(reply)
+        if telemetry.enabled():
+            telemetry.count("server.rpc." + verb)
+            telemetry.observe("server.frame_bytes.in", len(line))
+            telemetry.observe("server.frame_bytes.out", len(out))
+            if isinstance(reply, ErrorReply):
+                telemetry.count("server.refusal." + reply.code)
+        return out
 
     def _dispatch(self, msg: Any) -> Any:
+        if isinstance(msg, MetricsRequest):
+            # Read-only observability verb — no job, no lease, no renewal.
+            # The one sanctioned telemetry read in the serving path: the
+            # dump goes out on the wire, never into engine state.
+            return MetricsReply(
+                metrics=telemetry.get().metrics(),  # invariant: telemetry-read -- serving the read-only metrics verb; the dump is exported to the wire and never feeds a decision
+                service_stats=self.service.stats(),
+            )
         if isinstance(msg, RegisterRequest):
             return self._register(msg)
         if isinstance(msg, SuggestBatchRequest):
@@ -277,6 +298,7 @@ class EngineServer:
             with self._lock:
                 del self._leases[job_name]
             lease = None
+            telemetry.count("server.lease.expired")
         if lease is None or lease.token != token:
             raise ProtocolError(
                 ErrorCode.LEASE_EXPIRED,
@@ -284,6 +306,7 @@ class EngineServer:
                 "re-register to adopt",
             )
         lease.expires_at = now + self.lease_ttl
+        telemetry.count("server.lease.renew")
         return handle
 
     # -------------------------------------------------------------- handlers
@@ -294,6 +317,7 @@ class EngineServer:
             with self._lock:
                 del self._leases[msg.job_name]
             lease = None
+            telemetry.count("server.lease.expired")
         if lease is not None and msg.takeover_lease != lease.token:
             remaining = lease.expires_at - now
             raise ProtocolError(
@@ -440,7 +464,13 @@ def main(argv=None) -> None:
     ap.add_argument("--arena-budget-mb", type=float, default=256.0)
     ap.add_argument("--no-share-gphp", action="store_true")
     ap.add_argument("--no-sibling-warm-start", action="store_true")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the telemetry registry (same as "
+                         "REPRO_TELEMETRY=1); serve live counters via the "
+                         "read-only `metrics` verb")
     args = ap.parse_args(argv)
+    if args.telemetry:
+        telemetry.set_enabled(True)
     server = EngineServer(
         args.host,
         args.port,

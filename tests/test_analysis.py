@@ -30,6 +30,7 @@ from tools.analysis.rules.kernel_parity import KernelParityRule
 from tools.analysis.rules.lock_discipline import LockDisciplineRule
 from tools.analysis.rules.replay_safety import ReplaySafetyRule
 from tools.analysis.rules.schema_drift import SchemaDriftRule, compute_schema
+from tools.analysis.rules.telemetry_oneway import TelemetryOnewayRule
 from tools.analysis.run import build_project, main, update_schema_lock
 
 FIXTURES = REPO / "tools" / "analysis" / "fixtures"
@@ -273,6 +274,63 @@ class TestBudgetClock:
         # ...and must exclude the lease machinery, which runs on monotonic
         assert not any(
             fnmatch.fnmatch("src/repro/distributed/engine_server.py", g)
+            for g in defaults
+        )
+
+
+# ----------------------------------------------------------- telemetry-oneway
+
+
+class TestTelemetryOneway:
+    def _run(self, name, **cfg_kwargs):
+        cfg_kwargs.setdefault("decision_paths", ("telemetry_oneway_*.py",))
+        project = _project(FIXTURES, [FIXTURES / name], **cfg_kwargs)
+        return run_analysis(project, [TelemetryOnewayRule()])
+
+    def test_bad_fixture_flags_reads_and_snapshot_leaks(self):
+        report = self._run("telemetry_oneway_bad.py")
+        checks = [f.check for f in report.findings]
+        assert checks.count("telemetry-read") == 3
+        assert checks.count("telemetry-in-snapshot") == 3
+        reads = [f for f in report.findings if f.check == "telemetry-read"]
+        # the direct read-API import, the metrics() read, the registry grab
+        assert any("import metrics" in f.message for f in reads)
+        assert any("telemetry.metrics" in f.message for f in reads)
+        assert any("telemetry.get" in f.message for f in reads)
+        leaks = {
+            f.message.split("'")[1]
+            for f in report.findings if f.check == "telemetry-in-snapshot"
+        }
+        assert leaks == {"telemetry", "span_durations", "trace_events"}
+
+    def test_good_twin_is_clean(self):
+        report = self._run("telemetry_oneway_good.py")
+        assert report.findings == []
+
+    def test_reads_legal_outside_decision_paths(self):
+        # exporters/tests/CLIs read the registry legitimately — only the
+        # decision tree is one-way (snapshot leaks stay flagged everywhere)
+        report = self._run(
+            "telemetry_oneway_bad.py", decision_paths=("nothing/matches/*",)
+        )
+        assert {f.check for f in report.findings} == {"telemetry-in-snapshot"}
+
+    def test_shipped_decision_paths_cover_the_instrumented_tree(self):
+        import fnmatch
+
+        defaults = DEFAULT_CONFIG.decision_paths
+        for mod in (
+            "src/repro/core/suggest.py",
+            "src/repro/core/service.py",
+            "src/repro/distributed/engine_server.py",
+            "src/repro/distributed/engine_client.py",
+        ):
+            assert (REPO / mod).is_file()
+            assert any(fnmatch.fnmatch(mod, g) for g in defaults)
+        # the registry itself is not a decision path: its read API is the
+        # whole point of the module
+        assert not any(
+            fnmatch.fnmatch("src/repro/core/telemetry.py", g)
             for g in defaults
         )
 

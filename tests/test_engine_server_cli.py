@@ -1,0 +1,169 @@
+"""The engine-replica CLI (`python -m repro.distributed.engine_server`):
+flag parsing, clean startup/shutdown as a real OS process, and the
+read-only ``metrics`` verb served by a live subprocess replica."""
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import BOConfig, Continuous, SearchSpace
+from repro.core.gp.slice_sampler import SliceSamplerConfig
+from repro.distributed import engine_server
+from repro.distributed.engine_client import RemoteService
+
+_CFG = BOConfig(
+    num_init=2,
+    slice_config=SliceSamplerConfig(num_samples=4, burn_in=2, thin=1),
+    refit_every=3,
+    incremental=True,
+)
+
+
+def _space():
+    return SearchSpace([Continuous("x", 0.0, 1.0)])
+
+
+# ------------------------------------------------------------ flag parsing
+
+
+class TestFlagParsing:
+    def _server_from(self, monkeypatch, argv):
+        """Run main() far enough to build the server, capturing it instead
+        of serving forever."""
+        built = {}
+
+        class _Stop(Exception):
+            pass
+
+        real_init = engine_server.EngineServer.__init__
+
+        def spy_init(self, *args, **kwargs):
+            real_init(self, *args, **kwargs)
+            built["server"] = self
+            raise _Stop  # don't bind a serve loop; flags are parsed by now
+
+        monkeypatch.setattr(engine_server.EngineServer, "__init__", spy_init)
+        with pytest.raises(_Stop):
+            engine_server.main(argv)
+        server = built["server"]
+        server._tcp.server_close()  # release the bound port
+        return server
+
+    def test_defaults(self, monkeypatch):
+        server = self._server_from(monkeypatch, [])
+        assert server.lease_ttl == engine_server.DEFAULT_LEASE_TTL
+        assert server.service.config.share_gphp is True
+        assert server.service.config.sibling_warm_start is True
+
+    def test_flags_reach_the_service_config(self, monkeypatch):
+        server = self._server_from(monkeypatch, [
+            "--lease-ttl", "7.5",
+            "--arena-budget-mb", "32",
+            "--no-share-gphp",
+            "--no-sibling-warm-start",
+        ])
+        assert server.lease_ttl == 7.5
+        assert server.service.config.arena_budget_mb == 32.0
+        assert server.service.config.share_gphp is False
+        assert server.service.config.sibling_warm_start is False
+
+    def test_telemetry_flag_enables_registry(self, monkeypatch):
+        from repro.core import telemetry
+
+        monkeypatch.setattr(telemetry.get(), "_enabled", False)
+        self._server_from(monkeypatch, ["--telemetry"])
+        assert telemetry.enabled() is True
+        telemetry.set_enabled(False)
+
+    def test_unknown_flag_is_rejected(self, monkeypatch, capsys):
+        with pytest.raises(SystemExit) as exc:
+            engine_server.main(["--definitely-not-a-flag"])
+        assert exc.value.code == 2
+        assert "unrecognized arguments" in capsys.readouterr().err
+
+
+# --------------------------------------------------------- OS-process CLI
+
+
+def _spawn_replica(extra_args=()):
+    """Start a real replica subprocess on a free port; returns (proc, addr).
+    The port is parsed from the startup banner."""
+    env = dict(os.environ)
+    # the replica's telemetry state must come from its own flags, not from
+    # an instrumented CI environment leaking through
+    env.pop("REPRO_TELEMETRY", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (
+            os.path.join(os.path.dirname(__file__), os.pardir, "src"),
+            env.get("PYTHONPATH", ""),
+        ) if p
+    )
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.distributed.engine_server",
+         "--port", "0", *extra_args],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env=env,
+    )
+    banner = proc.stdout.readline()
+    assert "listening on" in banner, banner
+    hostport = banner.split("listening on", 1)[1].split()[0]
+    host, port = hostport.rsplit(":", 1)
+    return proc, (host, int(port))
+
+
+@pytest.mark.slow
+class TestSubprocessReplica:
+    def test_clean_startup_and_sigint_shutdown(self):
+        proc, _addr = _spawn_replica()
+        try:
+            assert proc.poll() is None  # serving
+        finally:
+            proc.send_signal(signal.SIGINT)
+            rc = proc.wait(timeout=10)
+        assert rc in (0, -signal.SIGINT)
+
+    def test_metrics_verb_from_live_subprocess_replica(self):
+        """End to end across a process boundary: register + drive a job on
+        a ``--telemetry`` replica, then read its live counters back via the
+        metrics verb."""
+        proc, addr = _spawn_replica(["--telemetry"])
+        try:
+            rsvc = RemoteService([addr])
+            rh = rsvc.register_job("job", _space(), bo_config=_CFG, seed=1)
+            for i in range(3):
+                cfg = rh.suggest_batch(1)[0]
+                rh.store.mark_pending(i, cfg)
+                rh.store.clear_pending(i)
+                rh.store.push(cfg, float(cfg["x"]))
+            rsvc.fetch_metrics(addr)  # counted after the reply goes out,
+            dump = rsvc.fetch_metrics(addr)  # so fetch twice to see it
+            rh.close()
+            counters = dump["metrics"]["counters"]
+            assert dump["metrics"]["enabled"] is True
+            assert counters["server.rpc.register"] == 1
+            assert counters["server.rpc.suggest_batch"] == 3
+            assert counters["server.rpc.metrics"] >= 1
+            assert (
+                dump["metrics"]["histograms"]["span.rpc.suggest_batch"]["count"]
+                == 3
+            )
+            assert dump["service_stats"]["groups"][0]["jobs"] == ["job"]
+        finally:
+            proc.send_signal(signal.SIGINT)
+            proc.wait(timeout=10)
+
+    def test_metrics_verb_off_replica_reports_disabled(self):
+        """Without --telemetry the verb still answers (empty registry,
+        enabled=false) — observability never becomes a protocol error."""
+        proc, addr = _spawn_replica()
+        try:
+            dump = RemoteService([addr]).fetch_metrics(addr)
+            assert dump["metrics"]["enabled"] is False
+            assert dump["metrics"]["counters"] == {}
+        finally:
+            proc.send_signal(signal.SIGINT)
+            proc.wait(timeout=10)

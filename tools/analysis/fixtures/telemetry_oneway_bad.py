@@ -1,0 +1,41 @@
+"""Seeded-violation fixture: decision code reading telemetry back.
+
+Every site below is the bug the telemetry-oneway rule must catch — a
+counter, histogram, or trace consulted inside a decision path (coupling
+suggestions to observation history), or a telemetry key riding a
+state/snapshot payload (a restored engine must start cold).
+"""
+
+import telemetry
+from telemetry import metrics as read_metrics
+
+
+class AdaptiveSuggester:
+    def suggest_batch(self, k):
+        telemetry.count("suggest.calls")  # writes are fine
+        # BUG the rule must catch: a decision branching on a counter value
+        dump = telemetry.metrics()
+        if dump["counters"].get("suggest.slow", 0) > 3:
+            k = 1
+        return [self._decide() for _ in range(k)]
+
+    def _decide(self):
+        # BUG the rule must catch: reaching into the registry object
+        reg = telemetry.get()
+        return {"explore": reg.trace_events()[-1]["dur"] > 0.5}
+
+    def tune_cadence(self):
+        # BUG the rule must catch: read-API name imported directly
+        return read_metrics()["histograms"]
+
+    def state_dict(self):
+        # BUG the rule must catch: telemetry keys serialized with state
+        return {
+            "observations": [],
+            "telemetry": {"suggest.calls": 7},
+            "span_durations": [0.1, 0.2],
+        }
+
+    def snapshot_job(self):
+        # BUG the rule must catch: trace ring riding a snapshot payload
+        return {"store": {}, "trace_events": []}

@@ -1,0 +1,32 @@
+"""Good twin: decision code that only *writes* telemetry.
+
+Counters, gauges, histograms, and spans are recorded (gated on
+``telemetry.enabled()`` when the argument is expensive to compute) but
+never read back, and state/snapshot payloads carry engine state only — the
+registry dump is served elsewhere, by the read-only ``metrics`` RPC verb.
+"""
+
+import telemetry
+from telemetry import count, enabled, span
+
+
+class ObservedSuggester:
+    def suggest_batch(self, k):
+        count("suggest.calls")
+        with telemetry.span("suggest.decide", k=k):
+            out = [self._decide() for _ in range(k)]
+        if enabled():
+            telemetry.gauge("suggest.batch_size", k)
+        return out
+
+    def _decide(self):
+        with span("suggest.acq_opt"):
+            config = {"x": 0.5}
+        telemetry.observe("suggest.candidates", 1)
+        return config
+
+    def state_dict(self):
+        return {"observations": [], "pending": [], "seed": 0}
+
+    def snapshot_job(self):
+        return {"store": self.state_dict(), "bo_config": {}}

@@ -1,4 +1,4 @@
-"""Rule registry: the five invariant families the linter enforces."""
+"""Rule registry: the six invariant families the linter enforces."""
 
 from __future__ import annotations
 
@@ -7,6 +7,7 @@ from tools.analysis.rules.kernel_parity import KernelParityRule
 from tools.analysis.rules.lock_discipline import LockDisciplineRule
 from tools.analysis.rules.replay_safety import ReplaySafetyRule
 from tools.analysis.rules.schema_drift import SchemaDriftRule
+from tools.analysis.rules.telemetry_oneway import TelemetryOnewayRule
 
 __all__ = [
     "ALL_RULES",
@@ -15,6 +16,7 @@ __all__ = [
     "LockDisciplineRule",
     "ReplaySafetyRule",
     "SchemaDriftRule",
+    "TelemetryOnewayRule",
 ]
 
 #: Instantiated in deterministic order; run_analysis sorts findings anyway.
@@ -24,4 +26,5 @@ ALL_RULES = (
     SchemaDriftRule(),
     KernelParityRule(),
     BudgetClockRule(),
+    TelemetryOnewayRule(),
 )

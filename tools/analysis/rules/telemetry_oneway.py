@@ -1,0 +1,174 @@
+"""Telemetry one-way flow: decision paths write telemetry, never read it.
+
+PR 10's telemetry layer (``repro.core.telemetry``) is allowed to read the
+host-monotonic clock precisely because nothing it records can ever flow back
+into a decision. That non-invasiveness is a *contract*, pinned dynamically
+by ``tests/test_telemetry.py`` (telemetry-on and telemetry-off suggestion
+streams are bit-identical) and enforced statically here:
+
+* ``telemetry-read`` — a module matched by ``config.decision_paths`` may
+  call the write API (``count``/``gauge``/``observe``/``event``/``span``
+  plus the recording gates ``enabled``/``set_enabled``) but must not touch
+  the read API (``get``/``metrics``/``render_text``/``trace_events``/
+  ``export_trace``/``reset``). A counter consulted inside ``suggest_batch``
+  would couple suggestions to observation history — replay divergence by
+  construction. Importing a read-API name directly
+  (``from repro.core.telemetry import metrics``) is flagged at the import.
+* ``telemetry-in-snapshot`` — no ``state_dict``/``snapshot*`` payload may
+  carry telemetry keys: string constants mentioning ``telemetry``,
+  ``span(s)``, or ``trace`` inside those functions are flagged anywhere in
+  the analyzed tree. A restored engine starts with cold counters; replay
+  equivalence is about decisions, not about observations of them.
+
+The exporters that legitimately read the registry (the ``metrics`` RPC verb
+in ``engine_server.py``) carry a line-level suppression explaining why the
+read is export-only.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+import re
+from typing import Dict, Iterable, Set
+
+from tools.analysis.framework import FileInfo, Finding, Project, Rule
+from tools.analysis.rules.replay_safety import _resolve_imports
+
+__all__ = ["TelemetryOnewayRule"]
+
+#: Write API (+ the enabled/set_enabled recording gates): decides whether to
+#: record, never what the engine decides.
+_WRITE_API = {
+    "count", "gauge", "observe", "event", "span", "enabled", "set_enabled",
+    "ENV_FLAG", "enabled_from_env",
+}
+
+#: Functions whose payloads travel with engine state.
+_SNAPSHOT_FUNCS = ("state_dict", "snapshot", "snapshot_job")
+
+#: Words that mark a telemetry key leaking into a state payload.
+_LEAK_TOKENS = frozenset(
+    ("telemetry", "span", "spans", "trace", "traces", "counters", "gauges")
+)
+
+
+def _is_telemetry_module(qual: str) -> bool:
+    return qual == "telemetry" or qual.endswith(".telemetry")
+
+
+class TelemetryOnewayRule(Rule):
+    id = "telemetry-oneway"
+    checks = ("telemetry-read", "telemetry-in-snapshot")
+
+    def run(self, project: Project) -> Iterable[Finding]:
+        globs = tuple(getattr(project.config, "decision_paths", ()))
+        for info in project.files:
+            if info.tree is None:
+                continue
+            if any(fnmatch.fnmatch(info.path, g) for g in globs):
+                yield from self._check_reads(info)
+            yield from self._check_snapshots(info)
+
+    # ------------------------------------------------------- telemetry-read
+
+    def _check_reads(self, info: FileInfo) -> Iterable[Finding]:
+        imports = _resolve_imports(info.tree)
+        aliases = self._telemetry_aliases(imports)
+        yield from self._check_read_imports(info, imports)
+        if not aliases:
+            return
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            if not (
+                isinstance(node.value, ast.Name)
+                and node.value.id in aliases
+            ):
+                continue
+            member = node.attr
+            if member in _WRITE_API or member.startswith("_"):
+                continue
+            line, end = self.span(node)
+            yield Finding(
+                self.id,
+                "telemetry-read",
+                info.path,
+                line,
+                f"`{node.value.id}.{member}` in a decision path: telemetry "
+                "flows one way — decision code may write (count/gauge/"
+                "observe/event/span) but must never read the registry back; "
+                "a consulted counter couples decisions to observation "
+                "history and breaks bit-replay",
+                end_line=end,
+            )
+
+    def _check_read_imports(
+        self, info: FileInfo, imports: Dict[str, str]
+    ) -> Iterable[Finding]:
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.ImportFrom) or not node.module:
+                continue
+            if not _is_telemetry_module(node.module):
+                continue
+            for alias in node.names:
+                if alias.name in _WRITE_API or alias.name.startswith("_"):
+                    continue
+                line, end = self.span(node)
+                yield Finding(
+                    self.id,
+                    "telemetry-read",
+                    info.path,
+                    line,
+                    f"`from {node.module} import {alias.name}` in a "
+                    "decision path imports the telemetry *read* API; "
+                    "decision code may only import write-side names "
+                    f"({', '.join(sorted(_WRITE_API))})",
+                    end_line=end,
+                )
+
+    @staticmethod
+    def _telemetry_aliases(imports: Dict[str, str]) -> Set[str]:
+        return {
+            local for local, qual in imports.items()
+            if _is_telemetry_module(qual)
+        }
+
+    # ------------------------------------------- telemetry-in-snapshot
+
+    def _check_snapshots(self, info: FileInfo) -> Iterable[Finding]:
+        for node in ast.walk(info.tree):
+            if not isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                continue
+            if not any(
+                node.name == f or node.name.startswith(f + "_")
+                for f in _SNAPSHOT_FUNCS
+            ):
+                continue
+            for sub in ast.walk(node):
+                if not (
+                    isinstance(sub, ast.Constant)
+                    and isinstance(sub.value, str)
+                ):
+                    continue
+                if any(c.isspace() for c in sub.value):
+                    continue  # prose (docstrings, messages), not a key
+                words = re.split(r"[^a-z0-9]+", sub.value.lower())
+                hit = next((w for w in words if w in _LEAK_TOKENS), None)
+                if hit is None:
+                    continue
+                line, end = self.span(sub)
+                yield Finding(
+                    self.id,
+                    "telemetry-in-snapshot",
+                    info.path,
+                    line,
+                    f"string {sub.value!r} inside `{node.name}` names a "
+                    f"telemetry token ({hit!r}): counters/spans/traces are "
+                    "observations, not decision state — they must never "
+                    "ride snapshots or checkpoints (a restored engine "
+                    "starts cold)",
+                    end_line=end,
+                )

@@ -1,0 +1,246 @@
+"""Render a telemetry trace (JSONL from ``Telemetry.export_trace``) as a
+per-decision phase breakdown and a job timeline. Stdlib only:
+
+    python -m tools.obs_report trace.jsonl
+    python -m tools.obs_report trace.jsonl --job demo --metrics metrics.json
+
+The trace is a ring of span/event records — ``{"kind", "name", "span_id",
+"parent_id", "t0", "t1", "dur", "thread", "attrs"}`` — emitted by
+``repro.core.telemetry``. This tool only *reads* exported files; it never
+imports the engine, so it can run against traces shipped from another host.
+
+Sections:
+
+* **Phase breakdown** — spans aggregated by name: count, total/mean/min/max
+  duration, and each phase's share of the decision roots
+  (``service.suggest_batch``, falling back to ``suggest.decide`` for traces
+  captured below the service layer).
+* **Per-decision tree** (``--decisions``) — the slowest N decision spans,
+  each with its child phases indented in start order.
+* **Job timeline** — decision roots in start order with their job attribute
+  (timestamps are host-monotonic seconds, zeroed at the first event).
+* **Metrics** (``--metrics``) — counters/gauges from a ``metrics()`` JSON
+  dump, e.g. the body of a ``metrics`` RPC reply.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+#: Span names that delimit one decision, in preference order.
+DECISION_ROOTS = ("service.suggest_batch", "suggest.decide")
+
+
+def load_trace(path: Path) -> List[Dict[str, Any]]:
+    events = []
+    with open(path, "r", encoding="utf-8") as fh:
+        for line_no, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{line_no}: bad trace line: {e}")
+    events.sort(key=lambda e: (e.get("t0", 0.0), e.get("span_id", 0)))
+    return events
+
+
+def decision_root_name(events: List[Dict[str, Any]]) -> Optional[str]:
+    names = {e["name"] for e in events if e.get("kind") == "span"}
+    for root in DECISION_ROOTS:
+        if root in names:
+            return root
+    return None
+
+
+def filter_job(
+    events: List[Dict[str, Any]], job: Optional[str]
+) -> List[Dict[str, Any]]:
+    """Keep only events under decision roots whose ``job`` attr matches (the
+    subtree is resolved through parent edges, since phase spans don't repeat
+    the job attribute)."""
+    if job is None:
+        return events
+    keep: set = set()
+    by_id = {e["span_id"]: e for e in events if "span_id" in e}
+    for e in events:
+        if e.get("attrs", {}).get("job") == job:
+            keep.add(e["span_id"])
+    changed = True
+    while changed:  # propagate membership down the parent edges
+        changed = False
+        for e in events:
+            pid = e.get("parent_id")
+            if pid in keep and e["span_id"] not in keep:
+                keep.add(e["span_id"])
+                changed = True
+    del by_id
+    return [e for e in events if e.get("span_id") in keep]
+
+
+def phase_breakdown(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    spans = [e for e in events if e.get("kind") == "span"]
+    # share is relative to total *top-level* traced time, so nested phases
+    # read as "fraction of everything timed" even in traces that mix
+    # service-routed and directly-driven decisions
+    top_total = sum(
+        e["dur"] for e in spans if e.get("parent_id") is None
+    ) or None
+    agg: Dict[str, Dict[str, Any]] = {}
+    for e in spans:
+        row = agg.setdefault(
+            e["name"],
+            {"name": e["name"], "count": 0, "total": 0.0,
+             "min": float("inf"), "max": 0.0},
+        )
+        row["count"] += 1
+        row["total"] += e["dur"]
+        row["min"] = min(row["min"], e["dur"])
+        row["max"] = max(row["max"], e["dur"])
+    rows = sorted(agg.values(), key=lambda r: -r["total"])
+    for row in rows:
+        row["mean"] = row["total"] / row["count"]
+        row["share"] = (
+            row["total"] / top_total if top_total else None
+        )
+    return rows
+
+
+def render_breakdown(rows: List[Dict[str, Any]]) -> str:
+    if not rows:
+        return "phase breakdown: (no spans in trace)"
+    width = max(len(r["name"]) for r in rows)
+    lines = ["phase breakdown (all durations in seconds):"]
+    header = (
+        f"  {'phase'.ljust(width)}  {'count':>6}  {'total':>10}  "
+        f"{'mean':>10}  {'min':>10}  {'max':>10}  {'share':>6}"
+    )
+    lines.append(header)
+    for r in rows:
+        share = f"{100.0 * r['share']:5.1f}%" if r["share"] is not None else "     -"
+        lines.append(
+            f"  {r['name'].ljust(width)}  {r['count']:>6}  {r['total']:>10.6f}  "
+            f"{r['mean']:>10.6f}  {r['min']:>10.6f}  {r['max']:>10.6f}  {share}"
+        )
+    return "\n".join(lines)
+
+
+def render_decisions(events: List[Dict[str, Any]], top: int) -> str:
+    """The slowest ``top`` decision spans, each with its child phases."""
+    root = decision_root_name(events)
+    if root is None:
+        return "decisions: (no decision-root spans in trace)"
+    spans = [e for e in events if e.get("kind") == "span"]
+    children: Dict[Any, List[Dict[str, Any]]] = {}
+    for e in spans:
+        children.setdefault(e.get("parent_id"), []).append(e)
+    roots = sorted(
+        (e for e in spans if e["name"] == root),
+        key=lambda e: -e["dur"],
+    )[:top]
+    lines = [f"slowest {len(roots)} decision(s) (root span: {root}):"]
+
+    def walk(span: Dict[str, Any], depth: int) -> None:
+        attrs = span.get("attrs") or {}
+        attr_s = " ".join(f"{k}={v}" for k, v in sorted(attrs.items()))
+        lines.append(
+            f"  {'  ' * depth}{span['name']}  {span['dur']:.6f}s"
+            + (f"  [{attr_s}]" if attr_s else "")
+        )
+        for child in sorted(
+            children.get(span["span_id"], []), key=lambda e: e["t0"]
+        ):
+            walk(child, depth + 1)
+
+    for r in roots:
+        walk(r, 0)
+    return "\n".join(lines)
+
+
+def render_timeline(events: List[Dict[str, Any]]) -> str:
+    root = decision_root_name(events)
+    rows = [
+        e for e in events
+        if e.get("kind") == "span" and (root is None or e["name"] == root)
+    ]
+    if not rows:
+        return "job timeline: (no decision spans in trace)"
+    t_zero = min(e["t0"] for e in events)
+    lines = ["job timeline (seconds since first trace event):"]
+    for e in rows:
+        attrs = e.get("attrs") or {}
+        job = attrs.get("job", "-")
+        extra = " ".join(
+            f"{k}={v}" for k, v in sorted(attrs.items()) if k != "job"
+        )
+        lines.append(
+            f"  [{e['t0'] - t_zero:10.6f} .. {e['t1'] - t_zero:10.6f}] "
+            f"job={job} {e['name']} dur={e['dur']:.6f}s"
+            + (f" {extra}" if extra else "")
+        )
+    return "\n".join(lines)
+
+
+def render_metrics(path: Path) -> str:
+    dump = json.loads(path.read_text(encoding="utf-8"))
+    # accept either a bare metrics() dump or a metrics-RPC reply body
+    metrics = dump.get("metrics", dump)
+    lines = ["metrics:"]
+    for k, v in sorted(metrics.get("counters", {}).items()):
+        lines.append(f"  counter  {k} = {v}")
+    for k, v in sorted(metrics.get("gauges", {}).items()):
+        lines.append(f"  gauge    {k} = {v:g}")
+    for k, h in sorted(metrics.get("histograms", {}).items()):
+        mean = h["sum"] / h["count"] if h["count"] else 0.0
+        lines.append(
+            f"  hist     {k}: n={h['count']} mean={mean:.6g} "
+            f"min={h['min']:.6g} max={h['max']:.6g}"
+        )
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="tools.obs_report",
+        description="Render a telemetry trace JSONL as phase breakdown "
+        "and job timeline.",
+    )
+    parser.add_argument("trace", type=Path, help="trace JSONL path")
+    parser.add_argument(
+        "--job", default=None,
+        help="restrict to decision spans for this job name",
+    )
+    parser.add_argument(
+        "--decisions", type=int, default=3, metavar="N",
+        help="show the N slowest decisions as span trees (0 to skip)",
+    )
+    parser.add_argument(
+        "--metrics", type=Path, default=None,
+        help="also render a metrics() JSON dump (or metrics-RPC reply body)",
+    )
+    args = parser.parse_args(argv)
+
+    events = filter_job(load_trace(args.trace), args.job)
+    if not events:
+        print("(empty trace)" if args.job is None
+              else f"(no events for job {args.job!r})")
+        return 1
+    print(render_breakdown(phase_breakdown(events)))
+    print()
+    if args.decisions > 0:
+        print(render_decisions(events, args.decisions))
+        print()
+    print(render_timeline(events))
+    if args.metrics is not None:
+        print()
+        print(render_metrics(args.metrics))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
